@@ -1,0 +1,163 @@
+"""DKS benchmarks, one per paper table/figure (Sec. 7.2).
+
+Scaled to this CPU container via the *-cpu synthetic datasets; the same
+code paths drive the full-scale graphs on a pod.
+
+  table1   — % time per DKS component, K ∈ {1,2,5,10}      (paper Table 1)
+  fig10    — per-query normalized time vs vanilla BFS      (paper Fig. 10)
+  fig11    — deep-message counts vs K                      (paper Fig. 11)
+  fig12    — SPA-ratio under a message budget              (paper Fig. 12)
+  fig13    — % nodes explored                              (paper Fig. 13)
+  fig14    — messages as % of |E|                          (paper Fig. 14)
+  fig15    — parallel efficiency proxy (edge-cut + balance) (paper Fig. 15)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Bench, load, masks_for
+from repro import INF
+from repro.core.baselines import vanilla_parallel_bfs
+from repro.core.dks import DKSConfig, run_dks, run_dks_instrumented
+from repro.core.spa import spa_cover_dp, spa_ratio
+from repro.graph.partition import edge_cut, hash_partition
+
+
+def _run(bench: Bench, query, k, **kw):
+    masks = masks_for(bench, query)
+    cfg = DKSConfig(m=len(query), k=k, max_supersteps=32, **kw)
+    t0 = time.perf_counter()
+    state = jax.block_until_ready(run_dks(bench.dg, jnp.asarray(masks), cfg))
+    return state, time.perf_counter() - t0
+
+
+def table1_phase_breakdown(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
+                           n_queries=3):
+    """Percentage of time per component, by K."""
+    bench = load(dataset)
+    rows = []
+    for k in ks:
+        agg = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0,
+               "send_agg": 0.0}
+        for q in bench.queries[:n_queries]:
+            masks = masks_for(bench, q)
+            cfg = DKSConfig(m=len(q), k=k, max_supersteps=24)
+            _, info = run_dks_instrumented(bench.dg, jnp.asarray(masks), cfg)
+            for key in agg:
+                agg[key] += info["timings"][key]
+        total = sum(agg.values()) or 1.0
+        rows.append({"K": k, **{key: round(100 * v / total, 1)
+                                for key, v in agg.items()}})
+    return rows
+
+
+def fig10_time_vs_queries(dataset="sec-rdfabout-cpu", k=1):
+    bench = load(dataset)
+    # Vanilla parallel BFS reference (whole-graph traversal).
+    src0 = jnp.zeros(bench.dg.v_pad, bool).at[0].set(True)
+    t0 = time.perf_counter()
+    jax.block_until_ready(vanilla_parallel_bfs(bench.dg, src0))
+    bfs_time = time.perf_counter() - t0
+    rows = []
+    for q in bench.queries:
+        state, dt = _run(bench, q, k)
+        rows.append({
+            "m": len(q),
+            "kw_nodes": int(sum(bench.index.df(t) for t in q)),
+            "time_s": round(dt, 3),
+            "vs_bfs": round(dt / bfs_time, 2),
+            "supersteps": int(state.step),
+            "best": float(state.topk_w[0]),
+        })
+    return {"bfs_time_s": round(bfs_time, 3), "queries": rows}
+
+
+def fig11_deep_messages(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
+                        n_queries=5):
+    bench = load(dataset)
+    rows = []
+    for k in ks:
+        deep = []
+        for q in bench.queries[:n_queries]:
+            state, _ = _run(bench, q, k)
+            deep.append(float(state.msgs_deep))
+        rows.append({"K": k, "mean_deep_msgs": float(np.mean(deep)),
+                     "max_deep_msgs": float(np.max(deep))})
+    return rows
+
+
+def fig12_spa_ratio(dataset="sec-rdfabout-cpu", budget=50_000.0, k=1,
+                    n_queries=8):
+    """Force early stop via the message budget; report SPA-ratio (=0 when
+    the exit criterion was satisfied, per the paper's convention)."""
+    bench = load(dataset)
+    rows = []
+    for q in bench.queries[:n_queries]:
+        state, _ = _run(bench, q, k, message_budget=budget)
+        if bool(state.budget_hit):
+            shat = state.s_front + bench.dg.e_min()
+            spa = spa_cover_dp(shat, len(q))
+            r = float(spa_ratio(state.topk_w[0], spa))
+        else:
+            r = 0.0
+        rows.append({"m": len(q), "budget_hit": bool(state.budget_hit),
+                     "spa_ratio": round(r, 3) if np.isfinite(r) else -1.0,
+                     "best": float(state.topk_w[0])})
+    return rows
+
+
+def fig13_explored(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10)):
+    bench = load(dataset)
+    rows = []
+    for q in bench.queries:
+        fr = []
+        for k in ks:
+            state, _ = _run(bench, q, k)
+            fr.append(float(jnp.mean(state.visited[: bench.g.n_nodes])))
+        rows.append({"m": len(q), "explored_pct": round(100 * np.mean(fr), 1)})
+    return rows
+
+
+def fig14_messages(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
+                   n_queries=6):
+    bench = load(dataset)
+    e = bench.dg.n_edges
+    rows = []
+    for k in ks:
+        fracs = []
+        for q in bench.queries[:n_queries]:
+            state, _ = _run(bench, q, k)
+            fracs.append((float(state.msgs_bfs) + float(state.msgs_deep)) / e)
+        rows.append({"K": k, "msgs_pct_of_E": round(100 * np.mean(fracs), 1)})
+    return rows
+
+
+def fig15_parallel_efficiency(dataset="sec-rdfabout-cpu",
+                              worker_counts=(1, 2, 4, 8, 16, 35)):
+    """Structural parallel-efficiency model (single-core container): for
+    each worker count, hash-partition the graph and report edge-cut (comm
+    volume fraction) and max/mean shard load (straggler bound).  Predicted
+    speedup = workers / (load_imbalance + cut * comm_factor) — the same
+    saturation shape as paper Fig. 15."""
+    bench = load(dataset)
+    g = bench.g
+    deg = np.diff(g.indptr)
+    rows = []
+    for w in worker_counts:
+        part = hash_partition(g.n_nodes, w, seed=1)
+        cut = edge_cut(g, part)
+        loads = np.zeros(w)
+        np.add.at(loads, part.shard_of[part.inv_perm[np.arange(g.n_nodes)]],
+                  deg)
+        imbalance = float(loads.max() / max(loads.mean(), 1e-9))
+        comm_factor = 1.5  # per-message network cost vs local compute
+        speedup = w / (imbalance + cut * comm_factor)
+        rows.append({"workers": w, "edge_cut": round(cut, 3),
+                     "load_imbalance": round(imbalance, 3),
+                     "predicted_speedup": round(speedup, 2)})
+    return rows

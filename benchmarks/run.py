@@ -1,0 +1,71 @@
+"""Benchmark harness entry: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (Sec. 7.2), plus kernel micro-benches.
+Prints ``name,us_per_call,derived`` CSV rows and writes the full structured
+results to experiments/bench_results.json.
+
+``--full`` runs the complete query suite (slower); default is a CPU-sized
+subset exercising every code path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "experiments"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import dks_benchmarks as dks
+    from benchmarks import kernel_benchmarks as kb
+
+    results = {}
+    rows = []
+
+    def record(name, fn, *fargs, **fkw):
+        if args.only and args.only not in name:
+            return
+        t0 = time.perf_counter()
+        out = fn(*fargs, **fkw)
+        dt = time.perf_counter() - t0
+        results[name] = out
+        rows.append((name, round(dt * 1e6, 1), "paper-figure"))
+        print(f"# --- {name} ({dt:.1f}s) ---")
+        print(json.dumps(out, indent=1)[:2000])
+
+    record("table1_phase_breakdown", dks.table1_phase_breakdown,
+           n_queries=3 if not args.full else 10)
+    record("fig10_time_vs_queries", dks.fig10_time_vs_queries)
+    record("fig11_deep_messages", dks.fig11_deep_messages,
+           n_queries=3 if not args.full else 10)
+    record("fig12_spa_ratio", dks.fig12_spa_ratio,
+           n_queries=4 if not args.full else 12)
+    record("fig13_explored", dks.fig13_explored,
+           ks=(1, 2) if not args.full else (1, 2, 5, 10))
+    record("fig14_messages", dks.fig14_messages,
+           n_queries=3 if not args.full else 10)
+    record("fig15_parallel_efficiency", dks.fig15_parallel_efficiency)
+
+    print("\nname,us_per_call,derived")
+    for bench_fn in (kb.bench_subset_combine, kb.bench_segment_topk,
+                     kb.bench_attention):
+        if args.only and args.only not in bench_fn.__name__:
+            continue
+        for r in bench_fn():
+            rows.append((r["name"], r["us_per_call"], r["derived"]))
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+    OUT.mkdir(exist_ok=True)
+    (OUT / "bench_results.json").write_text(json.dumps(results, indent=1))
+    print(f"\nwrote {OUT / 'bench_results.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Render the §Dry-run and §Roofline markdown tables from the dry-run JSONs.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/tables.md
+"""
+
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+
+
+def load_dir(d: Path) -> dict:
+    out = {}
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        out[r["cell"]] = r
+    return out
+
+
+def roofline_frac(r: dict) -> float:
+    rl = r["roofline"]
+    bound = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+    ideal = rl["model_flops"] / rl["chips"] / 197e12
+    return ideal / bound if bound > 0 else 0.0
+
+
+def table(cur: dict, base: dict | None, mesh: str) -> str:
+    rows = []
+    for cell, r in cur.items():
+        rl = r["roofline"]
+        frac = roofline_frac(r)
+        base_frac = roofline_frac(base[cell]) if base and cell in base else None
+        mem = r["memory"]["total_nonaliased"] / 2**30
+        fits = "yes" if mem <= 16.0 else "NO"
+        rows.append((cell, rl["bottleneck"], rl["t_compute"], rl["t_memory"],
+                     rl["t_collective"], frac, base_frac, mem, fits,
+                     100 * rl["useful_flops_frac"]))
+    rows.sort(key=lambda x: x[0])
+    lines = [
+        f"### Mesh `{mesh}`",
+        "",
+        "| cell | bottleneck | t_compute (s) | t_memory (s) | t_collective"
+        " (s) | roofline frac | baseline frac | HBM GiB/chip | fits 16G |"
+        " useful FLOPs |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        bf = f"{100*r[6]:.2f}%" if r[6] is not None else "—"
+        lines.append(
+            f"| {r[0]} | {r[1]} | {r[2]:.3e} | {r[3]:.3e} | {r[4]:.3e} |"
+            f" {100*r[5]:.2f}% | {bf} | {r[7]:.2f} | {r[8]} |"
+            f" {min(r[9], 999):.0f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    base_s = load_dir(HERE / "dryrun_baseline" / "pod16x16")
+    base_m = load_dir(HERE / "dryrun_baseline" / "multipod2x16x16")
+    cur_s = load_dir(HERE / "dryrun" / "pod16x16")
+    cur_m = load_dir(HERE / "dryrun" / "multipod2x16x16")
+    print("## Auto-generated roofline tables (per-chip, TPU v5e constants)\n")
+    print("`roofline frac` = analytic MODEL_FLOPS time / dominant roofline"
+          " term; `baseline frac` = same for the pre-hillclimb build.\n")
+    print(table(cur_s, base_s, "pod16x16 (single pod, 256 chips)"))
+    print()
+    print(table(cur_m, base_m, "multipod2x16x16 (2 pods, 512 chips)"))
+    print()
+    # Aggregates
+    for name, cur, base in (("single-pod", cur_s, base_s),
+                            ("multi-pod", cur_m, base_m)):
+        fr = [roofline_frac(r) for r in cur.values()]
+        common = [c for c in cur if c in base]
+        gains = [roofline_frac(cur[c]) / max(roofline_frac(base[c]), 1e-12)
+                 for c in common if roofline_frac(base[c]) > 0]
+        fits = sum(1 for r in cur.values()
+                   if r["memory"]["total_nonaliased"] / 2**30 <= 16.0)
+        print(f"- **{name}**: {len(cur)} cells; median roofline frac "
+              f"{100*sorted(fr)[len(fr)//2]:.2f}%; "
+              f"{fits}/{len(cur)} fit 16 GiB HBM; median gain vs baseline "
+              f"{sorted(gains)[len(gains)//2]:.2f}x over {len(gains)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: Distributed Keyword Search (DKS) — relationship queries on large
+graphs using the Pregel model, built as a production JAX/TPU framework.
+
+Paper: "Relationship Queries on Large graphs using Pregel"
+       (Agarwal, Ramanath, Shroff; 2016).
+"""
+
+__version__ = "0.1.0"
+
+INF = 1e9  # finite +infinity sentinel: keeps the min-plus algebra total

@@ -1,0 +1,3 @@
+from repro.analysis.hlo import HLOSummary, analyze_hlo  # noqa: F401
+from repro.analysis.roofline import RooflineTerms  # noqa: F401
+from repro.analysis.roofline import roofline as build_roofline  # noqa: F401

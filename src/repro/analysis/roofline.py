@@ -1,0 +1,152 @@
+"""Roofline terms for TPU v5e (target hardware; container is CPU-only).
+
+  t_compute    = FLOPs / (chips * 197 TFLOP/s bf16)
+  t_memory     = HBM bytes / (chips * 819 GB/s)
+  t_collective = wire bytes / (chips * links * 50 GB/s)
+
+FLOPs / bytes / collective bytes come from the trip-count-corrected HLO
+analysis (hlo.py) of the compiled dry-run; MODEL_FLOPS is the analytic
+useful-work count (6·N·D dense, 6·N_active·D MoE, closed forms for
+GNN/recsys), so MODEL_FLOPS / HLO_FLOPs exposes padding/remat waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.hlo import HLOSummary
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+# v5e 16x16 pod: 2D torus, 4 links per chip; pod axis uses DCI but we apply
+# the ICI number as the conservative bound.
+LINKS_PER_CHIP = 4
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    useful_flops_frac: float
+    dynamic_loops: int
+
+    def as_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    arch: str, shape: str, mesh_name: str, chips: int,
+    summary: HLOSummary, model_flops: float,
+    per_device: bool = True,
+) -> RooflineTerms:
+    """Build the three-term roofline.
+
+    ``summary`` is per-device (post-SPMD HLO is the per-device program), so
+    flops/bytes are divided by nothing further; model_flops is global and is
+    divided by chips.
+    """
+    flops = summary.dot_flops
+    # Dot-free programs (DKS min-plus, segment-op GNN aggregation) do their
+    # compute on the VPU where it is invisible to dot counting: fall back to
+    # the analytic model flops for the compute term.
+    if flops < 0.01 * model_flops / chips:
+        flops = model_flops / chips
+    nbytes = summary.traffic_bytes
+    coll = summary.total_collective_bytes()
+    t_c = flops / PEAK_FLOPS
+    t_m = nbytes / HBM_BW
+    t_x = coll / (LINKS_PER_CHIP * ICI_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf_per_chip = model_flops / chips
+    frac = mf_per_chip / flops if flops > 0 else 0.0
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, collective_bytes=coll,
+        model_flops=model_flops,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck, useful_flops_frac=frac,
+        dynamic_loops=summary.dynamic_loops,
+    )
+
+
+def model_flops_lm(cfg, shape, built=None) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) + attention flops.
+
+    For decode shapes D = new tokens (=batch) but attention still reads the
+    whole KV cache; we count matmul work: 6·N_active·B + attn 2·2·B·S·H·dh.
+    """
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        attn = (12 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+                * shape.seq_len * shape.seq_len * shape.global_batch) // 2
+        return 6.0 * n_act * tokens + attn
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        attn = (4 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+                * shape.seq_len * shape.seq_len * shape.global_batch) // 2
+        return 2.0 * n_act * tokens + attn
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    attn = (4 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+            * shape.seq_len * shape.global_batch)
+    return 2.0 * n_act * tokens + attn
+
+
+def model_flops_gnn(cfg, shape, n_nodes: int, n_edges: int) -> float:
+    """Closed-form useful flops per family (fwd+bwd = 3x fwd for training)."""
+    d = cfg.d_hidden
+    d_in = max(shape.d_feat, 1)
+    if cfg.family == "gat":
+        per_layer = (2 * n_nodes * d_in * d * cfg.n_heads
+                     + 6 * n_edges * d * cfg.n_heads)
+        fwd = cfg.n_layers * per_layer
+    elif cfg.family == "gin":
+        fwd = cfg.n_layers * (2 * n_edges * d + 4 * n_nodes * d * d)
+    elif cfg.family == "pna":
+        n_agg = len(cfg.aggregators) * len(cfg.scalers)
+        fwd = cfg.n_layers * (2 * n_nodes * d * d
+                              + 4 * n_edges * d
+                              + 2 * n_nodes * (n_agg + 1) * d * d)
+    else:  # schnet
+        fwd = cfg.n_layers * (2 * n_edges * (cfg.rbf * d + d * d + d)
+                              + 6 * n_nodes * d * d)
+    return 3.0 * fwd
+
+
+def model_flops_recsys(cfg, shape) -> float:
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = cfg.n_cross_layers * 2 * d0 * d0
+    dims = (d0,) + cfg.mlp_dims
+    deep = sum(2 * dims[i] * dims[i + 1] for i in range(len(cfg.mlp_dims)))
+    per_ex = cross + deep + 2 * (d0 + cfg.mlp_dims[-1])
+    if shape.kind == "train":
+        return 3.0 * shape.batch * per_ex
+    if shape.kind == "retrieval":
+        cand = shape.n_candidates
+        return (shape.batch * (deep)
+                + 2.0 * cand * cfg.embed_dim * cfg.mlp_dims[-1]
+                + 2.0 * shape.batch * cand * cfg.mlp_dims[-1])
+    return 1.0 * shape.batch * per_ex
+
+
+def model_flops_dks(v: int, e: int, m: int, k: int) -> float:
+    """Per-superstep useful work: relax (E·2^m·K adds + segment mins) +
+    combine (V · pairs · K² min-plus)."""
+    n_sets = 1 << m
+    pairs = (3 ** m + 1) // 2 - 2 ** m
+    relax = 2.0 * e * n_sets * k
+    combine = 2.0 * v * pairs * k * k
+    return relax + combine

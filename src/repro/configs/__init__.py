@@ -1,0 +1,61 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures (5 LM, 4 GNN, 1 recsys), each paired with its
+family's shape set, plus the paper's own DKS benchmark configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.configs import (
+    chatglm3_6b, command_r_plus_104b, dbrx_132b, dcn_v2, dks_paper,
+    gat_cora, gin_tu, granite_moe_3b_a800m, pna, qwen15_4b, schnet,
+)
+from repro.configs.base import (
+    GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES, GNNConfig, GNNShape, LMConfig,
+    LMShape, RecsysConfig, RecsysShape,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    family: str          # "lm" | "gnn" | "recsys"
+    config: Any
+    shapes: tuple
+
+
+ARCHS: dict[str, ArchEntry] = {
+    "qwen1.5-4b": ArchEntry("qwen1.5-4b", "lm", qwen15_4b.CONFIG, LM_SHAPES),
+    "chatglm3-6b": ArchEntry("chatglm3-6b", "lm", chatglm3_6b.CONFIG, LM_SHAPES),
+    "command-r-plus-104b": ArchEntry(
+        "command-r-plus-104b", "lm", command_r_plus_104b.CONFIG, LM_SHAPES),
+    "dbrx-132b": ArchEntry("dbrx-132b", "lm", dbrx_132b.CONFIG, LM_SHAPES),
+    "granite-moe-3b-a800m": ArchEntry(
+        "granite-moe-3b-a800m", "lm", granite_moe_3b_a800m.CONFIG, LM_SHAPES),
+    "gat-cora": ArchEntry("gat-cora", "gnn", gat_cora.CONFIG, GNN_SHAPES),
+    "schnet": ArchEntry("schnet", "gnn", schnet.CONFIG, GNN_SHAPES),
+    "gin-tu": ArchEntry("gin-tu", "gnn", gin_tu.CONFIG, GNN_SHAPES),
+    "pna": ArchEntry("pna", "gnn", pna.CONFIG, GNN_SHAPES),
+    "dcn-v2": ArchEntry("dcn-v2", "recsys", dcn_v2.CONFIG, RECSYS_SHAPES),
+}
+
+DKS_CONFIGS = {
+    "sec-rdfabout": dks_paper.SEC_RDFABOUT,
+    "bluk-bnb": dks_paper.BLUK_BNB,
+    "sec-rdfabout-cpu": dks_paper.SEC_RDFABOUT_CPU,
+    "bluk-bnb-cpu": dks_paper.BLUK_BNB_CPU,
+}
+
+
+def get_arch(arch_id: str) -> ArchEntry:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every assigned (arch, shape) pair — 40 cells."""
+    return [(a.arch_id, s.name) for a in ARCHS.values() for s in a.shapes]

@@ -1,0 +1,185 @@
+"""Config dataclasses for the assigned architectures and input shapes."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qkv_bias: bool = False
+    rotary_pct: float = 1.0
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    moe: MoESpec | None = None
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    remat: bool = True
+
+    def scaled(self, **kw) -> "LMConfig":
+        return dataclasses.replace(self, **kw)
+
+    def smoke(self) -> "LMConfig":
+        """Reduced config: same family/topology, tiny dims (CPU smoke tests)."""
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64,
+            )
+        return dataclasses.replace(
+            self, n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            d_ff=128, vocab=256, head_dim=16, moe=moe,
+        )
+
+    def param_count_analytic(self) -> int:
+        """6·N·D MODEL_FLOPS uses this N (embeddings included once)."""
+        d, l = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.head_dim * 2  # q + o
+        attn += d * self.n_kv_heads * self.head_dim * 2  # k + v
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+        if self.moe is not None:
+            ffn = 3 * d * self.moe.d_ff_expert * self.moe.n_experts
+            ffn += d * self.moe.n_experts  # router
+        else:
+            ffn = 3 * d * self.d_ff
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ffn + 2 * d) + embed + d
+
+    def active_param_count(self) -> int:
+        if self.moe is None:
+            return self.param_count_analytic()
+        d, l = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.head_dim * 2
+        attn += d * self.n_kv_heads * self.head_dim * 2
+        ffn = 3 * d * self.moe.d_ff_expert * self.moe.top_k + d * self.moe.n_experts
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ffn + 2 * d) + embed + d
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES = (
+    LMShape("train_4k", "train", 4096, 256),
+    LMShape("prefill_32k", "prefill", 32768, 32),
+    LMShape("decode_32k", "decode", 32768, 128),
+    LMShape("long_500k", "decode", 524288, 1),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    family: str               # "gat" | "schnet" | "gin" | "pna"
+    n_layers: int
+    d_hidden: int
+    n_heads: int = 1
+    aggregators: tuple[str, ...] = ("sum",)
+    scalers: tuple[str, ...] = ("identity",)
+    rbf: int = 0              # schnet radial basis size
+    cutoff: float = 0.0
+    learnable_eps: bool = False
+    n_classes: int = 16
+    param_dtype: str = "float32"
+    mp_dtype: str = "float32"   # message-passing dtype: "bfloat16" halves
+    # edge-gather traffic/wire bytes (production cells; see §Perf)
+
+    def smoke(self) -> "GNNConfig":
+        return dataclasses.replace(self, d_hidden=min(self.d_hidden, 16),
+                                   rbf=min(self.rbf, 16) if self.rbf else 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNShape:
+    name: str
+    kind: str                # "full_graph" | "minibatch" | "molecule"
+    n_nodes: int
+    n_edges: int
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: tuple[int, ...] = ()
+    batch_graphs: int = 0
+
+
+GNN_SHAPES = (
+    GNNShape("full_graph_sm", "full_graph", 2_708, 10_556, d_feat=1_433),
+    GNNShape("minibatch_lg", "minibatch", 232_965, 114_615_892,
+             d_feat=602, batch_nodes=1_024, fanout=(15, 10)),
+    GNNShape("ogb_products", "full_graph", 2_449_029, 61_859_140, d_feat=100),
+    GNNShape("molecule", "molecule", 30, 64, d_feat=16, batch_graphs=128),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    n_dense: int
+    n_sparse: int
+    embed_dim: int
+    n_cross_layers: int
+    mlp_dims: tuple[int, ...]
+    vocab_sizes: tuple[int, ...]  # one per sparse field
+    param_dtype: str = "float32"
+
+    def smoke(self) -> "RecsysConfig":
+        return dataclasses.replace(
+            self, embed_dim=8, mlp_dims=(32, 16),
+            vocab_sizes=tuple(min(v, 100) for v in self.vocab_sizes),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysShape:
+    name: str
+    kind: str                 # "train" | "serve" | "retrieval"
+    batch: int
+    n_candidates: int = 0
+
+
+RECSYS_SHAPES = (
+    RecsysShape("train_batch", "train", 65_536),
+    RecsysShape("serve_p99", "serve", 512),
+    RecsysShape("serve_bulk", "serve", 262_144),
+    RecsysShape("retrieval_cand", "retrieval", 1, n_candidates=1_000_000),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DKSBenchConfig:
+    """The paper's own experiment configuration (synthetic LOD stand-ins)."""
+
+    name: str
+    n_nodes: int
+    n_edges: int
+    vocab: int
+    tau: int = 1001
+    seed: int = 7

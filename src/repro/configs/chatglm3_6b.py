@@ -1,0 +1,16 @@
+"""chatglm3-6b [dense] — 28L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=65024, RoPE 2d (partial rotary), GQA. [arXiv:2406.12793; hf]"""
+
+from repro.configs.base import LMConfig
+
+CONFIG = LMConfig(
+    name="chatglm3-6b",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab=65024,
+    head_dim=128,
+    rotary_pct=0.5,  # ChatGLM 2d-RoPE: half the head dims rotate
+)

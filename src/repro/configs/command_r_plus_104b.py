@@ -1,0 +1,15 @@
+"""command-r-plus-104b [dense] — 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000, no-bias. [hf:CohereForAI/c4ai-command-r-v01]"""
+
+from repro.configs.base import LMConfig
+
+CONFIG = LMConfig(
+    name="command-r-plus-104b",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab=256000,
+    head_dim=128,
+)

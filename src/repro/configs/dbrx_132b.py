@@ -1,0 +1,16 @@
+"""dbrx-132b [moe] — 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16 experts top-4 fine-grained. [hf:databricks/dbrx-base]"""
+
+from repro.configs.base import LMConfig, MoESpec
+
+CONFIG = LMConfig(
+    name="dbrx-132b",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=10752,
+    vocab=100352,
+    head_dim=128,
+    moe=MoESpec(n_experts=16, top_k=4, d_ff_expert=10752),
+)

@@ -1,0 +1,27 @@
+"""dcn-v2 [recsys] — 13 dense + 26 sparse fields, embed_dim=16,
+3 cross layers, MLP 1024-1024-512, cross interaction. [arXiv:2008.13535]
+
+Vocab sizes follow the Criteo-1TB hashed regime: a few huge fields
+(10^7), a tail of small ones.
+"""
+
+from repro.configs.base import RecsysConfig
+
+_VOCABS = (
+    10_000_000, 10_000_000, 5_000_000,           # 3 huge id-like fields
+    1_000_000, 1_000_000, 1_000_000, 500_000, 500_000,   # 5 large
+    100_000, 100_000, 100_000, 50_000, 50_000, 50_000, 10_000, 10_000,  # mid
+    10_000, 5_000, 5_000, 1_000, 1_000, 1_000, 500, 100, 100, 50,       # small
+)
+
+CONFIG = RecsysConfig(
+    name="dcn-v2",
+    n_dense=13,
+    n_sparse=26,
+    embed_dim=16,
+    n_cross_layers=3,
+    mlp_dims=(1024, 1024, 512),
+    vocab_sizes=_VOCABS,
+)
+
+assert len(_VOCABS) == CONFIG.n_sparse

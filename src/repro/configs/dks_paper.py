@@ -1,0 +1,21 @@
+"""The paper's own experiment configurations (Sec. 7.1).
+
+The two LOD datasets are not redistributable; these are synthetic
+structurally-similar stand-ins (power-law degree, Zipf labels) at the
+paper's node/edge scales for the dry-run, plus CPU-scaled variants the
+benchmarks actually execute.
+"""
+
+from repro.configs.base import DKSBenchConfig
+
+# Paper-scale (dry-run / roofline only — ShapeDtypeStructs, no allocation).
+SEC_RDFABOUT = DKSBenchConfig(
+    name="sec-rdfabout", n_nodes=460_451, n_edges=500_384, vocab=50_000)
+BLUK_BNB = DKSBenchConfig(
+    name="bluk-bnb", n_nodes=16_100_000, n_edges=46_600_000, vocab=500_000)
+
+# CPU-scaled stand-ins (benchmarks execute these end-to-end).
+SEC_RDFABOUT_CPU = DKSBenchConfig(
+    name="sec-rdfabout-cpu", n_nodes=46_000, n_edges=50_000, vocab=5_000)
+BLUK_BNB_CPU = DKSBenchConfig(
+    name="bluk-bnb-cpu", n_nodes=80_000, n_edges=230_000, vocab=8_000)

@@ -1,0 +1,14 @@
+"""gat-cora [gnn] — 2 layers d_hidden=8 8 heads, attention aggregator.
+[arXiv:1710.10903]"""
+
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="gat-cora",
+    family="gat",
+    n_layers=2,
+    d_hidden=8,
+    n_heads=8,
+    aggregators=("attn",),
+    n_classes=7,
+)

@@ -1,0 +1,14 @@
+"""gin-tu [gnn] — 5 layers d_hidden=64 sum aggregator, learnable eps.
+[arXiv:1810.00826]"""
+
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="gin-tu",
+    family="gin",
+    n_layers=5,
+    d_hidden=64,
+    aggregators=("sum",),
+    learnable_eps=True,
+    n_classes=2,
+)

@@ -1,0 +1,16 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8. [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+
+from repro.configs.base import LMConfig, MoESpec
+
+CONFIG = LMConfig(
+    name="granite-moe-3b-a800m",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    head_dim=64,
+    moe=MoESpec(n_experts=40, top_k=8, d_ff_expert=512),
+)

@@ -1,0 +1,14 @@
+"""pna [gnn] — 4 layers d_hidden=75, aggregators mean-max-min-std,
+scalers identity-amplification-attenuation. [arXiv:2004.05718]"""
+
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="pna",
+    family="pna",
+    n_layers=4,
+    d_hidden=75,
+    aggregators=("mean", "max", "min", "std"),
+    scalers=("identity", "amplification", "attenuation"),
+    n_classes=16,
+)

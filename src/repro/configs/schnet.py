@@ -1,0 +1,13 @@
+"""schnet [gnn] — 3 interactions d_hidden=64 rbf=300 cutoff=10.
+[arXiv:1706.08566]"""
+
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="schnet",
+    family="schnet",
+    n_layers=3,          # n_interactions
+    d_hidden=64,
+    rbf=300,
+    cutoff=10.0,
+)

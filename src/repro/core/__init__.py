@@ -1,0 +1,20 @@
+"""The paper's primary contribution: DKS — distributed keyword search
+(top-K Group Steiner Trees) in the Pregel model, as dense JAX tensor algebra.
+
+Public API:
+  DKSConfig, DKSState, run_dks, run_dks_instrumented  — the engine
+  extract_answers                                      — aggregator-side trees
+  dreyfus_wagner, brute_force_topk                     — exact oracles (tests)
+"""
+
+from repro.core.dks import (  # noqa: F401
+    DKSConfig,
+    DKSState,
+    init_state,
+    run_dks,
+    run_dks_batched,
+    run_dks_instrumented,
+    superstep,
+)
+from repro.core.reconstruct import AnswerTree, extract_answers  # noqa: F401
+from repro.core.steiner_ref import brute_force_topk, dreyfus_wagner  # noqa: F401

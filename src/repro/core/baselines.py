@@ -1,0 +1,51 @@
+"""Baselines the paper compares against.
+
+- :func:`vanilla_parallel_bfs` — plain frontier BFS touching the whole
+  graph (the paper's Sec. 7.2 reference point: DKS should stay within a
+  small factor of it while doing exponentially more per-node work).
+- :func:`dks_no_early_exit` — DKS with the exit criterion disabled
+  (ablation for the "effectiveness of early exit" experiments).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structure import DeviceGraph
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def vanilla_parallel_bfs(graph: DeviceGraph, sources: jax.Array,
+                         max_steps: int = 64):
+    """Frontier BFS from source mask; returns (hops[V], n_supersteps)."""
+    v = graph.v_pad
+    dist = jnp.where(sources & graph.node_valid, 0, jnp.int32(2**30))
+
+    def cond(carry):
+        dist, frontier, step = carry
+        return jnp.any(frontier) & (step < max_steps)
+
+    def body(carry):
+        dist, frontier, step = carry
+        send = frontier[graph.src] & graph.valid
+        cand = jnp.where(send, dist[graph.src] + 1, 2**30)
+        new = jax.ops.segment_min(cand, graph.dst, num_segments=v)
+        improved = new < dist
+        dist = jnp.minimum(dist, new)
+        return dist, improved & graph.node_valid, step + 1
+
+    frontier = sources & graph.node_valid
+    dist, _, steps = jax.lax.while_loop(cond, body,
+                                        (dist, frontier, jnp.int32(0)))
+    return dist, steps
+
+
+def dks_no_early_exit(graph, kw_masks, cfg):
+    import dataclasses
+
+    from repro.core.dks import DKSConfig, run_dks
+    cfg2 = dataclasses.replace(cfg, exit_mode="none")
+    return run_dks(graph, kw_masks, cfg2)

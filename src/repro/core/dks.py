@@ -1,0 +1,382 @@
+"""DKS — Distributed Keyword Search (the paper's core algorithm) in JAX.
+
+Vertex state is the dense table ``S[V, 2^m, K]`` (top-K distinct partial
+answer weights per keyword-set — the paper's ``S_K``).  One superstep is:
+
+  1. *Send/Receive* — min-plus edge relaxation from every node whose table
+     changed last superstep (BFS messages; re-fires of previously visited
+     nodes are exactly the paper's deep messages — see DESIGN.md §2),
+     reduced per destination with an exact segment-top-K.
+  2. *Combine* — per-node min-plus subset convolution over keyword-sets
+     (the paper's local-tree S_K/V_K computation, Sec. 5.1), batched over
+     ``ceil(log2 m)`` closure passes so it is one dense TPU-friendly op.
+  3. *Aggregate* — frontier minima per keyword-set (aggregator ``A_S``) and
+     the global top-K answer weights (aggregator ``A_A``).
+  4. *Exit check* — sound on-device criterion ``nu[full] >= W_K`` (see
+     spa.py), plus frontier exhaustion and the paper's message budget
+     (Sec. 5.4 "system hangs at ~1M messages" — here a first-class config).
+
+``run_dks`` executes the loop as a single jitted ``lax.while_loop`` and is
+the unit that shards over the production mesh (node axis over data axes).
+``run_dks_instrumented`` is a host loop around the same jitted phases with
+per-phase wall times (paper Table 1) and literal Eq. 2 "paper" exit mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import INF
+from repro.core import semiring, spa
+from repro.graph.structure import DeviceGraph
+
+
+# --------------------------------------------------------------------------
+# Config / state
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DKSConfig:
+    """Static configuration of a DKS run."""
+
+    m: int                      # number of query keywords
+    k: int = 1                  # top-K answers
+    max_supersteps: int = 64
+    message_budget: float = float("inf")  # paper: ~1e6 before Giraph hangs
+    exit_mode: str = "sound"    # "sound" | "none" (run to frontier exhaustion)
+    combine_impl: str = "jnp"   # "jnp" | "pallas"
+    relax_impl: str = "jnp"     # "jnp" | "pallas"
+    combine_passes: int | None = None  # default ceil(log2 m)
+    frontier_frac: float = 0.25  # per-shard frontier cap (frontier relax);
+    # overflow marks budget_hit — the paper's Sec. 5.4 forced-stop + SPA.
+
+    @property
+    def n_sets(self) -> int:
+        return 1 << self.m
+
+    @property
+    def full(self) -> int:
+        return (1 << self.m) - 1
+
+    def n_combine_passes(self) -> int:
+        if self.combine_passes is not None:
+            return self.combine_passes
+        if self.m <= 1:
+            return 0
+        return int(np.ceil(np.log2(self.m)))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DKSState:
+    """Per-superstep state (a pytree; node axis shards over the mesh)."""
+
+    S: jax.Array            # f32[V, 2^m, K] top-K distinct partial weights
+    changed: jax.Array      # bool[V] — Pregel "active" vertices
+    first_fire: jax.Array   # bool[V] — active for the first time (BFS
+                            # frontier; re-fires are deep messages, Fig. 11)
+    visited: jax.Array      # bool[V] — ever active (paper Fig. 13)
+    g: jax.Array            # f32[2^m] global running min per keyword-set
+    s_front: jax.Array      # f32[2^m] min over current frontier (A_S aggr.)
+    topk_w: jax.Array       # f32[K] global top-K answer weights (A_A aggr.)
+    topk_root: jax.Array    # i32[K] their root nodes
+    msgs_bfs: jax.Array     # f32[] cumulative BFS messages (first visits)
+    msgs_deep: jax.Array    # f32[] cumulative deep messages (re-fires)
+    step: jax.Array         # i32[]
+    done: jax.Array         # bool[]
+    budget_hit: jax.Array   # bool[] — stopped by message budget (Sec. 5.4)
+
+
+# --------------------------------------------------------------------------
+# Phases
+# --------------------------------------------------------------------------
+
+
+def init_state(graph: DeviceGraph, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState:
+    """Superstep 0: keyword-nodes hold weight-0 singletons and are active."""
+    v_pad = graph.v_pad
+    n, k = cfg.n_sets, cfg.k
+    S = jnp.full((v_pad, n, k), INF, jnp.float32)
+    for i in range(cfg.m):
+        S = S.at[:, 1 << i, 0].set(jnp.where(kw_masks[i], 0.0, INF))
+    changed = jnp.any(kw_masks, axis=0) & graph.node_valid
+    S = combine(S, cfg)  # nodes holding several keywords already combine
+    state = DKSState(
+        S=S,
+        changed=changed,
+        first_fire=changed,
+        visited=changed,
+        g=jnp.full((n,), INF, jnp.float32),
+        s_front=jnp.full((n,), INF, jnp.float32),
+        topk_w=jnp.full((k,), INF, jnp.float32),
+        topk_root=jnp.full((k,), -1, jnp.int32),
+        msgs_bfs=jnp.float32(0.0),
+        msgs_deep=jnp.float32(0.0),
+        step=jnp.int32(0),
+        done=jnp.bool_(False),
+        budget_hit=jnp.bool_(False),
+    )
+    return aggregate(graph, state, cfg)
+
+
+def relax(graph: DeviceGraph, S: jax.Array, changed: jax.Array,
+          cfg: DKSConfig) -> jax.Array:
+    """Messages: every active node sends its table along every incident edge;
+    destinations take the per-keyword-set top-K of what arrives.
+
+    Returns R[V, 2^m, K] (INF where nothing arrived).
+    """
+    if cfg.relax_impl == "pallas":
+        from repro.kernels.segment_minplus import ops as sm_ops
+        return sm_ops.segment_minplus(
+            S, graph.src, graph.dst, graph.w,
+            changed, graph.v_pad, cfg.k,
+        )
+    send = changed[graph.src] & graph.valid
+    # cand[e, ks, k] = S[src(e), ks, k] + w(e)
+    cand = S[graph.src] + graph.w[:, None, None]
+    cand = jnp.where(send[:, None, None], cand, INF)
+    cand = semiring.bump_to_inf(cand)
+    e_pad, n, k = cand.shape
+    # Candidate axis = (edge, slot); segment by destination.
+    vals = cand.transpose(0, 2, 1).reshape(e_pad * k, n)
+    seg = jnp.repeat(graph.dst, k)
+    return semiring.segment_topk_min(vals, seg, graph.v_pad, cfg.k)  # [V, 2^m, K]
+
+
+def combine(S: jax.Array, cfg: DKSConfig) -> jax.Array:
+    """Per-node min-plus subset convolution:
+    ``S[v, a|b] <- topk(S[v, a|b] ∪ (S[v,a] ⊕ S[v,b]))`` for disjoint a,b.
+
+    Batched over all split pairs at once; ``ceil(log2 m)`` passes reach the
+    popcount-doubling closure (DESIGN.md §3.1).
+    """
+    if cfg.m <= 1:
+        return S
+    if cfg.combine_impl == "pallas":
+        from repro.kernels.subset_combine import ops as sc_ops
+        return sc_ops.subset_combine(S, cfg.m, cfg.n_combine_passes())
+    pairs = spa.split_pairs(cfg.m)
+    t_ids = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    a_ids = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    b_ids = jnp.asarray([p[2] for p in pairs], jnp.int32)
+    k = cfg.k
+    n_pairs = len(pairs)
+
+    def one_pass(S, _):
+        a = jnp.take(S, a_ids, axis=1)          # [V, P, K]
+        b = jnp.take(S, b_ids, axis=1)          # [V, P, K]
+        cand = semiring.outer_combine(a, b)     # [V, P, K]
+        #
+
+        # Reduce candidates into their target keyword-sets: segment over the
+        # pair axis, feature axes (V,) after folding K into the candidate
+        # axis: rows (p, kslot) -> segment t_ids[p].
+        vals = cand.transpose(1, 2, 0).reshape(n_pairs * k, -1)  # [(P K), V]
+        seg = jnp.repeat(t_ids, k)
+        red = semiring.segment_topk_min(vals, seg, cfg.n_sets, k)  # [2^m, V, K]
+        red = red.transpose(1, 0, 2)            # [V, 2^m, K]
+        return semiring.topk_merge(S, red), None
+
+    S, _ = jax.lax.scan(one_pass, S, None, length=cfg.n_combine_passes())
+    return S
+
+
+def aggregate(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
+    """Aggregators A_S (frontier minima per keyword-set) and A_A (global
+    top-K answers: smallest full-set values across all nodes)."""
+    S, changed = state.S, state.changed
+    masked = jnp.where(changed[:, None], S[:, :, 0], INF)  # [V, 2^m]
+    s_front = jnp.min(masked, axis=0)
+    g = jnp.minimum(state.g, jnp.min(S[:, :, 0], axis=0))
+    full_vals = S[:, cfg.full, :].reshape(-1)               # [V*K]
+    neg_top, idx = jax.lax.top_k(-full_vals, cfg.k)
+    topk_w = -neg_top
+    topk_root = (idx // cfg.k).astype(jnp.int32)
+    topk_root = jnp.where(topk_w >= INF, -1, topk_root)
+    return dataclasses.replace(
+        state, s_front=s_front, g=g, topk_w=topk_w, topk_root=topk_root
+    )
+
+
+def exit_check(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
+    """Sound exit: stop when no future superstep can produce a new full-set
+    value better than the current K-th best (nu[full] >= W_K), when the
+    frontier is empty, or when the message budget is exhausted."""
+    frontier_empty = ~jnp.any(state.changed)
+    done = frontier_empty
+    budget_hit = jnp.bool_(False)
+    if cfg.exit_mode == "sound":
+        nu = spa.nu_lower_bound(state.g, graph.e_min(), cfg.m)
+        w_k = state.topk_w[cfg.k - 1]
+        done = done | (nu[cfg.full] >= jnp.minimum(w_k, INF))
+    msgs = state.msgs_bfs + state.msgs_deep
+    if np.isfinite(cfg.message_budget):
+        budget_hit = msgs > cfg.message_budget
+        done = done | budget_hit
+    done = done | (state.step >= cfg.max_supersteps)
+    return dataclasses.replace(state, done=done, budget_hit=budget_hit)
+
+
+def superstep(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
+    """One Pregel superstep (phases 1-4 above)."""
+    S0 = state.S
+    deg = graph.out_degree.astype(jnp.float32)
+    # First-time fires are BFS messages; re-fires of visited vertices are
+    # the deep messages (paper Fig. 11).
+    n_bfs = jnp.sum(jnp.where(state.first_fire, deg, 0.0))
+    n_deep = jnp.sum(jnp.where(state.changed & ~state.first_fire, deg, 0.0))
+
+    R = relax(graph, S0, state.changed, cfg)
+    S1 = semiring.topk_merge(S0, R)
+    S1 = combine(S1, cfg)
+    changed = jnp.any(S1 < S0, axis=(1, 2)) & graph.node_valid
+    first_fire = changed & ~state.visited
+    visited = state.visited | changed
+    state = dataclasses.replace(
+        state,
+        S=S1,
+        changed=changed,
+        first_fire=first_fire,
+        visited=visited,
+        msgs_bfs=state.msgs_bfs + n_bfs,
+        msgs_deep=state.msgs_deep + n_deep,
+        step=state.step + 1,
+    )
+    state = aggregate(graph, state, cfg)
+    return exit_check(graph, state, cfg)
+
+
+# --------------------------------------------------------------------------
+# Drivers
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=())
+def run_dks(graph: DeviceGraph, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState:
+    """Full DKS run as one jitted while-loop (the production path)."""
+    state = init_state(graph, kw_masks, cfg)
+
+    def cond(st: DKSState):
+        return ~st.done
+
+    def body(st: DKSState):
+        return superstep(graph, st, cfg)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def run_dks_batched(graph: DeviceGraph, kw_masks_batch: jax.Array,
+                    cfg: DKSConfig) -> DKSState:
+    """Serve a BATCH of queries in one device program.
+
+    kw_masks_batch: bool[Q, m, V].  vmap folds the query axis into every
+    tensor of the superstep; ``lax.while_loop`` under vmap runs until every
+    query's exit criterion fires (finished queries step idempotently — the
+    lattice is a fixpoint).  Amortizes graph residency and kernel launches
+    across the paper's 100-query workloads.
+    """
+    return jax.vmap(lambda m: run_dks(graph, m, cfg))(kw_masks_batch)
+
+
+def run_dks_instrumented(
+    graph: DeviceGraph,
+    kw_masks: jax.Array,
+    cfg: DKSConfig,
+    exit_hook: Callable[[DKSState], bool] | None = None,
+) -> tuple[DKSState, dict[str, Any]]:
+    """Host-driven superstep loop with per-phase wall times (paper Table 1).
+
+    Phases timed: send_bfs (gather+add candidates), receive (segment top-K +
+    merge), evaluate (subset combine = local-tree S_K computation),
+    send_agg (aggregators + exit).  Deep messages share the relax kernel
+    (DESIGN.md §2), so their share is attributed by message counts.
+
+    ``exit_hook``: optional host-side exit criterion (e.g. the literal paper
+    Eq. 2 check, fagin.paper_exit_hook) evaluated between supersteps.
+    """
+    timings = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0, "send_agg": 0.0}
+
+    @jax.jit
+    def _phase_relax(S, changed):
+        send = changed[graph.src] & graph.valid
+        cand = S[graph.src] + graph.w[:, None, None]
+        cand = jnp.where(send[:, None, None], cand, INF)
+        return semiring.bump_to_inf(cand)
+
+    @jax.jit
+    def _phase_receive(S, cand):
+        e_pad, n, k = cand.shape
+        vals = cand.transpose(0, 2, 1).reshape(e_pad * k, n)
+        seg = jnp.repeat(graph.dst, k)
+        r = semiring.segment_topk_min(vals, seg, graph.v_pad, cfg.k)
+        return semiring.topk_merge(S, r)
+
+    @jax.jit
+    def _phase_combine(S):
+        return combine(S, cfg)
+
+    @jax.jit
+    def _phase_agg(S0, state):
+        changed = jnp.any(state.S < S0, axis=(1, 2)) & graph.node_valid
+        st = dataclasses.replace(
+            state, changed=changed,
+            first_fire=changed & ~state.visited,
+            visited=state.visited | changed,
+        )
+        st = aggregate(graph, st, cfg)
+        return exit_check(graph, st, cfg)
+
+    state = init_state(graph, kw_masks, cfg)
+    state = jax.block_until_ready(state)
+    history = []
+    while not bool(state.done):
+        deg = graph.out_degree.astype(jnp.float32)
+        n_bfs = float(jnp.sum(jnp.where(state.first_fire, deg, 0.0)))
+        n_deep = float(jnp.sum(
+            jnp.where(state.changed & ~state.first_fire, deg, 0.0)))
+
+        t0 = time.perf_counter()
+        cand = jax.block_until_ready(_phase_relax(state.S, state.changed))
+        t1 = time.perf_counter()
+        S1 = jax.block_until_ready(_phase_receive(state.S, cand))
+        t2 = time.perf_counter()
+        S1 = jax.block_until_ready(_phase_combine(S1))
+        t3 = time.perf_counter()
+        S0 = state.S
+        state = dataclasses.replace(
+            state,
+            S=S1,
+            msgs_bfs=state.msgs_bfs + n_bfs,
+            msgs_deep=state.msgs_deep + n_deep,
+            step=state.step + 1,
+        )
+        state = jax.block_until_ready(_phase_agg(S0, state))
+        t4 = time.perf_counter()
+
+        timings["send_bfs"] += t1 - t0
+        timings["receive"] += t2 - t1
+        timings["evaluate"] += t3 - t2
+        timings["send_agg"] += t4 - t3
+        history.append(
+            dict(step=int(state.step), frontier=int(jnp.sum(state.changed)),
+                 msgs_bfs=float(state.msgs_bfs), msgs_deep=float(state.msgs_deep),
+                 best=float(state.topk_w[0]))
+        )
+        if exit_hook is not None and exit_hook(state):
+            state = dataclasses.replace(state, done=jnp.bool_(True))
+    info = dict(timings=timings, history=history)
+    return state, info
+
+
+def extract_answer_weights(state: DKSState, cfg: DKSConfig) -> np.ndarray:
+    """Global top-K distinct answer weights (INF-padded)."""
+    return np.asarray(state.topk_w)

@@ -1,0 +1,216 @@
+"""Frontier-compressed sharded DKS (the production multi-pod path).
+
+The dense relax under plain pjit makes XLA replicate the whole ``S`` table
+for the edge gather (measured 1.93 GiB/device/superstep on bluk-bnb — see
+EXPERIMENTS.md §Perf).  But Pregel semantics only need the tables of
+*active* vertices on the wire.  This module is that observation as a
+shard_map:
+
+  1. each shard packs (global id, table) for up to ``f_cap`` changed nodes;
+  2. one all-gather moves only the packed frontier;
+  3. edges are pre-partitioned by destination owner (host-side), so each
+     shard relaxes its own edges against the gathered frontier via a
+     sorted-id binary search, reducing locally with the K-round
+     segment-top-K.
+
+Frontier overflow (> f_cap active nodes on some shard) raises the
+``budget_hit`` flag — precisely the paper's Sec. 5.4 forced stop: the run
+finishes with the SPA bound instead of silently dropping messages.
+
+Combine stays node-local (node axis sharded over ALL mesh axes, keyword-set
+axis replicated), so it needs no collectives at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import INF
+from repro.core import semiring, spa
+from repro.core.dks import DKSConfig, DKSState, aggregate, combine, exit_check
+from repro.graph.structure import Graph
+
+MESH_AXES = ("pod", "data", "model")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FrontierGraph:
+    """Edges partitioned by destination owner; node arrays over all axes.
+
+    edge_src:   i32[n_shards, e_cap]  global source ids (-1 pad)
+    edge_dst_l: i32[n_shards, e_cap]  destination LOCAL index on its shard
+    edge_w:     f32[n_shards, e_cap]  (INF pad)
+    out_degree: i32[V_pad]; node_valid: bool[V_pad]
+    """
+
+    edge_src: jax.Array
+    edge_dst_l: jax.Array
+    edge_w: jax.Array
+    out_degree: jax.Array
+    node_valid: jax.Array
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def v_pad(self) -> int:
+        return self.node_valid.shape[0]
+
+    @property
+    def n_loc(self) -> int:
+        return self.v_pad // self.n_shards
+
+    def e_min(self) -> jax.Array:
+        return jnp.min(jnp.where(self.edge_w < INF, self.edge_w, INF))
+
+
+def pack_frontier_graph(g: Graph, n_shards: int,
+                        e_slack: float = 1.2) -> FrontierGraph:
+    """Host-side: symmetrized edges grouped by dst owner, padded rows."""
+    v_pad = int(-(-g.n_nodes // n_shards) * n_shards)
+    n_loc = v_pad // n_shards
+    deg = np.diff(g.indptr)
+    src = np.repeat(np.arange(g.n_nodes, dtype=np.int32), deg)
+    dst = g.indices.astype(np.int32)
+    w = g.ew.astype(np.float32)
+    owner = dst // n_loc
+    counts = np.bincount(owner, minlength=n_shards)
+    e_cap = int(max(8, -(-int(counts.max() * 1.0) // 8) * 8))
+    edge_src = np.full((n_shards, e_cap), -1, np.int32)
+    edge_dst_l = np.zeros((n_shards, e_cap), np.int32)
+    edge_w = np.full((n_shards, e_cap), INF, np.float32)
+    order = np.argsort(owner, kind="stable")
+    src, dst, w, owner = src[order], dst[order], w[order], owner[order]
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for s in range(n_shards):
+        lo, hi = starts[s], starts[s + 1]
+        n = hi - lo
+        edge_src[s, :n] = src[lo:hi]
+        edge_dst_l[s, :n] = dst[lo:hi] - s * n_loc
+        edge_w[s, :n] = w[lo:hi]
+    out_degree = np.zeros(v_pad, np.int32)
+    out_degree[: g.n_nodes] = deg
+    node_valid = np.zeros(v_pad, bool)
+    node_valid[: g.n_nodes] = True
+    return FrontierGraph(
+        edge_src=jnp.asarray(edge_src), edge_dst_l=jnp.asarray(edge_dst_l),
+        edge_w=jnp.asarray(edge_w), out_degree=jnp.asarray(out_degree),
+        node_valid=jnp.asarray(node_valid),
+        n_nodes=g.n_nodes, n_edges=len(src), n_shards=n_shards)
+
+
+def _mesh_axes(am) -> tuple[str, ...]:
+    return tuple(a for a in MESH_AXES if a in am.axis_names)
+
+
+def relax_frontier(graph: FrontierGraph, S: jax.Array, changed: jax.Array,
+                   cfg: DKSConfig) -> tuple[jax.Array, jax.Array]:
+    """Frontier-compressed relax.  Returns (R[V, 2^m, K], overflow bool)."""
+    am = jax.sharding.get_abstract_mesh()
+    axes = _mesh_axes(am)
+    n_shards = graph.n_shards
+    n_loc = graph.n_loc
+    f_cap = min(n_loc, max(1, int(n_loc * cfg.frontier_frac)))
+    n_sets, k = S.shape[1], S.shape[2]
+    f_tot = n_shards * f_cap
+
+    def block(S_loc, changed_loc, src_g, dst_l, w, shard_arange):
+        S_loc = S_loc  # [n_loc, n_sets, k]
+        src_g = src_g[0]
+        dst_l = dst_l[0]
+        w = w[0]
+        shard_id = shard_arange[0]
+        offset = shard_id * n_loc
+        # Pack the local frontier (ids ascending; invalid slots OOB-marked).
+        idx = jnp.nonzero(changed_loc, size=f_cap, fill_value=n_loc)[0]
+        fvalid = idx < n_loc
+        tab = jnp.where(fvalid[:, None, None],
+                        S_loc[jnp.minimum(idx, n_loc - 1)], INF)
+        gids = jnp.where(fvalid, idx + offset, jnp.int32(2**30) + idx)
+        overflow = jnp.sum(changed_loc) > f_cap
+        # Exchange only the frontier.
+        all_gids = jax.lax.all_gather(gids, axes, tiled=True)   # [F_tot]
+        all_tab = jax.lax.all_gather(tab, axes, tiled=True)     # [F_tot,S,K]
+        order = jnp.argsort(all_gids)
+        sg = all_gids[order]
+        st = all_tab[order]
+        # Relax local edges against the gathered frontier.
+        pos = jnp.searchsorted(sg, src_g)
+        pos = jnp.clip(pos, 0, f_tot - 1)
+        hit = (sg[pos] == src_g) & (src_g >= 0)
+        cand = st[pos] + w[:, None, None]
+        cand = jnp.where(hit[:, None, None], cand, INF)
+        cand = semiring.bump_to_inf(cand)
+        e_cap = cand.shape[0]
+        vals = cand.transpose(0, 2, 1).reshape(e_cap * k, n_sets)
+        seg = jnp.repeat(dst_l, k)
+        r_loc = semiring.segment_topk_min(vals, seg, n_loc, k)
+        ov = jax.lax.pmax(overflow.astype(jnp.int32), axes)
+        return r_loc, ov
+
+    in_specs = (
+        P(axes, None, None),    # S (node axis over all mesh axes)
+        P(axes),                # changed
+        P(axes, None),          # edge_src [n_shards, e_cap]
+        P(axes, None),          # edge_dst_l
+        P(axes, None),          # edge_w
+        P(axes),                # shard ids
+    )
+    out_specs = (P(axes, None, None), P())
+    shard_arange = jnp.arange(n_shards, dtype=jnp.int32)
+    r, ov = jax.shard_map(
+        block, mesh=am, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(S, changed, graph.edge_src, graph.edge_dst_l, graph.edge_w,
+      shard_arange)
+    return r, ov > 0
+
+
+def superstep_frontier(graph: FrontierGraph, state: DKSState,
+                       cfg: DKSConfig) -> DKSState:
+    """One superstep with frontier-compressed communication."""
+    S0 = state.S
+    deg = graph.out_degree.astype(jnp.float32)
+    n_bfs = jnp.sum(jnp.where(state.first_fire, deg, 0.0))
+    n_deep = jnp.sum(jnp.where(state.changed & ~state.first_fire, deg, 0.0))
+
+    R, overflow = relax_frontier(graph, S0, state.changed, cfg)
+    S1 = semiring.topk_merge(S0, R)
+    S1 = combine(S1, cfg)
+    changed = jnp.any(S1 < S0, axis=(1, 2)) & graph.node_valid
+    first_fire = changed & ~state.visited
+    visited = state.visited | changed
+    state = dataclasses.replace(
+        state, S=S1, changed=changed, first_fire=first_fire, visited=visited,
+        msgs_bfs=state.msgs_bfs + n_bfs, msgs_deep=state.msgs_deep + n_deep,
+        step=state.step + 1,
+    )
+    state = aggregate(graph, state, cfg)
+    state = exit_check(graph, state, cfg)
+    # Frontier overflow == message budget exhausted (paper Sec. 5.4).
+    return dataclasses.replace(
+        state,
+        budget_hit=state.budget_hit | overflow,
+        done=state.done | overflow,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_dks_frontier(graph: FrontierGraph, kw_masks: jax.Array,
+                     cfg: DKSConfig) -> DKSState:
+    """Full frontier-sharded DKS run (jitted while-loop)."""
+    from repro.core.dks import init_state
+
+    state = init_state(graph, kw_masks, cfg)
+    return jax.lax.while_loop(
+        lambda st: ~st.done,
+        lambda st: superstep_frontier(graph, st, cfg),
+        state)

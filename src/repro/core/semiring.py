@@ -1,0 +1,95 @@
+"""Top-K min-plus lattice operations.
+
+The paper keeps, at every node and for every keyword-set ``k ⊆ Q``, the top-K
+best partial-answer path-lengths (the ``S_K`` structure, Sec. 4/5.1).  On TPU
+we realize ``S_K`` as a dense tensor ``S[V, 2^m, K]`` whose last axis is a
+*sorted, duplicate-free, INF-padded* K-vector.  All DKS dataflow is then
+algebra over this lattice:
+
+- ``topk_merge``      — join of two K-vectors (Pregel "receive messages")
+- ``outer_combine``   — min-plus product of two K-vectors (local-tree combine)
+- ``segment_topk_min``— top-K min-reduce by segment id (message scatter)
+
+Duplicate-free matters: Pregel vertices resend their whole table whenever
+active, so the merge must be *idempotent* (merging the same table twice is a
+no-op).  We therefore keep top-K **distinct weights** — this also implements
+the paper's duplicate-answer removal at the aggregator (Sec. 4, Step 5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import INF
+
+
+def sorted_unique_k(x: jax.Array, k: int) -> jax.Array:
+    """Sort ascending along the last axis, drop duplicate values, pad with INF,
+    and keep the first ``k`` entries.
+
+    ``x``: (..., n) with n >= k.  Returns (..., k).
+    """
+    x = jnp.sort(x, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(x[..., :1], dtype=bool), x[..., 1:] == x[..., :-1]],
+        axis=-1,
+    )
+    x = jnp.where(dup, INF, x)
+    x = jnp.sort(x, axis=-1)
+    return x[..., :k]
+
+
+def topk_merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two sorted-unique K-vectors into one (idempotent lattice join)."""
+    k = a.shape[-1]
+    return sorted_unique_k(jnp.concatenate([a, b], axis=-1), k)
+
+
+def outer_combine(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Min-plus product: all pairwise sums of two K-vectors, reduced to the
+    top-K distinct sums.  This is the paper's combination of two disjoint
+    keyword-set partial answers at a node ((1+2K)^m analysis, Sec. 5.1).
+
+    ``a``, ``b``: (..., K) -> (..., K).
+    """
+    k = a.shape[-1]
+    s = a[..., :, None] + b[..., None, :]
+    s = jnp.minimum(s, INF)  # saturate so INF+x does not overflow usefully
+    return sorted_unique_k(s.reshape(*s.shape[:-2], k * k), k)
+
+
+def segment_topk_min(
+    values: jax.Array,
+    segment_ids: jax.Array,
+    num_segments: int,
+    k: int,
+) -> jax.Array:
+    """Exact per-segment top-K smallest *distinct* values.
+
+    ``values``: (N, ...F) candidate values; ``segment_ids``: (N,) int32.
+    Returns (num_segments, ...F, k), sorted-unique-INF-padded.
+
+    Implementation: K rounds of (segment-min -> winner masking).  Each round
+    extracts one distinct minimum per (segment, feature) cell; every candidate
+    equal to the extracted minimum is masked (distinct-weight semantics), so
+    K rounds suffice and the result is duplicate-free by construction.
+    """
+    vals = values
+    outs = []
+    for _ in range(k):
+        cur = jax.ops.segment_min(
+            vals, segment_ids, num_segments=num_segments,
+            indices_are_sorted=False, unique_indices=False,
+        )
+        cur = jnp.minimum(cur, INF)
+        outs.append(cur)
+        # Mask every candidate equal to its segment's extracted minimum.
+        vals = jnp.where(vals <= cur[segment_ids], INF, vals)
+    out = jnp.stack(outs, axis=-1)
+    return out
+
+
+def bump_to_inf(x: jax.Array, thresh: float = INF * 0.5) -> jax.Array:
+    """Saturate any value that drifted past thresh back to exactly INF."""
+    return jnp.where(x >= thresh, INF, x)

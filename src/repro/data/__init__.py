@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    PrefetchIterator, lm_synthetic_stream, recsys_synthetic_stream,
+)

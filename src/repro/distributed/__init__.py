@@ -1,0 +1,4 @@
+from repro.distributed.compression import (  # noqa: F401
+    CompressionState, compressed_allreduce, init_compression,
+)
+from repro.distributed.fault import StepGuard, StragglerPolicy  # noqa: F401

@@ -1,0 +1,116 @@
+"""Gradient compression: int8 ring all-reduce with error feedback.
+
+On a 2-pod mesh the cross-pod (DCI) hop is the scarce resource; int8
+quantization cuts gradient wire bytes 4x vs f32.  Implementation is a
+shard_map ring over the chosen axis using ``jax.lax.ppermute`` on int8
+chunks (reduce-scatter phase) followed by an int8 all-gather phase —
+the same two-phase schedule NCCL/ICI rings use, so the dry-run's
+collective-permute bytes reflect the real wire traffic.
+
+Error feedback (Seide et al. '14 / EF21): the quantization residual is
+carried to the next step, making the compressed SGD convergent where plain
+quantized gradients stall.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionState:
+    error: Any          # residual carry, same tree as grads
+
+
+def init_compression(grads: Any) -> CompressionState:
+    return CompressionState(
+        error=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _ring_allreduce_int8(x: jax.Array, axis: str, n: int) -> jax.Array:
+    """Two-phase ring all-reduce; payload quantized per hop.
+
+    x: f32[n*chunk] (flat, padded). Returns the mean over the axis.
+    """
+    chunk = x.shape[0] // n
+    xs = x.reshape(n, chunk)
+    idx = jax.lax.axis_index(axis)
+
+    # Phase 1: reduce-scatter. After n-1 hops, device i owns the full sum of
+    # chunk (i+1) mod n.
+    def rs_step(j, xs):
+        send_idx = (idx - j) % n
+        q, s = _quantize(xs[send_idx])
+        perm = [(k, (k + 1) % n) for k in range(n)]
+        q = jax.lax.ppermute(q, axis, perm)
+        s = jax.lax.ppermute(s, axis, perm)
+        recv_idx = (idx - j - 1) % n
+        return xs.at[recv_idx].add(q.astype(jnp.float32) * s)
+
+    xs = jax.lax.fori_loop(0, n - 1, rs_step, xs)
+
+    # Phase 2: all-gather the reduced chunks around the ring.
+    def ag_step(j, xs):
+        send_idx = (idx + 1 - j) % n
+        q, s = _quantize(xs[send_idx])
+        perm = [(k, (k + 1) % n) for k in range(n)]
+        q = jax.lax.ppermute(q, axis, perm)
+        s = jax.lax.ppermute(s, axis, perm)
+        recv_idx = (idx - j) % n
+        return xs.at[recv_idx].set(q.astype(jnp.float32) * s)
+
+    xs = jax.lax.fori_loop(0, n - 1, ag_step, xs)
+    return xs.reshape(-1) / n
+
+
+def compressed_allreduce(
+    grads: Any, state: CompressionState, mesh, axis: str = "data",
+) -> tuple[Any, CompressionState]:
+    """Mean-all-reduce ``grads`` over ``axis`` with int8 ring + error
+    feedback.  grads enter sharded/replicated per their usual specs; each
+    leaf is flattened, padded to the ring size and reduced."""
+    n = mesh.shape[axis]
+    if n == 1:
+        return grads, state
+
+    def leaf_reduce(g_and_e):
+        g, e = g_and_e
+
+        def block(gl, el):
+            x = gl.reshape(-1).astype(jnp.float32) + el.reshape(-1)
+            pad = (-x.shape[0]) % n
+            xp = jnp.pad(x, (0, pad))
+            red = _ring_allreduce_int8(xp, axis, n)
+            red = red[: x.shape[0]]
+            new_e = x - red  # local error feedback (what the wire lost)
+            return (red.reshape(gl.shape).astype(gl.dtype),
+                    new_e.reshape(gl.shape))
+
+        other = tuple(a for a in mesh.axis_names if a != axis)
+        return jax.shard_map(
+            block, mesh=mesh,
+            in_specs=(P(), P()), out_specs=(P(), P()),
+            check_vma=False,
+        )(g, e)
+
+    pairs = jax.tree_util.tree_map(
+        lambda g, e: leaf_reduce((g, e)), grads, state.error,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, tuple))
+    new_grads = jax.tree_util.tree_map(
+        lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree_util.tree_map(
+        lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return new_grads, CompressionState(error=new_err)

@@ -1,0 +1,91 @@
+"""Fault tolerance & straggler mitigation for the step loop.
+
+TPU pods fail as whole slices; the recovery model is checkpoint/restart
+(handled by repro.checkpoint).  What the *step loop* owns:
+
+- :class:`StepGuard` — per-step deadline + retry.  A step that throws a
+  transient runtime error (preemption, ICI timeout surfaced as
+  XlaRuntimeError) is retried from the last good state up to
+  ``max_retries``; a step exceeding the deadline is logged as a straggler
+  event and, past ``straggler_patience`` consecutive events, escalates to
+  a checkpoint-now signal so the controller can replace the slow host.
+- :class:`StragglerPolicy` — EMA of step times; flags steps slower than
+  ``threshold`` x the EMA (the standard fleet-level detection signal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    threshold: float = 2.0
+    ema_decay: float = 0.9
+    patience: int = 3
+    _ema: float | None = None
+    _consecutive: int = 0
+
+    def observe(self, step_time: float) -> bool:
+        """Returns True if this step is a straggler event."""
+        if self._ema is None:
+            self._ema = step_time
+            return False
+        is_straggler = step_time > self.threshold * self._ema
+        # Slow steps should not poison the baseline.
+        if not is_straggler:
+            self._ema = (self.ema_decay * self._ema
+                         + (1 - self.ema_decay) * step_time)
+            self._consecutive = 0
+        else:
+            self._consecutive += 1
+        return is_straggler
+
+    @property
+    def should_escalate(self) -> bool:
+        return self._consecutive >= self.patience
+
+
+@dataclasses.dataclass
+class StepGuard:
+    """Wraps a jitted step with retry + straggler accounting."""
+
+    max_retries: int = 2
+    straggler: StragglerPolicy = dataclasses.field(
+        default_factory=StragglerPolicy)
+    on_retry: Callable[[int, BaseException], None] | None = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def run(self, step_fn: Callable, state: Any, *args) -> tuple[Any, Any, dict]:
+        """Returns (new_state, aux, info).  On failure, retries from the
+        SAME input state (the functional step makes replay trivial —
+        this is the Pregel superstep-recovery model the paper inherits
+        from Giraph, applied to training)."""
+        last_exc: BaseException | None = None
+        for attempt in range(self.max_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                import jax
+                out = step_fn(state, *args)
+                out = jax.block_until_ready(out)
+                dt = time.perf_counter() - t0
+                info = {
+                    "step_time_s": dt,
+                    "straggler": self.straggler.observe(dt),
+                    "escalate_checkpoint": self.straggler.should_escalate,
+                    "retries": attempt,
+                }
+                if info["straggler"]:
+                    self.events.append(("straggler", dt))
+                new_state, aux = out
+                return new_state, aux, info
+            except Exception as e:  # noqa: BLE001 — runtime faults retried
+                last_exc = e
+                self.events.append(("retry", repr(e)))
+                if self.on_retry is not None:
+                    self.on_retry(attempt, e)
+        raise RuntimeError(
+            f"step failed after {self.max_retries + 1} attempts"
+        ) from last_exc

@@ -1,0 +1,3 @@
+"""Graph substrate: storage, partitioning, text index, sampling, generators."""
+
+from repro.graph.structure import DeviceGraph, Graph, build_graph  # noqa: F401

@@ -1,0 +1,59 @@
+"""Inverted index: token -> keyword-node ids (paper Sec. 4 pre-processing).
+
+DKS starts from the keyword-nodes of every query keyword; this is the
+index that produces them.  Works on integer token ids (synthetic graphs)
+or on whitespace-tokenized string labels.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class InvertedIndex:
+    def __init__(self) -> None:
+        self._post: dict[object, list[int]] = {}
+        self._frozen: dict[object, np.ndarray] = {}
+
+    @classmethod
+    def from_token_matrix(cls, tokens: np.ndarray) -> "InvertedIndex":
+        """tokens: int[V, L] token ids per node."""
+        idx = cls()
+        v, l = tokens.shape
+        flat = tokens.reshape(-1)
+        nodes = np.repeat(np.arange(v, dtype=np.int64), l)
+        order = np.argsort(flat, kind="stable")
+        flat, nodes = flat[order], nodes[order]
+        bounds = np.flatnonzero(np.diff(flat)) + 1
+        starts = np.concatenate([[0], bounds])
+        ends = np.concatenate([bounds, [len(flat)]])
+        for s, e in zip(starts, ends):
+            idx._frozen[int(flat[s])] = np.unique(nodes[s:e]).astype(np.int32)
+        return idx
+
+    @classmethod
+    def from_labels(cls, labels: list[str]) -> "InvertedIndex":
+        idx = cls()
+        for node, text in enumerate(labels):
+            for tok in text.lower().split():
+                idx._post.setdefault(tok, []).append(node)
+        for tok, nodes in idx._post.items():
+            idx._frozen[tok] = np.unique(np.asarray(nodes, np.int32))
+        idx._post.clear()
+        return idx
+
+    def lookup(self, token) -> np.ndarray:
+        return self._frozen.get(token, np.zeros(0, np.int32))
+
+    def keyword_masks(self, query: list, n_nodes: int) -> np.ndarray:
+        """bool[m, n_nodes] — keyword-node masks for a query."""
+        masks = np.zeros((len(query), n_nodes), bool)
+        for i, tok in enumerate(query):
+            masks[i, self.lookup(tok)] = True
+        return masks
+
+    def vocabulary(self) -> list:
+        return list(self._frozen)
+
+    def df(self, token) -> int:
+        return len(self.lookup(token))

@@ -1,0 +1,192 @@
+"""Graph storage.
+
+Two views of a graph:
+
+- :class:`Graph` — host-side container (numpy): CSR for the neighbor sampler
+  and the inverted index, node text labels, raw directed edges.
+- :class:`DeviceGraph` — device pytree (jnp): symmetrized, padded edge list
+  sorted by destination, exactly what the DKS relaxation and the GNN message
+  passing consume.  Edges sorted by ``dst`` double as the layout the Pallas
+  ``segment_minplus`` kernel requires.
+
+Edge weights follow the paper (Sec. 7.1): ``w(e) = int(log10(d_in(dst)))``
+clipped to >= 1 below a degree threshold tau, and "infinite" (the INF
+sentinel) above it — high-degree hub nodes are effectively disconnected,
+which is what keeps relationship queries meaningful on LOD data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import INF
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Symmetrized padded edge-list graph living on device.
+
+    Attributes:
+      src, dst: int32[E_pad] endpoints (padded entries point at node 0).
+      w:        float32[E_pad] edge lengths (INF on padded entries).
+      valid:    bool[E_pad] real-edge mask.
+      out_degree: int32[V_pad] symmetric degree (0 on padded nodes).
+      node_valid: bool[V_pad].
+      n_nodes / n_edges: static true counts (pre-padding).
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    w: jax.Array
+    valid: jax.Array
+    out_degree: jax.Array
+    node_valid: jax.Array
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_edges: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def v_pad(self) -> int:
+        return self.out_degree.shape[0]
+
+    @property
+    def e_pad(self) -> int:
+        return self.src.shape[0]
+
+    def e_min(self) -> jax.Array:
+        """Smallest real edge length (the paper's ``e_min``)."""
+        return jnp.min(jnp.where(self.valid, self.w, INF))
+
+
+@dataclasses.dataclass
+class Graph:
+    """Host-side graph: directed raw edges + CSR over the symmetrized graph."""
+
+    n_nodes: int
+    # Raw directed edges.
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    # Symmetrized CSR (host): indptr[V+1], indices[E_sym], ew[E_sym].
+    indptr: np.ndarray
+    indices: np.ndarray
+    ew: np.ndarray
+    labels: list[str] | None = None
+
+    @property
+    def n_edges_directed(self) -> int:
+        return len(self.src)
+
+    @property
+    def n_edges_sym(self) -> int:
+        return len(self.indices)
+
+    def neighbors(self, v: int) -> tuple[np.ndarray, np.ndarray]:
+        s, e = self.indptr[v], self.indptr[v + 1]
+        return self.indices[s:e], self.ew[s:e]
+
+    def to_device(
+        self,
+        pad_nodes_to: int | None = None,
+        pad_edges_to: int | None = None,
+    ) -> DeviceGraph:
+        """Build the padded, dst-sorted device edge list."""
+        v = self.n_nodes
+        # Symmetrized edge list from CSR: (u -> indices[j]).
+        deg = np.diff(self.indptr)
+        src = np.repeat(np.arange(v, dtype=np.int32), deg)
+        dst = self.indices.astype(np.int32)
+        w = self.ew.astype(np.float32)
+        order = np.argsort(dst, kind="stable")
+        src, dst, w = src[order], dst[order], w[order]
+
+        e = len(src)
+        v_pad = pad_nodes_to or v
+        e_pad = pad_edges_to or e
+        if v_pad < v or e_pad < e:
+            raise ValueError("padding smaller than graph")
+        pad_e = e_pad - e
+        src = np.concatenate([src, np.zeros(pad_e, np.int32)])
+        dst = np.concatenate([dst, np.zeros(pad_e, np.int32)])
+        w = np.concatenate([w, np.full(pad_e, INF, np.float32)])
+        valid = np.concatenate([np.ones(e, bool), np.zeros(pad_e, bool)])
+        out_degree = np.zeros(v_pad, np.int32)
+        out_degree[:v] = deg
+        node_valid = np.zeros(v_pad, bool)
+        node_valid[:v] = True
+        return DeviceGraph(
+            src=jnp.asarray(src), dst=jnp.asarray(dst), w=jnp.asarray(w),
+            valid=jnp.asarray(valid), out_degree=jnp.asarray(out_degree),
+            node_valid=jnp.asarray(node_valid),
+            n_nodes=v, n_edges=e,
+        )
+
+
+def degree_weights(
+    dst: np.ndarray, n_nodes: int, tau: int = 1001
+) -> np.ndarray:
+    """Paper Sec. 7.1 edge-length model: step function of target in-degree.
+
+    ``w = max(1, int(log10 d_in(dst)))`` for ``d_in < tau``; INF otherwise.
+    (The paper uses ``int(log10 d)`` which is 0 for d < 10; positive weights
+    are required by Theorem 1, so we clip at 1 — same step structure.)
+    """
+    d_in = np.bincount(dst, minlength=n_nodes)
+    wd = np.maximum(1, np.log10(np.maximum(d_in, 1)).astype(np.int64))
+    wd = np.where(d_in >= tau, np.int64(INF), wd)
+    return wd[dst].astype(np.float32)
+
+
+def build_graph(
+    src: Sequence[int] | np.ndarray,
+    dst: Sequence[int] | np.ndarray,
+    n_nodes: int,
+    w: np.ndarray | None = None,
+    labels: list[str] | None = None,
+    tau: int = 1001,
+) -> Graph:
+    """Build a host Graph from directed edges; symmetrize; CSR-index.
+
+    If ``w`` is None, weights follow the paper's degree model. Reverse edges
+    get the same weight as the forward edge (paper Sec. 4: "we also include
+    the reverse edges with the same edge-weight").
+    """
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    if w is None:
+        w = degree_weights(dst, n_nodes, tau=tau)
+    w = np.asarray(w, np.float32)
+    if len(src) and (w <= 0).any():
+        raise ValueError("edge weights must be positive (paper requires w>0)")
+
+    # Symmetrize: forward + reverse with equal weight; drop exact duplicates
+    # keeping the minimum weight per (u, v).
+    u = np.concatenate([src, dst])
+    v = np.concatenate([dst, src])
+    ww = np.concatenate([w, w])
+    # Remove self loops (contribute nothing to trees).
+    keep = u != v
+    u, v, ww = u[keep], v[keep], ww[keep]
+    if len(u):
+        key = u.astype(np.int64) * n_nodes + v.astype(np.int64)
+        order = np.lexsort((ww, key))
+        key, u, v, ww = key[order], u[order], v[order], ww[order]
+        first = np.ones(len(key), bool)
+        first[1:] = key[1:] != key[:-1]
+        u, v, ww = u[first], v[first], ww[first]
+
+    order = np.argsort(u, kind="stable")
+    u, v, ww = u[order], v[order], ww[order]
+    counts = np.bincount(u, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return Graph(
+        n_nodes=n_nodes, src=src, dst=dst, w=w,
+        indptr=indptr, indices=v.astype(np.int32), ew=ww.astype(np.float32),
+        labels=labels,
+    )

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel ships three files: ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd wrapper; interpret-mode switch for CPU validation),
+``ref.py`` (pure-jnp oracle).  Tests sweep shapes/dtypes and assert_allclose
+against the oracle with interpret=True.
+
+- subset_combine:  DKS per-node min-plus subset convolution (paper Sec. 5.1,
+                   the "most compute intensive task") — single-pass closure
+                   in VMEM vs. ceil(log2 m) XLA passes.
+- segment_minplus: DKS edge relaxation reduce on a padded-CSR layout with
+                   hub splitting (degree decomposition).
+- flash_attention: LM train/prefill causal GQA attention.
+- embedding_bag:   recsys multi-hot gather-reduce.
+"""

@@ -1,0 +1,20 @@
+"""Oracle: EmbeddingBag (gather + masked weighted segment reduce)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights=None, mode: str = "sum"):
+    """table [V, D]; ids [B, nnz] (-1 pad); weights [B, nnz] | None."""
+    b, nnz = ids.shape
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    rows = jnp.take(table, safe.reshape(-1), axis=0).reshape(b, nnz, -1)
+    if weights is not None:
+        rows = rows * weights[..., None]
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    out = jnp.sum(rows, axis=1)
+    if mode == "mean":
+        out = out / jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1)
+    return out

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Grid (B*Hq, n_q_blocks, n_kv_blocks); the kv axis is innermost and
+sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+scratch across kv steps.  GQA is free: the k/v BlockSpec index maps divide
+the head index by the group size instead of materializing repeated KV.
+MXU alignment: block_q/block_k multiples of 128 (bf16-friendly), head_dim
+64/128 rides the lane axis.
+
+Forward-only (serving/prefill); training uses the chunked-scan JAX path
+which differentiates natively.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_kv: int, sq: int, skv: int, q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # [block_q, dh]
+    k = k_ref[0]                                   # [block_k, dh]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [block_q, block_k]
+
+    qpos = (q_offset + iq * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < skv
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [block_q, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)                 # [block_q, 1]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "q_offset", "kv_len",
+                     "interpret"))
+def flash_attention_bhsd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, block_q: int = 128, block_k: int = 128,
+    q_offset: int = 0, kv_len: int | None = None, interpret: bool = False,
+) -> jax.Array:
+    """q [BHq, Sq, Dh]; k/v [BHkv, Skv, Dh] with BHq = BHkv * G.
+
+    Sq/Skv must be multiples of block_q/block_k (wrapper pads);
+    ``kv_len`` is the true (pre-padding) KV length for masking.
+    """
+    bhq, sq, dh = q.shape
+    bhkv, skv, _ = k.shape
+    g = bhq // bhkv
+    n_q = sq // block_q
+    n_kv = skv // block_k
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(dh), causal=causal,
+        block_q=block_q, block_k=block_k, n_kv=n_kv, sq=sq,
+        skv=kv_len if kv_len is not None else skv,
+        q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(bhq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, dh),
+                         lambda bh, iq, ik, g=g: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""Oracle: naive causal GQA attention (f32 softmax)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, q_offset: int = 0):
+    """q [B, Sq, Hq, Dh], k/v [B, Skv, Hkv, Dh] -> [B, Sq, Hq, Dh]."""
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qr = q.reshape(b, sq, hkv, g, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(dh)
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, dh)

@@ -1,0 +1,3 @@
+from repro.kernels.segment_minplus.ops import (  # noqa: F401
+    padded_csr_from_graph, segment_minplus,
+)

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: padded-CSR top-K min-plus reduce (DKS relax receive).
+
+Hardware adaptation: JAX segment_min over power-law edge lists is a scatter
+— bad on TPU.  The graph substrate re-lays edges as a *padded CSR* with hub
+splitting ("degree decomposition"): every (virtual) destination owns at most
+DMAX candidate rows, so the reduce is a dense [BV, C, F] -> [BV, F, K]
+block op: K rounds of (min over the candidate axis, mask equals), every op
+a full-width VPU vector.  Hub nodes split into ceil(d/DMAX) virtual rows and
+a cheap second-level merge (jnp) combines them.
+
+VMEM per block: BV * C * F * 4B  (BV=8, C=128, F=16 -> 64 KiB).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import INF
+
+
+def _reduce_kernel(cand_ref, out_ref, *, k: int):
+    """cand_ref: [BV, C, F] -> out_ref: [BV, F, K]."""
+    cand = cand_ref[...]
+    outs = []
+    for _ in range(k):
+        cur = jnp.min(cand, axis=1)                    # [BV, F]
+        outs.append(cur)
+        cand = jnp.where(cand <= cur[:, None, :], INF, cand)
+    out_ref[...] = jnp.stack(outs, axis=-1)            # [BV, F, K]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_v", "interpret"))
+def padded_topk(
+    cand: jax.Array, k: int, block_v: int = 8, interpret: bool = False,
+) -> jax.Array:
+    """cand: [Vv, C, F] (Vv multiple of block_v) -> [Vv, F, K]."""
+    vv, c, f = cand.shape
+    assert vv % block_v == 0, (vv, block_v)
+    grid = (vv // block_v,)
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_v, c, f), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_v, f, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((vv, f, k), cand.dtype),
+        interpret=interpret,
+    )(cand)

@@ -1,0 +1,19 @@
+"""Oracle for the padded-CSR top-K min reduce.
+
+Input: per-virtual-node candidate matrix ``cand[Vv, DMAX*K, F]`` (INF on
+padding).  Output: per virtual node and feature, the K smallest *distinct*
+candidates, sorted ascending, INF padded — i.e. the DKS "receive messages"
+reduce on the degree-decomposed layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.semiring import sorted_unique_k
+
+
+def padded_topk_ref(cand: jnp.ndarray, k: int) -> jnp.ndarray:
+    """cand: [Vv, C, F] -> [Vv, F, K]."""
+    x = jnp.swapaxes(cand, 1, 2)           # [Vv, F, C]
+    return sorted_unique_k(x, k)

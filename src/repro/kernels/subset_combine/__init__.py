@@ -1,0 +1,1 @@
+from repro.kernels.subset_combine.ops import subset_combine  # noqa: F401

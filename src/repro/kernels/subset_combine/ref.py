@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the min-plus subset convolution (top-K distinct).
+
+Semantics: for every node v and every split a ⊎ b = t,
+``S[v, t] <- topk_unique(S[v, t] ∪ (S[v, a] ⊕ S[v, b]))`` iterated to
+closure (popcount order ⇒ one sequential sweep suffices).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro import INF
+from repro.core.semiring import outer_combine, topk_merge
+from repro.core.spa import split_pairs
+
+
+def subset_combine_ref(S: jnp.ndarray, m: int) -> jnp.ndarray:
+    """S: [V, 2^m, K] -> closed [V, 2^m, K] (sequential, exact)."""
+    for t, a, b in split_pairs(m):
+        cand = outer_combine(S[:, a, :], S[:, b, :])
+        S = S.at[:, t, :].set(topk_merge(S[:, t, :], cand))
+    return S

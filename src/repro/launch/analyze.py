@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Hillclimb helper: compile one cell and print the roofline breakdown —
+top HBM-traffic ops, top collectives, loop multipliers — so each
+hypothesis->change->measure iteration is one command:
+
+    PYTHONPATH=src python -m repro.launch.analyze --cell command-r-plus-104b__train_4k
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax  # noqa: E402
+
+from repro.analysis import hlo as H
+from repro.analysis import build_roofline
+from repro.launch import cells as cells_mod
+from repro.launch.mesh import make_production_mesh, sharding_tree
+
+
+def compile_cell(cell_name: str, multi_pod: bool = False):
+    n_shards = 512 if multi_pod else 256
+    if cell_name.startswith("dks-"):
+        ds = cell_name.split("__")[0][len("dks-"):]
+        if "dense" in cell_name:
+            cell = cells_mod.dks_cell_dense(ds)
+        else:
+            cell = cells_mod.dks_cell(ds, n_shards=n_shards)
+    else:
+        arch, shape = cell_name.split("__")
+        cell = cells_mod.build_cell(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    in_sh = tuple(sharding_tree(mesh, s) for s in cell.in_specs)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(cell.fn, in_shardings=in_sh,
+                           donate_argnums=cell.donate
+                           ).lower(*cell.args).compile()
+    return cell, mesh, compiled
+
+
+def breakdown(compiled, top: int = 25):
+    text = compiled.as_text()
+    comps = H.parse_hlo(text)
+    summary = H.analyze_hlo(text)
+
+    entry = next(c for c in comps.values() if c.is_entry)
+    inlined = set()
+    for c in comps.values():
+        for op in c.ops:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.attrs):
+                inlined.add(m.group(1))
+
+    # Recompute multipliers (mirrors analyze_hlo).
+    mult = defaultdict(float)
+    mult[entry.name] = 1.0
+    stack = [entry.name]
+    seen_edges = set()
+    loops = []
+    while stack:
+        cn = stack.pop()
+        c = comps.get(cn)
+        if c is None:
+            continue
+        for op in c.ops:
+            if op.opcode == "while":
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.attrs)
+                mb = re.search(r"body=%?([\w\.\-]+)", op.attrs)
+                if not (mc and mb):
+                    continue
+                tc = H._trip_count(comps, mc.group(1)) or 1
+                loops.append((cn, mb.group(1), tc, mult[cn]))
+                for child in (mb.group(1), mc.group(1)):
+                    e = (cn, child, op.name)
+                    if e not in seen_edges:
+                        seen_edges.add(e)
+                        mult[child] += mult[cn] * tc
+                        stack.append(child)
+            else:
+                for m in re.finditer(
+                        r"(?:calls|to_apply|true_computation|false_computation"
+                        r")=%?([\w\.\-]+)", op.attrs):
+                    e = (cn, m.group(1), op.name)
+                    if e not in seen_edges:
+                        seen_edges.add(e)
+                        mult[m.group(1)] += mult[cn]
+                        stack.append(m.group(1))
+
+    rows = []
+    colls = []
+    for c in comps.values():
+        m_here = mult.get(c.name, 0.0)
+        if m_here == 0:
+            continue
+        for op in c.ops:
+            base = op.opcode.replace("-start", "")
+            if base in H.COLLECTIVES:
+                nbytes = (H._shape_bytes(op.result_type) if base == "all-gather"
+                          else sum(H._shape_bytes(c.types.get(o, ""))
+                                   for o in op.operands))
+                colls.append((m_here * nbytes, m_here, base, op.result_type[:60],
+                              c.name[:40]))
+            if c.name in inlined or op.opcode in H._SKIP_TRAFFIC:
+                continue
+            t = H._op_traffic(op, c, comps) * m_here
+            rows.append((t, m_here, op.opcode, op.result_type[:60], c.name[:40]))
+    rows.sort(reverse=True)
+    colls.sort(reverse=True)
+    return summary, loops, rows[:top], colls[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    cell, mesh, compiled = compile_cell(args.cell, args.multi_pod)
+    mem = compiled.memory_analysis()
+    summary, loops, rows, colls = breakdown(compiled, args.top)
+    chips = mesh.devices.size
+    terms = build_roofline(cell.arch_id, cell.shape_name,
+                           "multi" if args.multi_pod else "single",
+                           chips, summary, cell.model_flops)
+    gib = 2**30
+    print(f"== {cell.name}  ({cell.notes}) ==")
+    print(f"mem: arg={mem.argument_size_in_bytes/gib:.2f} "
+          f"temp={mem.temp_size_in_bytes/gib:.2f} "
+          f"out={mem.output_size_in_bytes/gib:.2f} "
+          f"alias={mem.alias_size_in_bytes/gib:.2f} GiB/dev")
+    print(f"t_compute={terms.t_compute:.3e}s t_memory={terms.t_memory:.3e}s "
+          f"t_collective={terms.t_collective:.3e}s -> {terms.bottleneck}")
+    print(f"HLO dot TFLOP/dev={summary.dot_flops/1e12:.2f} "
+          f"traffic TB/dev={summary.traffic_bytes/1e12:.3f} "
+          f"wire GB/dev={summary.total_collective_bytes()/1e9:.2f} "
+          f"useful={100*terms.useful_flops_frac:.1f}%")
+    print(f"\nloops (parent, body, trip, parent_mult):")
+    for l in loops[:12]:
+        print(f"  {l[0][:36]:36s} -> {l[1][:36]:36s} trip={l[2]:<6d} m={l[3]:.0f}")
+    print(f"\ntop HBM-traffic ops (GiB/dev, mult, opcode, shape, comp):")
+    for t, m, opc, ty, cn in rows:
+        print(f"  {t/gib:9.2f}  x{m:<7.0f} {opc:22s} {ty:44s} {cn}")
+    print(f"\ntop collectives (GiB/dev, mult, type, shape, comp):")
+    for t, m, base, ty, cn in colls:
+        print(f"  {t/gib:9.2f}  x{m:<7.0f} {base:20s} {ty:44s} {cn}")
+
+
+if __name__ == "__main__":
+    main()

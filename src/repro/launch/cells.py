@@ -1,0 +1,496 @@
+"""Cell catalog: every (architecture x input-shape) pair as a lowerable unit.
+
+A Cell bundles the step function (train_step / serve_step / retrieval /
+DKS superstep), ShapeDtypeStruct arguments (weak-type-correct, shardable,
+zero allocation) and PartitionSpec trees for jit in_shardings.  The dry-run
+lowers + compiles each cell on the production meshes; the roofline reads
+the compiled artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, DKS_CONFIGS, get_arch
+from repro.configs.base import GNNShape, LMShape, RecsysShape
+from repro.core.dks import DKSConfig, DKSState
+from repro.graph.structure import DeviceGraph
+from repro.models import gnn as gnn_lib
+from repro.models import lm as lm_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tfm
+from repro.models.gnn import GraphBatch
+from repro.optim import AdamWConfig, OptState
+import repro.analysis.roofline as rl
+
+DP = ("pod", "data")
+TP = ("model",)
+ALL = ("pod", "data", "model")
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def pad_to(x: int, m: int) -> int:
+    return int(-(-x // m) * m)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_specs: tuple          # pytree-of-P matching args
+    donate: tuple = ()
+    model_flops: float = 0.0
+    static_argnums: tuple = ()
+    notes: str = ""
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch_id}__{self.shape_name}"
+
+
+def _tree_specs(tree, spec) -> Any:
+    """Broadcast one P to every leaf of a pytree."""
+    return jax.tree_util.tree_map(lambda _: spec, tree)
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+
+def _lm_state_specs(b: tfm.BuiltLM):
+    ps = tfm.param_specs(b)
+    return lm_lib.TrainState(
+        params=ps,
+        opt=OptState(mu=ps, nu=ps, count=P()),
+        step=P(),
+    )
+
+
+def _lm_grad_accum(cfg, shape: LMShape) -> int:
+    """Activation-memory heuristic.  With sequence-parallel residual
+    carries the saved stack shards over dp x tp (256-way), so ~2 GB of
+    pre-SP-equivalent activations per chip keeps the measured temp
+    footprint well inside 16 GiB while minimizing FSDP weight regathers."""
+    tokens = shape.seq_len * shape.global_batch
+    act_bytes = tokens * cfg.d_model * 2 * cfg.n_layers  # saved layer inputs
+    per_chip = act_bytes / 256
+    # >50B-param models carry f32 grad/optimizer transients of several GiB,
+    # so their activation budget is tighter (measured; §Perf B7).
+    budget = 0.5e9 if cfg.param_count_analytic() > 5e10 else 2e9
+    accum = 1
+    while per_chip / accum > budget and accum < shape.global_batch:
+        accum *= 2
+    return accum
+
+
+def lm_cell(arch_id: str, shape: LMShape, tp: int = 16) -> Cell:
+    cfg = get_arch(arch_id).config
+    b = tfm.build(cfg, tp=tp)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        accum = _lm_grad_accum(cfg, shape)
+        step = lm_lib.make_train_step(
+            b, AdamWConfig(), attn_impl="flash_jax" if shape.seq_len > 2048
+            else "naive", grad_accum=accum)
+        state = jax.eval_shape(lambda k: lm_lib.init_train_state(k, b), key)
+        batch = {
+            "tokens": sds((shape.global_batch, shape.seq_len), jnp.int32),
+            "labels": sds((shape.global_batch, shape.seq_len), jnp.int32),
+        }
+        in_specs = (_lm_state_specs(b),
+                    {"tokens": P(DP, None), "labels": P(DP, None)})
+        return Cell(arch_id, shape.name, "train", step, (state, batch),
+                    in_specs, donate=(0,),
+                    model_flops=rl.model_flops_lm(cfg, shape),
+                    notes=f"grad_accum={accum}")
+
+    if shape.kind == "prefill":
+        fn = lm_lib.make_prefill_step(b, attn_impl="flash_jax")
+        params = jax.eval_shape(lambda k: tfm.init_params(k, b), key)
+        tokens = sds((shape.global_batch, shape.seq_len), jnp.int32)
+        in_specs = (tfm.param_specs(b), P(DP, None))
+        return Cell(arch_id, shape.name, "prefill", fn, (params, tokens),
+                    in_specs, model_flops=rl.model_flops_lm(cfg, shape))
+
+    # decode: one new token against a seq_len KV cache.
+    fn = lm_lib.make_decode_step(b, attn_impl="naive")
+    params = jax.eval_shape(lambda k: tfm.init_params(k, b), key)
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(b, shape.global_batch, shape.seq_len))
+    tokens = sds((shape.global_batch, 1), jnp.int32)
+    # Tiny batches (long_500k B=1) can't shard batch over data: put the KV
+    # sequence axis over (data, model) instead and replicate batch.
+    if shape.global_batch >= 32:
+        batch_spec, seq_axes = DP, TP
+    else:
+        batch_spec, seq_axes = None, ("data", "model")
+    cache_spec = {"k": P(None, batch_spec, seq_axes, None, None),
+                  "v": P(None, batch_spec, seq_axes, None, None),
+                  "pos": P()}
+    in_specs = (tfm.param_specs(b), cache_spec, P(batch_spec, None))
+    return Cell(arch_id, shape.name, "decode", fn, (params, cache, tokens),
+                in_specs, donate=(1,),
+                model_flops=rl.model_flops_lm(cfg, shape))
+
+
+def lm_pp_cell(arch_id: str, shape_name: str = "train_4k", tp: int = 16,
+               n_stages: int = 2, n_micro: int = 16) -> Cell:
+    """Pipeline-parallel train cell: layers stage-sharded over "pod" with
+    the GPipe schedule (models/pipeline.py).  Multi-pod mesh only — PP is
+    the parallelism for the slow cross-pod hop."""
+    from repro.models import pipeline as pp_lib
+
+    cfg = get_arch(arch_id).config
+    shape = next(s for s in get_arch(arch_id).shapes if s.name == shape_name)
+    b = tfm.build(cfg, tp=tp)
+    key = jax.random.PRNGKey(0)
+    step = pp_lib.make_pp_train_step(
+        b, AdamWConfig(), n_stages=n_stages, n_micro=n_micro,
+        attn_impl="flash_jax")
+    state = jax.eval_shape(lambda k: lm_lib.init_train_state(k, b), key)
+    batch = {
+        "tokens": sds((shape.global_batch, shape.seq_len), jnp.int32),
+        "labels": sds((shape.global_batch, shape.seq_len), jnp.int32),
+    }
+    ps = pp_lib.stage_layer_specs(b)
+    state_spec = lm_lib.TrainState(
+        params=ps, opt=OptState(mu=ps, nu=ps, count=P()), step=P())
+    in_specs = (state_spec, {"tokens": P(("data",), None),
+                             "labels": P(("data",), None)})
+    return Cell(arch_id, f"{shape_name}_pp{n_stages}", "train", step,
+                (state, batch), in_specs, donate=(0,),
+                model_flops=rl.model_flops_lm(cfg, shape),
+                notes=f"GPipe n_stages={n_stages} n_micro={n_micro}")
+
+
+def lm_decode_quant_cell(arch_id: str, shape_name: str, tp: int = 16) -> Cell:
+    """Decode cell variant with the int8 KV cache (beyond-paper lever for
+    the decode cells whose bf16 cache exceeds 16 GiB; EXPERIMENTS §Perf)."""
+    from repro.models import kvcache
+
+    cfg = get_arch(arch_id).config
+    shape = next(s for s in get_arch(arch_id).shapes if s.name == shape_name)
+    b = tfm.build(cfg, tp=tp)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: tfm.init_params(k, b), key)
+    cache = jax.eval_shape(
+        lambda: kvcache.init_cache_quant(b, shape.global_batch,
+                                         shape.seq_len))
+    tokens = sds((shape.global_batch, 1), jnp.int32)
+    if shape.global_batch >= 32:
+        batch_spec, seq_axes = DP, TP
+    else:
+        batch_spec, seq_axes = None, ("data", "model")
+    cspec = {k: P(None, batch_spec, seq_axes, None, None)
+             for k in ("k_q", "k_s", "v_q", "v_s")}
+    cspec["pos"] = P()
+
+    def fn(params, cache, tokens):
+        logits, cache = tfm.decode_step_quant(params, cache, tokens, b)
+        nxt = jnp.argmax(logits[:, -1, : cfg.vocab], axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    return Cell(arch_id, f"{shape_name}_int8kv", "decode", fn,
+                (params, cache, tokens),
+                (tfm.param_specs(b), cspec, P(batch_spec, None)),
+                donate=(1,), model_flops=rl.model_flops_lm(cfg, shape),
+                notes="int8 KV cache")
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+
+
+def _gnn_train_step(cfg, opt_cfg: AdamWConfig):
+    from repro.optim import adamw_update
+
+    def step(state: lm_lib.TrainState, batch: GraphBatch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_lib.gnn_loss(p, batch, cfg))(state.params)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        return (lm_lib.TrainState(params=new_params, opt=new_opt,
+                                  step=state.step + 1),
+                {"loss": loss, **metrics})
+
+    return step
+
+
+def gnn_cell(arch_id: str, shape: GNNShape, mesh_divisor: int = 512) -> Cell:
+    cfg = get_arch(arch_id).config
+    # Production cells run bf16 message passing (halves edge-gather wire
+    # and HBM bytes; accumulation in f32 — §Perf hillclimb).
+    cfg = dataclasses.replace(cfg, mp_dtype="bfloat16")
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "minibatch":
+        from repro.graph.sampler import plan_sizes
+        n_nodes, n_edges = plan_sizes(shape.batch_nodes, list(shape.fanout))
+        n_graphs = 1
+    elif shape.kind == "molecule":
+        n_nodes = shape.n_nodes * shape.batch_graphs
+        n_edges = shape.n_edges * shape.batch_graphs
+        n_graphs = shape.batch_graphs
+    else:
+        n_nodes, n_edges, n_graphs = shape.n_nodes, shape.n_edges, 1
+
+    n_pad = pad_to(n_nodes, mesh_divisor)
+    e_pad = pad_to(n_edges, mesh_divisor)
+    d_feat = max(shape.d_feat, 1)
+
+    graph_level = n_graphs > 1
+    label_len = n_graphs if (graph_level or cfg.family == "schnet") else n_pad
+    label_dtype = jnp.float32 if cfg.family == "schnet" else jnp.int32
+    batch = GraphBatch(
+        x=sds((n_pad, d_feat), jnp.float32),
+        edge_src=sds((e_pad,), jnp.int32),
+        edge_dst=sds((e_pad,), jnp.int32),
+        node_mask=sds((n_pad,), jnp.bool_),
+        edge_mask=sds((e_pad,), jnp.bool_),
+        labels=sds((max(label_len, 1),), label_dtype),
+        graph_ids=sds((n_pad,), jnp.int32),
+        positions=sds((n_pad, 3), jnp.float32),
+        n_graphs=n_graphs,
+    )
+    params = jax.eval_shape(
+        lambda k: gnn_lib.init_gnn(k, cfg, d_in=d_feat), key)
+    state = lm_lib.TrainState(
+        params=params,
+        opt=OptState(
+            mu=jax.tree_util.tree_map(
+                lambda p: sds(p.shape, jnp.float32), params),
+            nu=jax.tree_util.tree_map(
+                lambda p: sds(p.shape, jnp.float32), params),
+            count=sds((), jnp.int32)),
+        step=sds((), jnp.int32))
+
+    step = _gnn_train_step(cfg, AdamWConfig())
+    label_spec = P(None) if label_len < 4096 else P(ALL)
+    batch_specs = GraphBatch(
+        x=P(ALL, None), edge_src=P(ALL), edge_dst=P(ALL),
+        node_mask=P(ALL), edge_mask=P(ALL), labels=label_spec,
+        graph_ids=P(ALL), positions=P(ALL, None), n_graphs=n_graphs)
+    param_spec = _tree_specs(params, P())
+    state_spec = lm_lib.TrainState(
+        params=param_spec,
+        opt=OptState(mu=param_spec, nu=param_spec, count=P()),
+        step=P())
+    return Cell(arch_id, shape.name, "gnn_train", step, (state, batch),
+                (state_spec, batch_specs), donate=(0,),
+                model_flops=rl.model_flops_gnn(cfg, shape, n_nodes, n_edges),
+                notes=f"n_pad={n_pad} e_pad={e_pad}")
+
+
+# --------------------------------------------------------------------------
+# Recsys cells
+# --------------------------------------------------------------------------
+
+
+def _rec_train_step(cfg, opt_cfg: AdamWConfig):
+    from repro.optim import adamw_update
+
+    def step(state: lm_lib.TrainState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: rec_lib.dcn_loss(p, batch, cfg))(state.params)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        return (lm_lib.TrainState(params=new_params, opt=new_opt,
+                                  step=state.step + 1),
+                {"loss": loss, **metrics})
+
+    return step
+
+
+def recsys_cell(arch_id: str, shape: RecsysShape) -> Cell:
+    cfg = get_arch(arch_id).config
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: rec_lib.init_dcn(k, cfg), key)
+    pspec = rec_lib.param_specs(cfg)
+
+    if shape.kind == "train":
+        batch = {
+            "dense": sds((shape.batch, cfg.n_dense), jnp.float32),
+            "sparse": sds((shape.batch, cfg.n_sparse), jnp.int32),
+            "label": sds((shape.batch,), jnp.int32),
+        }
+        state = lm_lib.TrainState(
+            params=params,
+            opt=OptState(
+                mu=jax.tree_util.tree_map(
+                    lambda p: sds(p.shape, jnp.float32), params),
+                nu=jax.tree_util.tree_map(
+                    lambda p: sds(p.shape, jnp.float32), params),
+                count=sds((), jnp.int32)),
+            step=sds((), jnp.int32))
+        state_spec = lm_lib.TrainState(
+            params=pspec, opt=OptState(mu=pspec, nu=pspec, count=P()),
+            step=P())
+        bspec = {"dense": P(DP, None), "sparse": P(DP, None),
+                 "label": P(DP)}
+        step = _rec_train_step(cfg, AdamWConfig())
+        return Cell(arch_id, shape.name, "rec_train", step, (state, batch),
+                    (state_spec, bspec), donate=(0,),
+                    model_flops=rl.model_flops_recsys(cfg, shape))
+
+    if shape.kind == "serve":
+        fn = functools.partial(rec_lib.dcn_forward, cfg=cfg)
+        dense = sds((shape.batch, cfg.n_dense), jnp.float32)
+        sparse = sds((shape.batch, cfg.n_sparse), jnp.int32)
+        return Cell(arch_id, shape.name, "rec_serve", fn,
+                    (params, dense, sparse),
+                    (pspec, P(DP, None), P(DP, None)),
+                    model_flops=rl.model_flops_recsys(cfg, shape))
+
+    # retrieval: 1 query vs 1M candidates (padded to the mesh).
+    n_cand = pad_to(shape.n_candidates, 512)
+    fn = functools.partial(rec_lib.retrieval_scores, cfg=cfg, top_k=100)
+    dense = sds((shape.batch, cfg.n_dense), jnp.float32)
+    sparse = sds((shape.batch, cfg.n_sparse), jnp.int32)
+    cand = sds((n_cand,), jnp.int32)
+    return Cell(arch_id, shape.name, "rec_retrieval", fn,
+                (params, dense, sparse, cand),
+                (pspec, P(None, None), P(None, None), P(ALL)),
+                model_flops=rl.model_flops_recsys(cfg, shape),
+                notes=f"n_cand_pad={n_cand}")
+
+
+# --------------------------------------------------------------------------
+# DKS cells (the paper's technique on the production mesh)
+# --------------------------------------------------------------------------
+
+
+def dks_cell(ds_name: str, m: int = 4, k: int = 2,
+             n_shards: int = 256) -> Cell:
+    """DKS superstep with frontier-compressed relax (post-hillclimb; the
+    dense-relax baseline is dks_cell_dense)."""
+    from repro.core import dks_sharded
+
+    ds = DKS_CONFIGS[ds_name]
+    v_pad = pad_to(ds.n_nodes, max(512, n_shards))
+    e_sym = 2 * ds.n_edges
+    n_sets = 1 << m
+    e_cap = pad_to(int(e_sym / n_shards * 1.2), 8)
+    graph = dks_sharded.FrontierGraph(
+        edge_src=sds((n_shards, e_cap), jnp.int32),
+        edge_dst_l=sds((n_shards, e_cap), jnp.int32),
+        edge_w=sds((n_shards, e_cap), jnp.float32),
+        out_degree=sds((v_pad,), jnp.int32),
+        node_valid=sds((v_pad,), jnp.bool_),
+        n_nodes=ds.n_nodes, n_edges=e_sym, n_shards=n_shards)
+    state = DKSState(
+        S=sds((v_pad, n_sets, k), jnp.float32),
+        changed=sds((v_pad,), jnp.bool_),
+        first_fire=sds((v_pad,), jnp.bool_),
+        visited=sds((v_pad,), jnp.bool_),
+        g=sds((n_sets,), jnp.float32),
+        s_front=sds((n_sets,), jnp.float32),
+        topk_w=sds((k,), jnp.float32),
+        topk_root=sds((k,), jnp.int32),
+        msgs_bfs=sds((), jnp.float32), msgs_deep=sds((), jnp.float32),
+        step=sds((), jnp.int32), done=sds((), jnp.bool_),
+        budget_hit=sds((), jnp.bool_))
+    cfg = DKSConfig(m=m, k=k, max_supersteps=64)
+    fn = functools.partial(dks_sharded.superstep_frontier, cfg=cfg)
+
+    # Sharding (post-hillclimb, EXPERIMENTS.md §Perf): node axis over ALL
+    # mesh axes, keyword-set axis replicated -> subset-combine is fully
+    # node-local; relax exchanges only the packed frontier.
+    gspec = dks_sharded.FrontierGraph(
+        edge_src=P(ALL, None), edge_dst_l=P(ALL, None),
+        edge_w=P(ALL, None),
+        out_degree=P(ALL), node_valid=P(ALL),
+        n_nodes=ds.n_nodes, n_edges=e_sym, n_shards=n_shards)
+    sspec = DKSState(
+        S=P(ALL, None, None), changed=P(ALL), first_fire=P(ALL),
+        visited=P(ALL),
+        g=P(None), s_front=P(None), topk_w=P(None), topk_root=P(None),
+        msgs_bfs=P(), msgs_deep=P(), step=P(), done=P(), budget_hit=P())
+    return Cell(f"dks-{ds_name}", f"superstep_m{m}_k{k}", "dks", fn,
+                (graph, state), (gspec, sspec), donate=(1,),
+                model_flops=rl.model_flops_dks(ds.n_nodes, e_sym, m, k),
+                notes=f"V={ds.n_nodes} E_sym={e_sym} shards={n_shards}")
+
+
+def dks_cell_dense(ds_name: str, m: int = 4, k: int = 2) -> Cell:
+    """Baseline dense-relax DKS cell (nodes over DP, keyword-sets over TP)
+    — kept for the §Perf before/after comparison."""
+    from repro.core import dks as dks_mod
+
+    ds = DKS_CONFIGS[ds_name]
+    v_pad = pad_to(ds.n_nodes, 512)
+    e_sym = 2 * ds.n_edges
+    e_pad = pad_to(e_sym, 512)
+    n_sets = 1 << m
+    graph = DeviceGraph(
+        src=sds((e_pad,), jnp.int32), dst=sds((e_pad,), jnp.int32),
+        w=sds((e_pad,), jnp.float32), valid=sds((e_pad,), jnp.bool_),
+        out_degree=sds((v_pad,), jnp.int32),
+        node_valid=sds((v_pad,), jnp.bool_),
+        n_nodes=ds.n_nodes, n_edges=e_sym)
+    state = DKSState(
+        S=sds((v_pad, n_sets, k), jnp.float32),
+        changed=sds((v_pad,), jnp.bool_),
+        first_fire=sds((v_pad,), jnp.bool_),
+        visited=sds((v_pad,), jnp.bool_),
+        g=sds((n_sets,), jnp.float32),
+        s_front=sds((n_sets,), jnp.float32),
+        topk_w=sds((k,), jnp.float32),
+        topk_root=sds((k,), jnp.int32),
+        msgs_bfs=sds((), jnp.float32), msgs_deep=sds((), jnp.float32),
+        step=sds((), jnp.int32), done=sds((), jnp.bool_),
+        budget_hit=sds((), jnp.bool_))
+    cfg = DKSConfig(m=m, k=k, max_supersteps=64)
+    fn = functools.partial(dks_mod.superstep, cfg=cfg)
+    gspec = DeviceGraph(
+        src=P(DP), dst=P(DP), w=P(DP), valid=P(DP),
+        out_degree=P(DP), node_valid=P(DP),
+        n_nodes=ds.n_nodes, n_edges=e_sym)
+    sspec = DKSState(
+        S=P(DP, TP, None), changed=P(DP), first_fire=P(DP), visited=P(DP),
+        g=P(None), s_front=P(None), topk_w=P(None), topk_root=P(None),
+        msgs_bfs=P(), msgs_deep=P(), step=P(), done=P(), budget_hit=P())
+    return Cell(f"dks-{ds_name}", f"superstep_dense_m{m}_k{k}", "dks", fn,
+                (graph, state), (gspec, sspec), donate=(1,),
+                model_flops=rl.model_flops_dks(ds.n_nodes, e_sym, m, k),
+                notes=f"V={ds.n_nodes} E_sym={e_sym} dense-relax baseline")
+
+
+# --------------------------------------------------------------------------
+# Catalog
+# --------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, tp: int = 16) -> Cell:
+    entry = get_arch(arch_id)
+    shape = next(s for s in entry.shapes if s.name == shape_name)
+    if entry.family == "lm":
+        return lm_cell(arch_id, shape, tp=tp)
+    if entry.family == "gnn":
+        return gnn_cell(arch_id, shape)
+    return recsys_cell(arch_id, shape)
+
+
+def all_assigned_cells(tp: int = 16) -> list[tuple[str, str]]:
+    return [(a.arch_id, s.name) for a in ARCHS.values() for s in a.shapes]
+
+
+def dks_cells(n_shards: int = 256) -> list[Cell]:
+    return [dks_cell("sec-rdfabout", n_shards=n_shards),
+            dks_cell("bluk-bnb", n_shards=n_shards),
+            dks_cell_dense("bluk-bnb")]

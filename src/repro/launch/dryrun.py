@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any jax import so the host platform
+exposes 512 placeholder devices for the production meshes.
+
+Per cell it records:
+  - memory_analysis (per-device bytes: args/outputs/temps) -> proves it fits
+  - cost_analysis flops/bytes (XLA's own numbers, loop bodies counted once)
+  - trip-count-corrected HLO flops / traffic / collective bytes (hlo.py)
+  - the three roofline terms (roofline.py)
+as JSON under experiments/dryrun/<mesh>/<cell>.json, which EXPERIMENTS.md
+§Dry-run and §Roofline read.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax  # noqa: E402  (after XLA_FLAGS on purpose)
+
+from repro.analysis import analyze_hlo, build_roofline
+from repro.launch import cells as cells_mod
+from repro.launch.mesh import make_production_mesh, sharding_tree
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(cell, mesh, mesh_name: str, out_dir: Path,
+             save_hlo: bool = False) -> dict:
+    t0 = time.time()
+    in_shardings = tuple(sharding_tree(mesh, s) for s in cell.in_specs)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, in_shardings=in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    summary = analyze_hlo(text)
+    chips = mesh.devices.size
+    terms = build_roofline(cell.arch_id, cell.shape_name, mesh_name, chips,
+                           summary, cell.model_flops)
+    rec = {
+        "cell": cell.name,
+        "arch": cell.arch_id,
+        "shape": cell.shape_name,
+        "kind": cell.kind,
+        "mesh": mesh_name,
+        "chips": chips,
+        "compile_s": round(t1 - t0, 2),
+        "notes": cell.notes,
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "total_nonaliased": int(mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+        },
+        "cost_analysis": {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        },
+        "hlo": {
+            "dot_flops": summary.dot_flops,
+            "traffic_bytes": summary.traffic_bytes,
+            "collective_bytes": summary.collective_bytes,
+            "collective_counts": summary.collective_counts,
+            "wire_bytes": summary.total_collective_bytes(),
+            "dynamic_loops": summary.dynamic_loops,
+            "static_loops": summary.static_loops,
+            "n_dots": summary.n_dots,
+        },
+        "roofline": terms.as_row(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell.name}.json").write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        (out_dir / f"{cell.name}.hlo.txt").write_text(text)
+    return rec
+
+
+def iter_cells(only=None, dks=True, tp=16, n_shards=256):
+    for arch_id, shape_name in cells_mod.all_assigned_cells():
+        if only and only not in f"{arch_id}__{shape_name}":
+            continue
+        yield lambda a=arch_id, s=shape_name: cells_mod.build_cell(a, s, tp=tp)
+    if dks and not only or (only and "dks" in only):
+        for make in (lambda: cells_mod.dks_cell("sec-rdfabout",
+                                                n_shards=n_shards),
+                     lambda: cells_mod.dks_cell("bluk-bnb",
+                                                n_shards=n_shards),
+                     lambda: cells_mod.dks_cell_dense("bluk-bnb")):
+            c_probe = make
+            yield c_probe
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on <arch>__<shape>")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--stop-on-error", action="store_true")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multipod2x16x16", make_production_mesh(multi_pod=True)))
+
+    failures = []
+    n_ok = 0
+    for mesh_name, mesh in meshes:
+        out_dir = OUT_DIR / mesh_name
+        for make in iter_cells(only=args.only, n_shards=mesh.devices.size):
+            try:
+                cell = make()
+                if args.only and args.only not in cell.name:
+                    continue
+                rec = run_cell(cell, mesh, mesh_name, out_dir,
+                               save_hlo=args.save_hlo)
+                r = rec["roofline"]
+                print(f"[OK] {mesh_name} {rec['cell']:<48s} "
+                      f"compile={rec['compile_s']:7.1f}s "
+                      f"mem={rec['memory']['total_nonaliased']/2**30:7.2f}GiB "
+                      f"t_c={r['t_compute']:.3e} t_m={r['t_memory']:.3e} "
+                      f"t_x={r['t_collective']:.3e} bott={r['bottleneck']}",
+                      flush=True)
+                n_ok += 1
+            except Exception as e:  # noqa: BLE001
+                name = getattr(locals().get("cell"), "name", "<build failed>")
+                print(f"[FAIL] {mesh_name} {name}: {e}", flush=True)
+                traceback.print_exc()
+                failures.append((mesh_name, name, str(e)))
+                if args.stop_on_error:
+                    return 1
+    print(f"\n{n_ok} cells OK, {len(failures)} failed")
+    for f in failures:
+        print("FAILED:", *f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys — pure-functional
+JAX models with mesh-agnostic sharding constraints."""

@@ -1,0 +1,313 @@
+"""GQA attention: naive, chunked (flash-style online softmax in pure JAX,
+used by the 512-device dry-run where Pallas cannot lower on the host
+platform), and the Pallas flash kernel for real TPUs.
+
+Layouts: q [B, Sq, Hq, Dh]; k/v [B, Skv, Hkv, Dh]; GQA groups G = Hq // Hkv.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DP, TP, constrain
+
+NEG_INF = -1e30
+
+
+def rotary(x: jax.Array, positions: jax.Array, pct: float = 1.0,
+           theta: float = 10000.0) -> jax.Array:
+    """NeoX-style rotary embedding on the first ``pct`` of head dims.
+
+    x: [B, S, H, Dh]; positions: [B, S] (absolute token positions).
+    ``pct=0.5`` gives ChatGLM's 2d-RoPE (half the dims rotate).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([y1, y2, x_pass], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _naive(q, k, v, causal: bool, q_offset) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qr = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def _chunked(q, k, v, causal: bool, q_offset, block: int,
+             score_dtype=jnp.bfloat16) -> jax.Array:
+    """Online-softmax over KV blocks: O(Sq·block) live memory, the same
+    schedule the Pallas flash kernel implements on TPU.
+
+    ``score_dtype``: the [.., Sq, block] score/probability tensors are the
+    dominant HBM traffic of XLA attention (the Pallas kernel keeps them in
+    VMEM; XLA materializes them).  bf16 scores with f32 running max/sum
+    halve that traffic at ~4e-3 relative error (EXPERIMENTS.md §Perf it.2);
+    pass jnp.float32 for the full-precision baseline."""
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    if skv % block:
+        pad = block - skv % block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kvalid = jnp.arange(skv + pad) < skv
+    else:
+        pad = 0
+        kvalid = jnp.ones(skv, bool)
+    skv_p = skv + pad
+    nb = skv_p // block
+    qr = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    kb = k.reshape(b, nb, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kvalid_b = kvalid.reshape(nb, block)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    neg_big = jnp.asarray(-3e38 if score_dtype == jnp.float32 else -3e38,
+                          jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, valid, ib = xs
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, kblk,
+                            preferred_element_type=score_dtype)
+        logits = logits * jnp.asarray(scale, score_dtype)
+        kpos = ib * block + jnp.arange(block)
+        mask = valid[None, :]
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        else:
+            mask = jnp.broadcast_to(mask, (sq, block))
+        logits = jnp.where(mask[None, None, None],
+                           logits, jnp.asarray(NEG_INF, score_dtype))
+        # Running max/denominator stay f32; only the bulky [.., Sq, block]
+        # tensors live in score_dtype.
+        m_blk = jnp.max(logits, axis=-1).astype(jnp.float32)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp((logits - m_new[..., None].astype(score_dtype)))
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk)
+        acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kb, vb, kvalid_b, jnp.arange(nb)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+def _bias_2d(sq, block, ib, kvalid_blk, causal, q_offset, dtype):
+    """[Sq, block] additive mask (0 / -inf).  2D so the backward needs no
+    broadcasted 6D pred residual (add transposes without a mask)."""
+    kpos = ib * block + jnp.arange(block)
+    mask = kvalid_blk[None, :]
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    else:
+        mask = jnp.broadcast_to(mask, (sq, block))
+    return jnp.where(mask, 0.0, NEG_INF).astype(dtype)
+
+
+def _flash_fwd_scan(q, k, v, causal, q_offset, block, score_dtype):
+    """Forward online-softmax; returns (out f32, m, l) pre-normalization."""
+    b, sq, hq, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    pad = (-skv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kvalid = jnp.arange(skv + pad) < skv
+    nb = (skv + pad) // block
+    qr = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    kb = k.reshape(b, nb, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+    kvalid_b = kvalid.reshape(nb, block)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, valid, ib = xs
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, kblk,
+                            preferred_element_type=score_dtype)
+        logits = logits * jnp.asarray(scale, score_dtype)
+        bias = _bias_2d(sq, block, ib, valid, causal, q_offset, score_dtype)
+        logits = logits + bias[None, None, None]
+        m_blk = jnp.max(logits, axis=-1).astype(jnp.float32)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(logits - m_new[..., None].astype(score_dtype))
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk)
+        acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  (kb, vb, kvalid_b, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out, m, l  # out: [b, hkv, g, sq, dh] f32
+
+
+def make_flash_jax(causal: bool, q_offset: int, block: int,
+                   score_dtype=jnp.bfloat16):
+    """Flash attention with a hand-written VJP (pure JAX).
+
+    Autodiff of the chunked forward materializes f32 score cotangents and
+    remat-replays the whole forward scan; this custom backward recomputes
+    probabilities per block in ``score_dtype`` from (q, k, v, m, l) — the
+    FlashAttention-2 backward — roughly halving attention HBM traffic in
+    the compiled artifact (EXPERIMENTS.md §Perf it.3).
+    """
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, m, l = _flash_fwd_scan(q, k, v, causal, q_offset, block,
+                                    score_dtype)
+        b, hkv, g, sq, dh = out.shape
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hkv * g, dh
+                                                    ).astype(q.dtype)
+
+    def fwd(q, k, v):
+        out, m, l = _flash_fwd_scan(q, k, v, causal, q_offset, block,
+                                    score_dtype)
+        b, hkv, g, sq, dh = out.shape
+        o = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hkv * g, dh
+                                                 ).astype(q.dtype)
+        return o, (q, k, v, out, m, l)
+
+    def bwd(res, d_o):
+        q, k, v, out, m, l = res
+        b, sq, hq, dh = q.shape
+        _, skv, hkv, _ = k.shape
+        g = hq // hkv
+        scale = 1.0 / math.sqrt(dh)
+        pad = (-skv) % block
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kvalid = jnp.arange(skv + pad) < skv
+        nb = (skv + pad) // block
+        qr = q.reshape(b, sq, hkv, g, dh)
+        do = d_o.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+        do = do.astype(jnp.float32)                     # [b,hkv,g,sq,dh]
+        # delta = rowsum(dO * O); ``out`` in the residuals is already the
+        # normalized output.
+        delta = jnp.sum(do * out, axis=-1)              # [b,hkv,g,sq]
+        kb = k.reshape(b, nb, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+        vb = v.reshape(b, nb, block, hkv, dh).transpose(1, 0, 2, 3, 4)
+        kvalid_b = kvalid.reshape(nb, block)
+        linv = 1.0 / jnp.maximum(l, 1e-30)
+
+        def body(dq_acc, xs):
+            kblk, vblk, valid, ib = xs
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", qr, kblk,
+                                preferred_element_type=score_dtype)
+            logits = logits * jnp.asarray(scale, score_dtype)
+            bias = _bias_2d(sq, block, ib, valid, causal, q_offset,
+                            score_dtype)
+            logits = logits + bias[None, None, None]
+            p = jnp.exp(logits - m[..., None].astype(score_dtype))
+            p = p * linv[..., None].astype(score_dtype)   # normalized probs
+            do_c = do.astype(score_dtype)
+            dv = jnp.einsum("bhgqk,bhgqd->bkhd", p, do_c,
+                            preferred_element_type=jnp.float32
+                            ).astype(v.dtype)
+            # dp/ds stay in score_dtype: they are the other [.., Sq, block]
+            # giants; the dq/dk reductions accumulate in f32 via the einsum
+            # preferred type.
+            dp = jnp.einsum("bhgqd,bkhd->bhgqk", do_c,
+                            vblk.astype(score_dtype),
+                            preferred_element_type=score_dtype)
+            ds = p * (dp - delta[..., None].astype(score_dtype))
+            ds = ds * jnp.asarray(scale, score_dtype)
+            dq_blk = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kblk,
+                                preferred_element_type=jnp.float32)
+            dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qr,
+                            preferred_element_type=jnp.float32
+                            ).astype(k.dtype)
+            return dq_acc + dq_blk, (dk, dv)
+
+        dq0 = jnp.zeros((b, sq, hkv, g, dh), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(body, dq0,
+                                      (kb, vb, kvalid_b, jnp.arange(nb)))
+        dq = dq.reshape(b, sq, hq, dh).astype(q.dtype)
+        dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, skv + pad, hkv, dh)
+        dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, skv + pad, hkv, dh)
+        return dq, dk[:, :skv], dv[:, :skv]
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, impl: str = "auto",
+    q_offset: jax.Array | int = 0, block: int = 512,
+    score_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Dispatch across attention implementations.
+
+    impl="auto": decode (Sq small) -> naive einsum (linear in Skv, which is
+    the flash-decoding layout XLA partitions across a sequence-sharded KV
+    cache); long Sq -> chunked online-softmax; tiny -> naive.
+    """
+    sq, skv = q.shape[1], k.shape[1]
+    if impl == "auto":
+        if sq <= 16:
+            impl = "naive"
+        elif skv > 2048:
+            impl = "chunked"
+        else:
+            impl = "naive"
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal,
+                                      q_offset=q_offset, block=block)
+    if impl == "flash_jax":
+        fn = make_flash_jax(causal, int(q_offset), block, score_dtype)
+        return fn(q, k, v)
+    if impl == "chunked":
+        return _chunked(q, k, v, causal, q_offset, block, score_dtype)
+    if impl == "chunked_f32":
+        return _chunked(q, k, v, causal, q_offset, block, jnp.float32)
+    return _naive(q, k, v, causal, q_offset)

@@ -1,0 +1,418 @@
+"""GNN zoo: GAT, SchNet, GIN, PNA — segment-op message passing.
+
+JAX has no CSR/CSC sparse: message passing is gather (edge src) ->
+edge-compute -> ``segment_sum``/``segment_max`` scatter (edge dst), which is
+the same machinery the DKS relaxation uses (one shared substrate, per the
+paper's Pregel framing).  Node/edge axes shard over all mesh axes.
+
+Batch container works for all four shape regimes: full graphs (cora,
+ogb-products), fanout-sampled subgraphs (reddit minibatch) and batched
+molecules (graph_ids + graph-level readout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.common import constrain, dense_init, split_keys
+
+ALL_AXES = ("pod", "data", "model")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GraphBatch:
+    x: jax.Array            # f32[N, F] node features (or embedded atoms)
+    edge_src: jax.Array     # i32[E]
+    edge_dst: jax.Array     # i32[E]
+    node_mask: jax.Array    # bool[N]
+    edge_mask: jax.Array    # bool[E]
+    labels: jax.Array       # i32[N] (node tasks) or f32/i32[G] (graph tasks)
+    graph_ids: jax.Array    # i32[N] graph id per node (0 for single graph)
+    positions: jax.Array    # f32[N, 3] (schnet; zeros otherwise)
+    n_graphs: int = dataclasses.field(metadata=dict(static=True), default=1)
+
+
+def _seg_sum(vals, seg, n):
+    return jax.ops.segment_sum(vals, seg, num_segments=n)
+
+
+def _seg_max(vals, seg, n):
+    return jax.ops.segment_max(vals, seg, num_segments=n)
+
+
+def _seg_min(vals, seg, n):
+    return jax.ops.segment_min(vals, seg, num_segments=n)
+
+
+def _degree(batch: GraphBatch, n: int) -> jax.Array:
+    ones = batch.edge_mask.astype(jnp.float32)
+    return _seg_sum(ones, batch.edge_dst, n)
+
+
+def _mp_dtype(cfg: GNNConfig):
+    return jnp.bfloat16 if cfg.mp_dtype == "bfloat16" else jnp.float32
+
+
+def _gather_rows(h: jax.Array, idx: jax.Array, mpd) -> jax.Array:
+    """h[idx] across node shards with the node table cast to the
+    message-passing dtype BEFORE it crosses the wire.
+
+    Under plain pjit, XLA replicates the f32 table for the edge gather
+    (and f32 cotangments on the way back); this shard_map pins an explicit
+    bf16 all_gather, halving the GNN's dominant collective.  The backward
+    is the transpose (bf16 reduce-scatter of message cotangents)."""
+    am = jax.sharding.get_abstract_mesh()
+    axes = tuple(a for a in ALL_AXES if am is not None and a in am.axis_names)
+    if not axes:
+        return h.astype(mpd)[idx]
+    trailing = (None,) * (h.ndim - 1)
+
+    def block(h_loc, idx_loc):
+        h_all = jax.lax.all_gather(h_loc.astype(mpd), axes, axis=0,
+                                   tiled=True)
+        return h_all[idx_loc]
+
+    from jax.sharding import PartitionSpec as P
+    return jax.shard_map(
+        block, mesh=am,
+        in_specs=(P(axes, *trailing), P(axes)),
+        out_specs=P(axes, *trailing),
+        check_vma=False,
+    )(h, idx)
+
+
+def _edge_softmax(scores, dst, edge_mask, n):
+    """Segment softmax over incoming edges (GAT); f32 for stability."""
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(edge_mask[..., None] if scores.ndim > 1 else edge_mask,
+                       scores, -1e30)
+    mx = _seg_max(scores, dst, n)
+    ex = jnp.exp(scores - mx[dst])
+    ex = jnp.where(edge_mask[..., None] if scores.ndim > 1 else edge_mask,
+                   ex, 0.0)
+    den = _seg_sum(ex, dst, n)
+    return ex / jnp.maximum(den[dst], 1e-16)
+
+
+# --------------------------------------------------------------------------
+# GAT (arXiv:1710.10903): SDDMM edge scores -> segment softmax -> SpMM.
+# --------------------------------------------------------------------------
+
+
+def init_gat(key, cfg: GNNConfig, d_in: int) -> dict:
+    layers = []
+    keys = jax.random.split(key, cfg.n_layers)
+    d_prev = d_in
+    for li, k in enumerate(keys):
+        last = li == cfg.n_layers - 1
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        heads = 1 if last else cfg.n_heads
+        ks = split_keys(k, ["w", "a_src", "a_dst"])
+        layers.append({
+            "w": dense_init(ks["w"], (d_prev, heads * d_out), jnp.float32),
+            "a_src": dense_init(ks["a_src"], (heads, d_out), jnp.float32),
+            "a_dst": dense_init(ks["a_dst"], (heads, d_out), jnp.float32),
+        })
+        d_prev = d_out * (heads if not last else 1)
+    return {"layers": layers}
+
+
+def gat_forward(params: dict, batch: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    x = constrain(batch.x, ALL_AXES, None)
+    n = x.shape[0]
+    n_layers = len(params["layers"])
+    for li, lw in enumerate(params["layers"]):
+        last = li == n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = lw["w"].shape[1] // heads
+        h = (x @ lw["w"]).reshape(n, heads, d_out)
+        s_src = jnp.sum(h * lw["a_src"][None], axis=-1)   # [N, H]
+        s_dst = jnp.sum(h * lw["a_dst"][None], axis=-1)
+        e = jax.nn.leaky_relu(
+            s_src[batch.edge_src] + s_dst[batch.edge_dst], 0.2)  # [E, H]
+        alpha = _edge_softmax(e, batch.edge_dst, batch.edge_mask, n)
+        mpd = _mp_dtype(cfg)
+        h_src = _gather_rows(h.reshape(n, heads * d_out), batch.edge_src,
+                             mpd).reshape(-1, heads, d_out)
+        msg = h_src * alpha.astype(mpd)[..., None]        # [E, H, D]
+        agg = _seg_sum(msg, batch.edge_dst, n)            # stays mp_dtype
+        x = agg.reshape(n, heads * d_out) if not last else agg.mean(axis=1)
+        if not last:
+            x = jax.nn.elu(x)
+        x = constrain(x, ALL_AXES, None)
+    return x  # [N, n_classes] logits
+
+
+# --------------------------------------------------------------------------
+# GIN (arXiv:1810.00826): sum aggregation + MLP, learnable eps.
+# --------------------------------------------------------------------------
+
+
+def init_gin(key, cfg: GNNConfig, d_in: int) -> dict:
+    layers = []
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    d_prev = d_in
+    for k in keys[:-1]:
+        ks = split_keys(k, ["w1", "w2"])
+        layers.append({
+            "w1": dense_init(ks["w1"], (d_prev, cfg.d_hidden), jnp.float32),
+            "b1": jnp.zeros((cfg.d_hidden,), jnp.float32),
+            "w2": dense_init(ks["w2"], (cfg.d_hidden, cfg.d_hidden), jnp.float32),
+            "b2": jnp.zeros((cfg.d_hidden,), jnp.float32),
+            "eps": jnp.zeros((), jnp.float32),
+        })
+        d_prev = cfg.d_hidden
+    out = dense_init(keys[-1], (cfg.d_hidden, cfg.n_classes), jnp.float32)
+    return {"layers": layers, "out": out}
+
+
+def gin_forward(params: dict, batch: GraphBatch, cfg: GNNConfig,
+                graph_level: bool = False) -> jax.Array:
+    x = constrain(batch.x, ALL_AXES, None)
+    n = x.shape[0]
+    mpd = _mp_dtype(cfg)
+    for lw in params["layers"]:
+        msg = jnp.where(batch.edge_mask[:, None],
+                        x.astype(mpd)[batch.edge_src], jnp.asarray(0, mpd))
+        agg = _seg_sum(msg, batch.edge_dst, n)            # stays mp_dtype
+        h = (1.0 + lw["eps"]) * x.astype(mpd) + agg
+        h = jax.nn.relu(h @ lw["w1"] + lw["b1"])
+        x = jax.nn.relu(h @ lw["w2"] + lw["b2"])
+        x = constrain(x, ALL_AXES, None)
+    if graph_level:
+        pooled = _seg_sum(jnp.where(batch.node_mask[:, None], x, 0.0),
+                          batch.graph_ids, batch.n_graphs)
+        return pooled @ params["out"]                    # [G, classes]
+    return x @ params["out"]                             # [N, classes]
+
+
+# --------------------------------------------------------------------------
+# PNA (arXiv:2004.05718): mean/max/min/std aggregators x id/amp/atten scalers.
+# --------------------------------------------------------------------------
+
+
+def init_pna(key, cfg: GNNConfig, d_in: int, delta: float = 2.5) -> dict:
+    layers = []
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    d_prev = d_in
+    n_agg = len(cfg.aggregators) * len(cfg.scalers)
+    for k in keys[:-1]:
+        ks = split_keys(k, ["pre", "post"])
+        layers.append({
+            "pre": dense_init(ks["pre"], (d_prev, cfg.d_hidden), jnp.float32),
+            "post": dense_init(
+                ks["post"], (n_agg * cfg.d_hidden + d_prev, cfg.d_hidden),
+                jnp.float32),
+        })
+        d_prev = cfg.d_hidden
+    out = dense_init(keys[-1], (cfg.d_hidden, cfg.n_classes), jnp.float32)
+    return {"layers": layers, "out": out, "delta": jnp.float32(delta)}
+
+
+def _pna_aggregate(h, batch: GraphBatch, n: int,
+                   chunk_edges: int = 16_000_000):
+    """(sum, sumsq, max, min) per destination — edge-CHUNKED when the edge
+    set is large: the four [E, d] message tensors at ogb-products scale are
+    26 GiB/chip live (measured); sum/sumsq/max/min are decomposable, so a
+    checkpointed scan over edge chunks caps the live set at [chunk, d]."""
+    e = batch.edge_src.shape[0]
+    nc = max(1, -(-e // chunk_edges))
+    if nc == 1 or e % nc:
+        msg = jnp.where(batch.edge_mask[:, None], h[batch.edge_src], 0.0)
+        s = _seg_sum(msg, batch.edge_dst, n)
+        sq = _seg_sum(msg * msg, batch.edge_dst, n)
+        mx = _seg_max(jnp.where(batch.edge_mask[:, None], h[batch.edge_src],
+                                -1e30), batch.edge_dst, n)
+        mn = _seg_min(jnp.where(batch.edge_mask[:, None], h[batch.edge_src],
+                                1e30), batch.edge_dst, n)
+        return s, sq, mx, mn
+    ec = e // nc
+    resh = lambda a: a.reshape(nc, ec, *a.shape[1:])
+    src_c, dst_c, msk_c = (resh(batch.edge_src), resh(batch.edge_dst),
+                           resh(batch.edge_mask))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        s, sq, mx, mn = carry
+        src, dst, mask = xs
+        m = jnp.where(mask[:, None], h[src], 0.0)
+        s = s + _seg_sum(m, dst, n)
+        sq = sq + _seg_sum(m * m, dst, n)
+        mx = jnp.maximum(mx, _seg_max(
+            jnp.where(mask[:, None], h[src], -1e30), dst, n))
+        mn = jnp.minimum(mn, _seg_min(
+            jnp.where(mask[:, None], h[src], 1e30), dst, n))
+        return (s, sq, mx, mn), None
+
+    d = h.shape[1]
+    init = (jnp.zeros((n, d), h.dtype), jnp.zeros((n, d), h.dtype),
+            jnp.full((n, d), -1e30, h.dtype), jnp.full((n, d), 1e30, h.dtype))
+    (s, sq, mx, mn), _ = jax.lax.scan(body, init, (src_c, dst_c, msk_c))
+    return s, sq, mx, mn
+
+
+def pna_forward(params: dict, batch: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    x = constrain(batch.x, ALL_AXES, None)
+    n = x.shape[0]
+    deg = _degree(batch, n)
+    log_deg = jnp.log(deg + 1.0)
+    delta = params["delta"]
+    for lw in params["layers"]:
+        h = jax.nn.relu(x @ lw["pre"])
+        s, sq, mmax, mmin = _pna_aggregate(h, batch, n)
+        mean = s / jnp.maximum(deg[:, None], 1.0)
+        mmax = jnp.where(deg[:, None] > 0, jnp.maximum(mmax, -1e30), 0.0)
+        mmin = jnp.where(deg[:, None] > 0, jnp.minimum(mmin, 1e30), 0.0)
+        var = (sq.astype(jnp.float32) / jnp.maximum(deg[:, None], 1.0)
+               - mean.astype(jnp.float32) ** 2)
+        std = jnp.sqrt(jnp.maximum(var, 0.0) + 1e-5).astype(h.dtype)
+        aggs = {"mean": mean, "max": mmax, "min": mmin, "std": std,
+                "sum": s}
+        feats = []
+        for agg_name in cfg.aggregators:
+            a = aggs[agg_name]
+            for sc in cfg.scalers:
+                if sc == "identity":
+                    feats.append(a)
+                elif sc == "amplification":
+                    feats.append(a * (log_deg / delta)[:, None])
+                elif sc == "attenuation":
+                    feats.append(a * (delta / jnp.maximum(log_deg, 1e-2))[:, None])
+        z = jnp.concatenate(feats + [x], axis=-1)
+        x = jax.nn.relu(z @ lw["post"])
+        x = constrain(x, ALL_AXES, None)
+    return x @ params["out"]
+
+
+# --------------------------------------------------------------------------
+# SchNet (arXiv:1706.08566): RBF expansion + continuous-filter convolution.
+# --------------------------------------------------------------------------
+
+
+def shifted_softplus(x):
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def init_schnet(key, cfg: GNNConfig, n_atom_types: int = 100) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    inter = []
+    for k in keys[:-2]:
+        ks = split_keys(k, ["filt1", "filt2", "in", "out1", "out2"])
+        inter.append({
+            "filt1": dense_init(ks["filt1"], (cfg.rbf, d), jnp.float32),
+            "filt2": dense_init(ks["filt2"], (d, d), jnp.float32),
+            "w_in": dense_init(ks["in"], (d, d), jnp.float32),
+            "w_out1": dense_init(ks["out1"], (d, d), jnp.float32),
+            "w_out2": dense_init(ks["out2"], (d, d), jnp.float32),
+        })
+    ks = split_keys(keys[-2], ["o1", "o2"])
+    return {
+        "embed": dense_init(keys[-1], (n_atom_types, d), jnp.float32, scale=1.0),
+        "interactions": inter,
+        "out1": dense_init(ks["o1"], (d, d // 2), jnp.float32),
+        "out2": dense_init(ks["o2"], (d // 2, 1), jnp.float32),
+    }
+
+
+def schnet_forward(params: dict, batch: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    """Per-graph energy [G]. batch.x[:, 0] holds integer atom types."""
+    n = batch.x.shape[0]
+    z = batch.x[:, 0].astype(jnp.int32)
+    x = jnp.take(params["embed"], jnp.clip(z, 0, params["embed"].shape[0] - 1),
+                 axis=0)
+    x = constrain(x, ALL_AXES, None)
+    diff = batch.positions[batch.edge_src] - batch.positions[batch.edge_dst]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.rbf)
+    gamma = 10.0
+    rbf = jnp.exp(-gamma * (dist[:, None] - centers[None]) ** 2)  # [E, rbf]
+    # Smooth cosine cutoff.
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+    for lw in params["interactions"]:
+        filt = shifted_softplus(rbf @ lw["filt1"])
+        filt = shifted_softplus(filt @ lw["filt2"]) * env[:, None]
+        h = x @ lw["w_in"]
+        msg = h[batch.edge_src] * filt
+        msg = jnp.where(batch.edge_mask[:, None], msg, 0.0)
+        agg = _seg_sum(msg, batch.edge_dst, n)
+        v = shifted_softplus(agg @ lw["w_out1"]) @ lw["w_out2"]
+        x = x + v
+        x = constrain(x, ALL_AXES, None)
+    e_atom = shifted_softplus(x @ params["out1"]) @ params["out2"]  # [N, 1]
+    e_atom = jnp.where(batch.node_mask[:, None], e_atom, 0.0)
+    return _seg_sum(e_atom[:, 0], batch.graph_ids, batch.n_graphs)   # [G]
+
+
+# --------------------------------------------------------------------------
+# Dispatch + task losses
+# --------------------------------------------------------------------------
+
+
+def init_gnn(key, cfg: GNNConfig, d_in: int) -> dict:
+    if cfg.family == "gat":
+        return init_gat(key, cfg, d_in)
+    if cfg.family == "gin":
+        return init_gin(key, cfg, d_in)
+    if cfg.family == "pna":
+        return init_pna(key, cfg, d_in)
+    if cfg.family == "schnet":
+        return init_schnet(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def gnn_forward(params: dict, batch: GraphBatch, cfg: GNNConfig,
+                graph_level: bool = False) -> jax.Array:
+    if cfg.mp_dtype == "bfloat16":
+        # bf16 across the whole message-passing path (params, features,
+        # edge gathers AND their cotangents); softmax/losses stay f32.
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.bfloat16)
+            if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        batch = dataclasses.replace(batch, x=batch.x.astype(jnp.bfloat16))
+    if cfg.family == "gat":
+        out = gat_forward(params, batch, cfg)
+    elif cfg.family == "gin":
+        out = gin_forward(params, batch, cfg, graph_level)
+    elif cfg.family == "pna":
+        out = pna_forward(params, batch, cfg)
+    elif cfg.family == "schnet":
+        out = schnet_forward(params, batch, cfg)
+    else:
+        raise ValueError(cfg.family)
+    return out.astype(jnp.float32)
+
+
+def gnn_loss(params: dict, batch: GraphBatch, cfg: GNNConfig) -> jax.Array:
+    if cfg.family == "schnet":
+        energy = schnet_forward(params, batch, cfg)
+        target = batch.labels.astype(jnp.float32)
+        return jnp.mean((energy - target) ** 2)
+    graph_level = batch.n_graphs > 1
+    logits = gnn_forward(params, batch, cfg, graph_level)
+    if graph_level:
+        if logits.shape[0] != batch.n_graphs:
+            # Node-level heads (GAT/PNA): mean-pool per graph.
+            ones = batch.node_mask.astype(jnp.float32)
+            cnt = _seg_sum(ones, batch.graph_ids, batch.n_graphs)
+            pooled = _seg_sum(
+                jnp.where(batch.node_mask[:, None], logits, 0.0),
+                batch.graph_ids, batch.n_graphs)
+            logits = pooled / jnp.maximum(cnt[:, None], 1.0)
+        labels = jnp.clip(batch.labels.astype(jnp.int32), 0,
+                          logits.shape[-1] - 1)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+        return jnp.mean(logz - gold)
+    labels = jnp.clip(batch.labels.astype(jnp.int32), 0,
+                      logits.shape[-1] - 1)
+    mask = batch.node_mask.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

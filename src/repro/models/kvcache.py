@@ -1,0 +1,92 @@
+"""Quantized (int8) KV cache for long-context decode.
+
+The decode_32k/long_500k cells are pure KV-streaming workloads; int8 halves
+both the resident cache and the bytes-per-token read.  Symmetric per
+(layer, batch, position, head) scales (KIVI-style per-token granularity);
+attention dequantizes chunk-by-chunk inside an online-softmax scan so the
+bf16 copy never materializes beyond one chunk.
+
+On-TPU, the dequant fuses into the Pallas decode kernel; this module is the
+XLA-measurable formulation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DP, TP, constrain
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [..., Dh] -> (int8 [..., Dh], scale f32 [..., 1])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def init_cache_quant(b, batch: int, max_seq: int) -> dict:
+    l = b.cfg.n_layers
+    h, dh = b.n_kv_heads_p, b.cfg.head_dim
+    return {
+        "k_q": jnp.zeros((l, batch, max_seq, h, dh), jnp.int8),
+        "k_s": jnp.zeros((l, batch, max_seq, h, 1), jnp.float32),
+        "v_q": jnp.zeros((l, batch, max_seq, h, dh), jnp.int8),
+        "v_s": jnp.zeros((l, batch, max_seq, h, 1), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_quant_specs(b, seq_axes=("model",)) -> dict:
+    from jax.sharding import PartitionSpec as P
+    sp = P(None, DP, seq_axes, None, None)
+    return {"k_q": sp, "k_s": sp, "v_q": sp, "v_s": sp, "pos": P()}
+
+
+def decode_attention_quant(q, k_q, k_s, v_q, v_s, pos, chunk: int = 2048):
+    """One-token attention over an int8 cache, chunk-dequantized.
+
+    q [B, 1, Hq, Dh]; k_q/v_q [B, S, Hkv, Dh] int8 (+ scales [B,S,Hkv,1]).
+    Returns [B, 1, Hq, Dh].
+    """
+    bsz, _, hq, dh = q.shape
+    _, s, hkv, _ = k_q.shape
+    g = hq // hkv
+    qr = q.reshape(bsz, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    kc = k_q.reshape(bsz, nc, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    ksc = k_s.reshape(bsz, nc, chunk, hkv, 1).transpose(1, 0, 2, 3, 4)
+    vc = v_q.reshape(bsz, nc, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vsc = v_s.reshape(bsz, nc, chunk, hkv, 1).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kq_blk, ks_blk, vq_blk, vs_blk, ic = xs
+        k_blk = kq_blk.astype(jnp.bfloat16) * ks_blk.astype(jnp.bfloat16)
+        logits = jnp.einsum("bhgd,bkhd->bhgk", qr, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        kpos = ic * chunk + jnp.arange(chunk)
+        valid = kpos <= pos
+        logits = jnp.where(valid[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        v_blk = vq_blk.astype(jnp.bfloat16) * vs_blk.astype(jnp.bfloat16)
+        pv = jnp.einsum("bhgk,bkhd->bhgd", p.astype(jnp.bfloat16), v_blk,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[..., None] + pv), None
+
+    m0 = jnp.full((bsz, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((bsz, hkv, g), jnp.float32)
+    a0 = jnp.zeros((bsz, hkv, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, ksc, vc, vsc, jnp.arange(nc)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(bsz, 1, hq, dh).astype(q.dtype)

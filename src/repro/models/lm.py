@@ -1,0 +1,155 @@
+"""LM task heads: loss, train_step, prefill/decode serve steps.
+
+These are the functions the dry-run lowers for every LM (arch x shape) cell
+and the train/serve drivers execute for real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import transformer as tfm
+from repro.models.common import DP, TP, constrain
+from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: OptState
+    step: jax.Array
+
+
+def init_train_state(key, b: tfm.BuiltLM) -> TrainState:
+    params = tfm.init_params(key, b)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def chunked_ce(params, hidden, labels, b: tfm.BuiltLM,
+               chunk: int = 512) -> jax.Array:
+    """Cross entropy without materializing [B, S, vocab] logits.
+
+    Scans over sequence chunks; each chunk's logits are rematerialized in
+    the backward pass (jax.checkpoint), so live memory is O(B·chunk·vocab)
+    instead of O(B·S·vocab) — the difference between 65 MB and 1 PB at
+    command-r scale.
+    """
+    bsz, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    hc = hidden.reshape(bsz, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(bsz, nc, chunk).transpose(1, 0, 2)
+    vocab_pad = jnp.arange(tfm_vocab_p(b)) >= b.cfg.vocab
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        h, lab = xs
+        logits = tfm.unembed(params, h, b)
+        logits = jnp.where(vocab_pad[None, None], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (hc, lc))
+    return total / (bsz * s)
+
+
+def tfm_vocab_p(b: tfm.BuiltLM) -> int:
+    return b.vocab_p
+
+
+def lm_loss(params, batch, b: tfm.BuiltLM, attn_impl="auto",
+            loss_chunk: int = 512):
+    hidden, _, aux = tfm.forward(params, batch["tokens"], b,
+                                 attn_impl=attn_impl)
+    ce = chunked_ce(params, hidden, batch["labels"], b, chunk=loss_chunk)
+    loss = ce
+    if b.cfg.moe is not None:
+        loss = (loss + b.cfg.moe.aux_loss_weight * aux["load_balance"]
+                + b.cfg.moe.router_z_weight * aux["router_z"])
+    return loss, {"ce": ce, **aux}
+
+
+def make_train_step(b: tfm.BuiltLM, opt_cfg: AdamWConfig,
+                    attn_impl: str = "auto", grad_accum: int = 1,
+                    grad_transform=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_accum > 1 splits the batch into microbatches accumulated in f32 —
+    the standard activation-memory lever for the 100B+ dry-run cells.
+    grad_transform(grads) -> grads optionally post-processes gradients
+    (e.g. the int8 ring all-reduce in repro.distributed.compression).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm_loss(p, batch, b, attn_impl)[0])(params)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        params = state.params
+        if grad_accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            bsz = batch["tokens"].shape[0]
+            mb = bsz // grad_accum
+            resh = lambda x: x.reshape(grad_accum, mb, *x.shape[1:])
+            micro = jax.tree_util.tree_map(resh, batch)
+
+            def acc_body(carry, mb_batch):
+                loss_acc, g_acc = carry
+                loss, grads = grads_of(params, mb_batch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0.0), g0),
+                                            micro)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state.opt, params)
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        return new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(b: tfm.BuiltLM, attn_impl: str = "auto"):
+    """prefill(params, tokens) -> (logits_last, cache)."""
+
+    def prefill(params, tokens):
+        hidden, cache, _ = tfm.forward(params, tokens, b, return_cache=True,
+                                       attn_impl=attn_impl)
+        k, v = cache
+        logits_last = tfm.unembed(params, hidden[:, -1], b)
+        return logits_last, {"k": k, "v": v,
+                             "pos": jnp.int32(tokens.shape[1])}
+
+    return prefill
+
+
+def make_decode_step(b: tfm.BuiltLM, attn_impl: str = "auto"):
+    """serve_step(params, cache, tokens[B,1]) -> (next_token, cache)."""
+
+    def decode(params, cache, tokens):
+        logits, cache = tfm.decode_step(params, cache, tokens, b, attn_impl)
+        # Greedy head (sampling lives in the serving driver).
+        next_tok = jnp.argmax(logits[:, -1, : b.cfg.vocab], axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], cache
+
+    return decode

@@ -1,0 +1,199 @@
+"""Mixture-of-Experts FFN (dbrx 16e top-4, granite 40e top-8).
+
+Three dispatch regimes, chosen by token count and ambient mesh:
+
+1. ``_moe_sharded`` (train/prefill on a mesh): the production path —
+   shard_map with *local* top-k + cumsum ranking + local scatter into
+   per-expert buffers, then ``all_to_all`` over the "model" (expert) axis,
+   FSDP all-gather of expert weights, grouped einsum, reverse all_to_all,
+   local combine.  This is the GShard/DeepSpeed schedule; a naive global
+   scatter would make XLA replicate the dispatch buffers and all-reduce
+   ~15 GiB per layer (measured — see EXPERIMENTS.md §Perf).
+2. ``_moe_dense_all`` (decode on a mesh): token counts are tiny; computing
+   every expert for every token and masking is cheaper than an all-to-all
+   and partitions trivially (experts sharded over "model", psum combine).
+3. ``_moe_local`` (no mesh / unit tests): plain cumsum+scatter on one
+   device.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoESpec
+from repro.models.common import dense_init, pad_to, split_keys
+
+
+def init_moe(key, d_model: int, spec: MoESpec, e_pad: int, dtype) -> dict:
+    ks = split_keys(key, ["router", "w_gate", "w_up", "w_down"])
+    f = spec.d_ff_expert
+    return {
+        "router": dense_init(ks["router"], (d_model, e_pad), jnp.float32),
+        "w_gate": dense_init(ks["w_gate"], (e_pad, d_model, f), dtype),
+        "w_up": dense_init(ks["w_up"], (e_pad, d_model, f), dtype),
+        "w_down": dense_init(ks["w_down"], (e_pad, f, d_model), dtype),
+    }
+
+
+def capacity(n_tokens: int, spec: MoESpec, e_pad: int) -> int:
+    c = int(n_tokens * spec.top_k * spec.capacity_factor / e_pad) + 1
+    return max(4, pad_to(c, 4))
+
+
+def _route(router, x, spec: MoESpec, n_real: int, e_pad: int):
+    """Shared router: returns (gate [T,k], ids [T,k], probs [T,E], logits)."""
+    logits = x.astype(jnp.float32) @ router
+    if n_real < e_pad:
+        pad_mask = jnp.arange(e_pad) >= n_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, spec.top_k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+    return gate, ids, probs, logits
+
+
+def _aux(probs, ids, logits, e_pad, keep=None):
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids, e_pad, dtype=jnp.float32), axis=(0, 1))
+    out = {
+        "load_balance": jnp.sum(me * ce) * e_pad,
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    out["dropped_frac"] = (1.0 - jnp.mean(keep.astype(jnp.float32))
+                           if keep is not None else jnp.float32(0.0))
+    return out
+
+
+def _dispatch_local(x, gate, ids, spec: MoESpec, e_pad: int, c: int):
+    """cumsum-ranked capacity assignment; returns (buf [E,C,D], slot, keep,
+    tok_of)."""
+    t, d = x.shape
+    k = spec.top_k
+    flat_ids = ids.reshape(-1)
+    oh = jax.nn.one_hot(flat_ids, e_pad, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh
+    my_pos = jnp.take_along_axis(pos, flat_ids[:, None], axis=1)[:, 0]
+    keep = my_pos < c
+    slot = jnp.where(keep, flat_ids * c + my_pos, e_pad * c)
+    tok_of = jnp.arange(t * k) // k
+    x_rep = jnp.take(x, tok_of, axis=0)
+    buf = jnp.zeros((e_pad * c, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], x_rep, 0), mode="drop")
+    return buf.reshape(e_pad, c, d), slot, keep, tok_of
+
+
+def _combine_local(y_buf, slot, keep, tok_of, gate, t: int):
+    e_pad_c, d = y_buf.shape[0] * y_buf.shape[1], y_buf.shape[2]
+    y_flat = y_buf.reshape(e_pad_c, d)
+    y_rep = jnp.take(y_flat, jnp.minimum(slot, e_pad_c - 1), axis=0)
+    y_rep = jnp.where(keep[:, None], y_rep, 0)
+    y_rep = y_rep * gate.reshape(-1)[:, None].astype(y_rep.dtype)
+    return jax.ops.segment_sum(y_rep, tok_of, num_segments=t)
+
+
+def _expert_mlp(buf, wg, wu, wd):
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+         * jnp.einsum("ecd,edf->ecf", buf, wu))
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _moe_local(params, x, spec: MoESpec, n_real: int):
+    t, d = x.shape
+    e_pad = params["router"].shape[1]
+    c = capacity(t, spec, e_pad)
+    gate, ids, probs, logits = _route(params["router"], x, spec, n_real, e_pad)
+    buf, slot, keep, tok_of = _dispatch_local(x, gate, ids, spec, e_pad, c)
+    y_buf = _expert_mlp(buf, params["w_gate"], params["w_up"], params["w_down"])
+    y = _combine_local(y_buf, slot, keep, tok_of, gate, t)
+    return y.astype(x.dtype), _aux(probs, ids, logits, e_pad, keep)
+
+
+def _moe_dense_all(params, x, spec: MoESpec, n_real: int):
+    """Decode path: all experts for all tokens, masked combine (psum over
+    the expert-sharded axis is derived by XLA SPMD)."""
+    t, d = x.shape
+    e_pad = params["router"].shape[1]
+    gate, ids, probs, logits = _route(params["router"], x, spec, n_real, e_pad)
+    # combine weights [T, E]
+    w_te = jnp.zeros((t, e_pad), jnp.float32)
+    w_te = jnp.sum(jax.nn.one_hot(ids, e_pad) * gate[..., None], axis=1)
+    h = (jax.nn.silu(jnp.einsum("td,edf->tef", x, params["w_gate"]))
+         * jnp.einsum("td,edf->tef", x, params["w_up"]))
+    y_e = jnp.einsum("tef,efd->ted", h, params["w_down"])
+    y = jnp.einsum("ted,te->td", y_e, w_te.astype(y_e.dtype))
+    return y.astype(x.dtype), _aux(probs, ids, logits, e_pad)
+
+
+def _moe_sharded(params, x3d, spec: MoESpec, n_real: int, am):
+    """x3d: [B, S, D].  The shard_map boundary uses sequence parallelism —
+    batch over (pod, data), sequence over "model" — so tokens split
+    256/512-way for dispatch without any merged-axis resharding (a naive
+    [B*S, D] boundary makes the backward cotangent reshard degenerate to a
+    full global-activation all-gather; measured in EXPERIMENTS.md §Perf)."""
+    mesh_axes = am.axis_names
+    tp = tuple(a for a in ("model",) if a in mesh_axes)
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    e_pad = params["router"].shape[1]
+
+    def block(router, wg, wu, wd, x_loc3):
+        b_loc, s_loc, d = x_loc3.shape
+        x_loc = x_loc3.reshape(b_loc * s_loc, d)
+        t_loc = x_loc.shape[0]
+        c_loc = capacity(t_loc, spec, e_pad)
+        if fsdp:
+            wg = jax.lax.all_gather(wg, fsdp, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, fsdp, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, fsdp, axis=2, tiled=True)
+        gate, ids, probs, logits = _route(router, x_loc, spec, n_real, e_pad)
+        buf, slot, keep, tok_of = _dispatch_local(
+            x_loc, gate, ids, spec, e_pad, c_loc)
+        if tp:
+            # MoE all-to-all: experts to their owners. [E, C, D] ->
+            # [E/tp, C*tp, D]
+            buf = jax.lax.all_to_all(buf, tp, split_axis=0, concat_axis=1,
+                                     tiled=True)
+        y_buf = _expert_mlp(buf, wg, wu, wd)
+        if tp:
+            y_buf = jax.lax.all_to_all(y_buf, tp, split_axis=1, concat_axis=0,
+                                       tiled=True)
+        y = _combine_local(y_buf, slot, keep, tok_of, gate, t_loc)
+        aux = _aux(probs, ids, logits, e_pad, keep)
+        aux = {k: jax.lax.pmean(v, fsdp + tp) for k, v in aux.items()}
+        return (y.reshape(b_loc, s_loc, d).astype(x_loc3.dtype),
+                aux["load_balance"], aux["router_z"], aux["dropped_frac"])
+
+    in_specs = (
+        P(None, None),                       # router (replicated)
+        P(tp, fsdp, None),                   # w_gate [E, D, F]
+        P(tp, fsdp, None),                   # w_up
+        P(tp, None, fsdp),                   # w_down [E, F, D]
+        P(fsdp, tp, None),                   # x [B, S, D] sequence-parallel
+    )
+    out_specs = (P(fsdp, tp, None), P(), P(), P())
+    y, lb, rz, dropped = jax.shard_map(
+        block, mesh=am, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )(params["router"], params["w_gate"], params["w_up"], params["w_down"],
+      x3d)
+    return y, {"load_balance": lb, "router_z": rz, "dropped_frac": dropped}
+
+
+def moe_ffn(params: dict, x: jax.Array, spec: MoESpec,
+            n_experts_real: int) -> tuple[jax.Array, dict]:
+    """x: [B, S, D] -> ([B, S, D], aux metrics)."""
+    b, s, d = x.shape
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        y, aux = _moe_local(params, x.reshape(b * s, d), spec, n_experts_real)
+        return y.reshape(b, s, d), aux
+    fsdp = math.prod(am.shape[a] for a in ("pod", "data")
+                     if a in am.axis_names)
+    tp = math.prod(am.shape[a] for a in ("model",) if a in am.axis_names)
+    if b * s >= 4096 and b % fsdp == 0 and s % tp == 0:
+        return _moe_sharded(params, x, spec, n_experts_real, am)
+    y, aux = _moe_dense_all(params, x.reshape(b * s, d), spec, n_experts_real)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,174 @@
+"""Inter-pod pipeline parallelism (GPipe schedule over the "pod" axis).
+
+The 2-pod mesh's cross-pod hop is the scarcest link (DCI, not ICI).  PP
+sends ONE activation tensor per microbatch per boundary instead of
+FSDP/TP traffic for every layer — the right parallelism for the slow axis.
+
+Implementation: `jax.shard_map` manual over *only* `"pod"` (data/model
+axes stay auto, so each stage's layer math keeps its TP/FSDP shardings).
+Layers are stage-sharded at rest (`P("pod", ...)` on the stacked layer
+axis); microbatches stream through a `lax.scan` of length
+`n_micro + n_stages - 1`, with `ppermute` shifting activations to the next
+stage each tick.  The schedule is differentiable (scan + ppermute
+transpose), so `jax.grad` through it gives GPipe training; per-stage
+bodies are `jax.checkpoint`ed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.common import constrain
+
+
+def stage_layer_specs(b: tfm.BuiltLM) -> Any:
+    """Param specs for PP: stacked layer axis sharded over "pod" (stages
+    at rest), FSDP restricted to "data" (the pod axis is the pipe)."""
+    specs = tfm.param_specs(b)
+
+    def repl_pod(spec: P) -> P:
+        def fix(entry):
+            if isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a != "pod")
+                return kept if kept else None
+            return entry
+        parts = [fix(e) for e in spec]
+        parts[0] = "pod"   # layer-stack axis -> stage-sharded
+        return P(*parts)
+
+    specs["layers"] = jax.tree_util.tree_map(
+        repl_pod, specs["layers"], is_leaf=lambda x: isinstance(x, P))
+
+    def drop_pod(spec: P) -> P:
+        def fix(entry):
+            if isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a != "pod")
+                return kept if kept else None
+            return entry
+        return P(*(fix(e) for e in spec))
+
+    for k in ("embed", "head", "final_norm"):
+        if k in specs:
+            specs[k] = drop_pod(specs[k])
+    return specs
+
+
+def pp_hidden_forward(params: dict, tokens: jax.Array, b: tfm.BuiltLM, *,
+                      n_stages: int, n_micro: int,
+                      attn_impl: str = "flash_jax") -> jax.Array:
+    """Pipelined forward to final hidden states [B, S, D]."""
+    cfg = b.cfg
+    assert cfg.n_layers % n_stages == 0
+    lps = cfg.n_layers // n_stages
+    bsz, s = tokens.shape
+    assert bsz % n_micro == 0
+    mb = bsz // n_micro
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (mb, s))
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x_mb = x.reshape(n_micro, mb, s, cfg.d_model)
+
+    layers_st = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_stages, lps, *a.shape[1:]), params["layers"])
+
+    def stage_fn(stage_layers, h):
+        def body(h, lw):
+            h, _, _ = tfm._layer(h, lw, b, positions, attn_impl=attn_impl)
+            return h, None
+        h, _ = jax.lax.scan(jax.checkpoint(body), h, stage_layers)
+        return h
+
+    n_ticks = n_micro + n_stages - 1
+    assert n_micro % n_stages == 0
+
+    def block(layers_loc, x_stream):
+        # x_stream: [1, n_micro/n_stages, mb, S, D] — microbatch t lives on
+        # pod t % n_stages, local slot t // n_stages.
+        stage = jax.lax.axis_index("pod")
+        layers_loc = jax.tree_util.tree_map(lambda a: a[0], layers_loc)
+        x_stream = x_stream[0]
+        shift = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        h = jnp.zeros((mb, s, cfg.d_model), x_stream.dtype)
+        collected = []
+        # Ticks are UNROLLED: per-tick permutes are static, the microbatch
+        # stream stays pod-sharded, and no transpose needs a pod-psum —
+        # the three things the XLA partial-manual partitioner chokes on
+        # with the scan-based formulation ("invalid binary opcode copy").
+        for t in range(n_ticks):
+            if t < n_micro:
+                owner = t % n_stages
+                inj = x_stream[t // n_stages]
+                if owner != 0:
+                    inj = jax.lax.ppermute(inj, "pod", [(owner, 0)])
+                m_inj = (stage == 0).astype(h.dtype)
+                h = inj.astype(h.dtype) * m_inj + h * (1 - m_inj)
+            h = stage_fn(layers_loc, h)
+            h = constrain(h, ("data",), None, None)
+            if t >= n_stages - 1:
+                # Completed microbatch: park it on its owner pod (zero on
+                # the others) so outputs stay pod-sharded.
+                oidx = t - (n_stages - 1)
+                dest = oidx % n_stages
+                out_t = h
+                if n_stages - 1 != dest:
+                    out_t = jax.lax.ppermute(out_t, "pod",
+                                             [(n_stages - 1, dest)])
+                m_out = (stage == dest).astype(h.dtype)
+                collected.append(out_t * m_out)
+            if t < n_ticks - 1:
+                h = jax.lax.ppermute(h, "pod", shift)
+        # collected[oidx] is nonzero only on pod oidx%n_stages: summing each
+        # local group of n_stages entries collapses, per pod, to exactly its
+        # own microbatch -> local slot j holds microbatch j*n_stages+stage.
+        local = [sum(collected[j * n_stages:(j + 1) * n_stages])
+                 for j in range(n_micro // n_stages)]
+        return jnp.stack(local, axis=0)[None]  # [1, n_micro/ns, mb, S, D]
+
+    am = jax.sharding.get_abstract_mesh()
+    x_sharded = jax.lax.with_sharding_constraint(
+        x_mb.reshape(n_micro // n_stages, n_stages, mb, s, cfg.d_model)
+        .swapaxes(0, 1), P("pod"))
+    # x_sharded: [n_stages, n_micro/n_stages, mb, S, D]; row p = microbatches
+    # with t % n_stages == p.
+    outs = jax.shard_map(
+        block, mesh=am,
+        in_specs=(jax.tree_util.tree_map(
+            lambda _: P("pod"), layers_st,
+            is_leaf=lambda v: hasattr(v, "shape")), P("pod")),
+        out_specs=P("pod"),
+        axis_names={"pod"}, check_vma=False,
+    )(layers_st, x_sharded)
+
+    # outs: [n_stages, n_micro/ns, mb, S, D] with [p, j] = microbatch
+    # j*n_stages + p; invert the input reordering.
+    hidden = outs.swapaxes(0, 1).reshape(bsz, s, cfg.d_model)
+    return tfm.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+
+
+def make_pp_train_step(b: tfm.BuiltLM, opt_cfg, *, n_stages: int,
+                       n_micro: int, attn_impl: str = "flash_jax"):
+    """GPipe train step: grads via autodiff through the pipeline scan."""
+    from repro.models import lm as lm_lib
+    from repro.optim import adamw_update
+
+    def loss_fn(params, batch):
+        hidden = pp_hidden_forward(params, batch["tokens"], b,
+                                   n_stages=n_stages, n_micro=n_micro,
+                                   attn_impl=attn_impl)
+        return lm_lib.chunked_ce(params, hidden, batch["labels"], b)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        return (lm_lib.TrainState(params=new_params, opt=new_opt,
+                                  step=state.step + 1),
+                {"loss": loss, **metrics})
+
+    return train_step

@@ -1,0 +1,374 @@
+"""Decoder-only transformer (dense + MoE) with scan-over-layers + remat.
+
+Covers the five assigned LM architectures: qwen1.5-4b (QKV bias, MHA),
+chatglm3-6b (GQA kv=2, 2d/partial RoPE), command-r-plus-104b (GQA kv=8),
+dbrx-132b (MoE 16e top-4), granite-moe-3b-a800m (MoE 40e top-8, head_dim 64).
+
+Heads/vocab/experts are padded to the tensor-parallel degree at build time
+(padded weights zero-initialized; padded vocab masked in the loss; padded
+experts masked in routing) — the honest cost shows up in the
+MODEL_FLOPS/HLO_FLOPs roofline ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LMConfig
+from repro.models import moe as moe_lib
+from repro.models.attention import attention, rotary
+from repro.models.common import (
+    DP, FSDP, TP, constrain, dense_init, pad_to, split_keys,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltLM:
+    """Config + mesh-dependent padded dimensions."""
+
+    cfg: LMConfig
+    tp: int
+    n_heads_p: int
+    n_kv_heads_p: int
+    vocab_p: int
+    e_pad: int  # padded experts (0 if dense)
+
+    @property
+    def kv_sharded(self) -> bool:
+        return self.n_kv_heads_p % self.tp == 0 and self.n_kv_heads_p >= self.tp
+
+
+def build(cfg: LMConfig, tp: int = 1) -> BuiltLM:
+    n_heads_p = pad_to(cfg.n_heads, tp)
+    # KV heads: shard when >= tp (pad up), replicate when smaller.
+    n_kv_p = pad_to(cfg.n_kv_heads, tp) if cfg.n_kv_heads >= tp else cfg.n_kv_heads
+    # Query grouping must divide padded kv heads evenly.
+    while n_heads_p % n_kv_p:
+        n_heads_p += tp if n_heads_p % tp == 0 else 1
+    vocab_p = pad_to(cfg.vocab, tp)
+    e_pad = pad_to(cfg.moe.n_experts, tp) if cfg.moe else 0
+    return BuiltLM(cfg=cfg, tp=tp, n_heads_p=n_heads_p, n_kv_heads_p=n_kv_p,
+                   vocab_p=vocab_p, e_pad=e_pad)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(key, b: BuiltLM) -> dict:
+    cfg = b.cfg
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, dh = cfg.d_model, cfg.head_dim
+    l = cfg.n_layers
+    ks = split_keys(key, ["embed", "head", "wq", "wk", "wv", "wo",
+                          "ffn", "moe"])
+
+    def zpad(arr, target, axis):
+        pad = [(0, 0)] * arr.ndim
+        pad[axis] = (0, target - arr.shape[axis])
+        return jnp.pad(arr, pad)
+
+    wq = dense_init(ks["wq"], (l, d, cfg.n_heads * dh), dtype)
+    wq = zpad(wq, b.n_heads_p * dh, 2)
+    wk = dense_init(ks["wk"], (l, d, cfg.n_kv_heads * dh), dtype)
+    wk = zpad(wk, b.n_kv_heads_p * dh, 2)
+    wv = dense_init(ks["wv"], (l, d, cfg.n_kv_heads * dh), dtype)
+    wv = zpad(wv, b.n_kv_heads_p * dh, 2)
+    wo = dense_init(ks["wo"], (l, cfg.n_heads * dh, d), dtype)
+    wo = zpad(wo, b.n_heads_p * dh, 1)
+
+    layers: dict[str, Any] = {
+        "attn_norm": jnp.ones((l, d), dtype),
+        "ffn_norm": jnp.ones((l, d), dtype),
+        "wq": wq, "wk": wk, "wv": wv, "wo": wo,
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((l, b.n_heads_p * dh), dtype)
+        layers["bk"] = jnp.zeros((l, b.n_kv_heads_p * dh), dtype)
+        layers["bv"] = jnp.zeros((l, b.n_kv_heads_p * dh), dtype)
+    if cfg.moe is not None:
+        moe_keys = jax.random.split(ks["moe"], l)
+        per_layer = [moe_lib.init_moe(mk, d, cfg.moe, b.e_pad, dtype)
+                     for mk in moe_keys]
+        layers["moe"] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_layer)
+    else:
+        kg, ku, kd = jax.random.split(ks["ffn"], 3)
+        layers["w_gate"] = dense_init(kg, (l, d, cfg.d_ff), dtype)
+        layers["w_up"] = dense_init(ku, (l, d, cfg.d_ff), dtype)
+        layers["w_down"] = dense_init(kd, (l, cfg.d_ff, d), dtype)
+
+    params = {
+        "embed": dense_init(ks["embed"], (b.vocab_p, d), dtype, scale=0.02),
+        "final_norm": jnp.ones((d,), dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks["head"], (d, b.vocab_p), dtype)
+    return params
+
+
+def param_specs(b: BuiltLM) -> dict:
+    """PartitionSpecs (FSDP over data axes x TP over model) per parameter."""
+    cfg = b.cfg
+    specs: dict[str, Any] = {
+        "embed": P(TP, FSDP),
+        "final_norm": P(None),
+        "layers": {
+            "attn_norm": P(None, None),
+            "ffn_norm": P(None, None),
+            "wq": P(None, FSDP, TP),
+            "wk": P(None, FSDP, TP if b.kv_sharded else None),
+            "wv": P(None, FSDP, TP if b.kv_sharded else None),
+            "wo": P(None, TP, FSDP),
+        },
+    }
+    if cfg.qkv_bias:
+        specs["layers"]["bq"] = P(None, TP)
+        specs["layers"]["bk"] = P(None, TP if b.kv_sharded else None)
+        specs["layers"]["bv"] = P(None, TP if b.kv_sharded else None)
+    if cfg.moe is not None:
+        specs["layers"]["moe"] = {
+            "router": P(None, None, None),
+            "w_gate": P(None, TP, FSDP, None),
+            "w_up": P(None, TP, FSDP, None),
+            "w_down": P(None, TP, None, FSDP),
+        }
+    else:
+        specs["layers"]["w_gate"] = P(None, FSDP, TP)
+        specs["layers"]["w_up"] = P(None, FSDP, TP)
+        specs["layers"]["w_down"] = P(None, TP, FSDP)
+    if not cfg.tie_embeddings:
+        specs["head"] = P(FSDP, TP)
+    return specs
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _attn_block(x, lw, b: BuiltLM, positions, cache_kv=None, cache_pos=None,
+                attn_impl: str = "auto"):
+    """Returns (attn_out, (new_k, new_v)); cache_kv is (k_cache, v_cache)
+    for decode (k_cache: [B, Smax, Hkv, Dh])."""
+    cfg = b.cfg
+    bsz, s, d = x.shape
+    dh = cfg.head_dim
+    q = x @ lw["wq"]
+    k = x @ lw["wk"]
+    v = x @ lw["wv"]
+    if cfg.qkv_bias:
+        q = q + lw["bq"]
+        k = k + lw["bk"]
+        v = v + lw["bv"]
+    q = q.reshape(bsz, s, b.n_heads_p, dh)
+    k = k.reshape(bsz, s, b.n_kv_heads_p, dh)
+    v = v.reshape(bsz, s, b.n_kv_heads_p, dh)
+    q = constrain(q, DP, None, TP, None)
+    kv_tp = TP if b.kv_sharded else None
+    k = constrain(k, DP, None, kv_tp, None)
+    v = constrain(v, DP, None, kv_tp, None)
+    q = rotary(q, positions, cfg.rotary_pct, cfg.rope_theta)
+    k = rotary(k, positions, cfg.rotary_pct, cfg.rope_theta)
+
+    if cache_kv is not None:
+        k_cache, v_cache = cache_kv
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, cache_pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, cache_pos, 0, 0))
+        # Mask beyond current position via q_offset causal masking.
+        out = attention(q, k_cache, v_cache, causal=True,
+                        q_offset=cache_pos, impl=attn_impl)
+        new_kv = (k_cache, v_cache)
+    else:
+        out = attention(q, k, v, causal=True, q_offset=0, impl=attn_impl)
+        new_kv = (k, v)
+    out = constrain(out, DP, None, TP, None)
+    out = out.reshape(bsz, s, b.n_heads_p * dh) @ lw["wo"]
+    return constrain(out, DP, None, None), new_kv
+
+
+def _ffn_block(x, lw, b: BuiltLM):
+    cfg = b.cfg
+    if cfg.moe is not None:
+        return moe_lib.moe_ffn(lw["moe"], x, cfg.moe, cfg.moe.n_experts)
+    h = jax.nn.silu(x @ lw["w_gate"]) * (x @ lw["w_up"])
+    h = constrain(h, DP, None, TP)
+    return h @ lw["w_down"], {}
+
+
+def _layer(x, lw, b: BuiltLM, positions, cache_kv=None, cache_pos=None,
+           attn_impl="auto"):
+    cfg = b.cfg
+    # Sequence parallelism on the residual stream: the carry (and therefore
+    # the remat-saved layer input) is sharded over "model" along the
+    # sequence axis — without this, a microbatch with B_loc=1 stacks
+    # [L, 1, S, D] activations that can shard over nothing (measured
+    # 6.4 GiB/chip on command-r; EXPERIMENTS.md §Perf B6).  Attention/FFN
+    # entry norms gather the sequence; outputs reduce-scatter back via the
+    # residual add (Megatron-SP schedule, derived by SPMD from the
+    # constraints).
+    seq_sp = x.shape[1] % max(1, _tp_size()) == 0 and x.shape[1] > 1
+    sp = (DP, TP, None) if seq_sp else (DP, None, None)
+    h = rms_norm(x, lw["attn_norm"], cfg.norm_eps)
+    h = constrain(h, DP, None, None)
+    attn_out, new_kv = _attn_block(h, lw, b, positions, cache_kv, cache_pos,
+                                   attn_impl)
+    x = x + attn_out
+    x = constrain(x, *sp)
+    h = rms_norm(x, lw["ffn_norm"], cfg.norm_eps)
+    h = constrain(h, DP, None, None)
+    ffn_out, aux = _ffn_block(h, lw, b)
+    x = x + ffn_out
+    x = constrain(x, *sp)
+    return x, new_kv, aux
+
+
+def _tp_size() -> int:
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or "model" not in am.axis_names:
+        return 1
+    return am.shape["model"]
+
+
+def forward(params: dict, tokens: jax.Array, b: BuiltLM, *,
+            positions: jax.Array | None = None,
+            return_cache: bool = False,
+            attn_impl: str = "auto") -> tuple[jax.Array, Any, dict]:
+    """Train/prefill forward. tokens [B, S] -> final hidden [B, S, D].
+
+    Returns (hidden, cache | None, aux) where cache = (k [L,B,S,H,Dh], v).
+    Logits are *not* materialized here: at 256k vocab x 1M tokens that
+    tensor is petabyte-scale — use :func:`unembed` (last position) or the
+    chunked CE in lm.py.
+    """
+    cfg = b.cfg
+    bsz, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (bsz, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, DP, None, None)
+
+    def body(x, lw):
+        x, new_kv, aux = _layer(x, lw, b, positions, attn_impl=attn_impl)
+        ys = (new_kv if return_cache else None,
+              aux.get("load_balance", jnp.float32(0.0)),
+              aux.get("router_z", jnp.float32(0.0)))
+        return x, ys
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    x, (cache, lb, rz) = jax.lax.scan(scan_body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    aux = {"load_balance": jnp.mean(lb), "router_z": jnp.mean(rz)}
+    return x, cache, aux
+
+
+def unembed(params: dict, x: jax.Array, b: BuiltLM) -> jax.Array:
+    """hidden [..., D] -> f32 logits [..., vocab_p]."""
+    head = params["embed"].T if b.cfg.tie_embeddings else params["head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return constrain(logits, DP, None, TP) if logits.ndim == 3 else logits
+
+
+def init_cache(b: BuiltLM, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (b.cfg.n_layers, batch, max_seq, b.n_kv_heads_p, b.cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(b: BuiltLM, decode_seq_shard: bool = True) -> dict:
+    """KV cache shardings: decode shapes shard the sequence axis over
+    "model" (flash-decoding layout) since kv heads are few."""
+    seq = TP if decode_seq_shard else None
+    kv_heads = None if decode_seq_shard else (TP if b.kv_sharded else None)
+    sp = P(None, DP, seq, kv_heads, None)
+    return {"k": sp, "v": sp, "pos": P()}
+
+
+def decode_step_quant(params: dict, cache: dict, tokens: jax.Array,
+                      b: BuiltLM, chunk: int = 2048) -> tuple[jax.Array, dict]:
+    """One-token decode against an int8 KV cache (kvcache.py)."""
+    from repro.models import kvcache
+
+    cfg = b.cfg
+    bsz = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (bsz, 1))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, DP, None, None)
+
+    def body(x, xs):
+        lw, k_q, k_s, v_q, v_s = xs
+        h = rms_norm(x, lw["attn_norm"], cfg.norm_eps)
+        q = h @ lw["wq"]
+        k = h @ lw["wk"]
+        v = h @ lw["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+        dh = cfg.head_dim
+        q = q.reshape(bsz, 1, b.n_heads_p, dh)
+        k = k.reshape(bsz, 1, b.n_kv_heads_p, dh)
+        v = v.reshape(bsz, 1, b.n_kv_heads_p, dh)
+        q = rotary(q, positions, cfg.rotary_pct, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rotary_pct, cfg.rope_theta)
+        kq, ks = kvcache.quantize_kv(k)
+        vq, vs = kvcache.quantize_kv(v)
+        k_q = jax.lax.dynamic_update_slice(k_q, kq, (0, pos, 0, 0))
+        k_s = jax.lax.dynamic_update_slice(k_s, ks, (0, pos, 0, 0))
+        v_q = jax.lax.dynamic_update_slice(v_q, vq, (0, pos, 0, 0))
+        v_s = jax.lax.dynamic_update_slice(v_s, vs, (0, pos, 0, 0))
+        attn = kvcache.decode_attention_quant(q, k_q, k_s, v_q, v_s, pos,
+                                              chunk=chunk)
+        attn = attn.reshape(bsz, 1, b.n_heads_p * dh) @ lw["wo"]
+        x = x + attn
+        h2 = rms_norm(x, lw["ffn_norm"], cfg.norm_eps)
+        ffn_out, _ = _ffn_block(h2, lw, b)
+        return x + ffn_out, (k_q, k_s, v_q, v_s)
+
+    x, (k_q, k_s, v_q, v_s) = jax.lax.scan(
+        body, x, (params["layers"], cache["k_q"], cache["k_s"],
+                  cache["v_q"], cache["v_s"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, b)
+    return logits, {"k_q": k_q, "k_s": k_s, "v_q": v_q, "v_s": v_s,
+                    "pos": pos + 1}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, b: BuiltLM,
+                attn_impl: str = "auto") -> tuple[jax.Array, dict]:
+    """One-token decode: tokens [B, 1] + cache -> (logits [B, 1, V], cache)."""
+    cfg = b.cfg
+    bsz = tokens.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (bsz, 1))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, DP, None, None)
+
+    def body(x, xs):
+        lw, k_c, v_c = xs
+        x, (k_c, v_c), _ = _layer(x, lw, b, positions, cache_kv=(k_c, v_c),
+                                  cache_pos=pos, attn_impl=attn_impl)
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, x, b)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    AdamWConfig, OptState, adamw_init, adamw_update, clip_by_global_norm,
+    cosine_schedule,
+)

@@ -1,0 +1,97 @@
+"""Optimizers (no external deps): AdamW with f32 master weights, global-norm
+clipping, cosine schedule, and gradient-accumulation support.
+
+Optimizer state shards exactly like the parameters (the param_specs tree is
+reused leaf-for-leaf), which is what makes the FSDP memory math work at
+104B/132B scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        mu=jax.tree_util.tree_map(zeros32, params),
+        nu=jax.tree_util.tree_map(zeros32, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Any, opt: OptState, params: Any,
+) -> tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    count = opt.count + 1
+    lr = cosine_schedule(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g32
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g32 * g32
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, grads, opt.mu, opt.nu, params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(mu=new_mu, nu=new_nu, count=count), metrics

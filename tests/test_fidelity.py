@@ -1,0 +1,90 @@
+"""Paper-fidelity tests: instrumented phases (Table 1), literal Eq. 2 exit
+("paper" mode), SPA on forced stop (Sec. 5.4), vanilla-BFS baseline, and
+the benchmark query generator."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import INF
+from repro.core import DKSConfig, dreyfus_wagner, run_dks, run_dks_instrumented
+from repro.core.baselines import vanilla_parallel_bfs
+from repro.core.fagin import paper_exit_hook
+from repro.core.spa import spa_cover_dp, spa_ratio
+from repro.graph.generators import grid_graph, random_weighted_graph
+
+
+def masks_of(groups, n):
+    m = np.zeros((len(groups), n), bool)
+    for i, grp in enumerate(groups):
+        m[i, list(grp)] = True
+    return m
+
+
+def test_instrumented_matches_jitted_loop():
+    g = random_weighted_graph(30, 80, seed=2)
+    groups = [[1], [7], [19]]
+    masks = masks_of(groups, g.n_nodes)
+    dg = g.to_device()
+    cfg = DKSConfig(m=3, k=2, max_supersteps=48)
+    jit_state = run_dks(dg, jnp.asarray(masks), cfg)
+    inst_state, info = run_dks_instrumented(dg, jnp.asarray(masks), cfg)
+    np.testing.assert_allclose(np.asarray(jit_state.topk_w),
+                               np.asarray(inst_state.topk_w))
+    assert set(info["timings"]) == {"send_bfs", "receive", "evaluate",
+                                    "send_agg"}
+    assert all(t >= 0 for t in info["timings"].values())
+    assert len(info["history"]) == int(inst_state.step)
+
+
+def test_paper_eq2_exit_mode_finds_optimum():
+    """Literal paper exit (Eq. 2 via host hook) never misses the optimum."""
+    for seed in range(3):
+        g = random_weighted_graph(14, 26, seed=seed)
+        rng = np.random.default_rng(seed)
+        groups = [[int(rng.integers(0, 14))] for _ in range(2)]
+        masks = masks_of(groups, g.n_nodes)
+        dg = g.to_device()
+        cfg = DKSConfig(m=2, k=1, max_supersteps=64, exit_mode="none")
+        hook = paper_exit_hook(g, masks, cfg, float(dg.e_min()))
+        state, _ = run_dks_instrumented(dg, jnp.asarray(masks), cfg,
+                                        exit_hook=hook)
+        opt = dreyfus_wagner(g, groups)
+        got = float(state.topk_w[0])
+        assert got == pytest.approx(opt, abs=1e-3), (seed, got, opt)
+
+
+def test_budget_stop_with_spa_bound():
+    """Forced stop (Sec. 5.4): SPA is a true lower bound on the optimum."""
+    g = grid_graph(10, 10)
+    groups = [[0], [99]]
+    masks = masks_of(groups, g.n_nodes)
+    dg = g.to_device()
+    cfg = DKSConfig(m=2, k=1, message_budget=50.0, max_supersteps=64)
+    state = run_dks(dg, jnp.asarray(masks), cfg)
+    assert bool(state.budget_hit)
+    shat = state.s_front + dg.e_min()
+    spa = float(spa_cover_dp(shat, 2))
+    opt = dreyfus_wagner(g, groups)
+    assert spa <= opt + 1e-4, f"SPA {spa} must lower-bound optimum {opt}"
+
+
+def test_vanilla_bfs_baseline():
+    g = grid_graph(6, 6)
+    dg = g.to_device()
+    src = jnp.zeros(dg.v_pad, bool).at[0].set(True)
+    dist, steps = vanilla_parallel_bfs(dg, src)
+    # Corner-to-corner hop distance on a 6x6 grid is 10.
+    assert int(dist[35]) == 10
+    assert int(steps) <= 12
+
+
+def test_benchmark_queries_span_df_spectrum():
+    from benchmarks.common import load
+    bench = load("sec-rdfabout-cpu", m_max=3, per_count=4)
+    assert len(bench.queries) == 8
+    dfs = [sum(bench.index.df(t) for t in q) for q in bench.queries]
+    assert max(dfs) > 3 * min(dfs)  # spectrum, not one regime
+    ms = sorted({len(q) for q in bench.queries})
+    assert ms == [2, 3]

@@ -1,0 +1,196 @@
+"""Infrastructure tests: checkpointing (crash-safe commit, elastic restore),
+fault/straggler handling, data pipeline determinism, partitioner, index,
+sampler."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore_tree, save_tree
+from repro.data import PrefetchIterator, lm_synthetic_stream, recsys_synthetic_stream
+from repro.distributed.fault import StepGuard, StragglerPolicy
+from repro.graph.generators import lod_like_graph, random_weighted_graph
+from repro.graph.index import InvertedIndex
+from repro.graph.partition import apply_partition, edge_cut, hash_partition
+from repro.graph.sampler import plan_sizes, sample_subgraph
+
+
+def tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = tree()
+    save_tree(t, tmp_path, step=3)
+    assert latest_step(tmp_path) == 3
+    out = restore_tree(t, tmp_path, 3)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_torn_write_ignored(tmp_path):
+    t = tree()
+    save_tree(t, tmp_path, step=1)
+    # Simulate a crash mid-save: directory without _COMMITTED.
+    bad = tmp_path / "step_2"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 1
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2, async_save=True)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ck.save(t, s)
+    ck.wait()
+    assert ck.latest() == 4
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.iterdir()
+                   if d.name.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_restore_with_sharding(tmp_path):
+    """Elastic restore: device_put onto explicit shardings (1-device mesh
+    here; the same path reshapes onto any mesh)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    t = tree()
+    save_tree(t, tmp_path, step=1)
+    sh = jax.tree_util.tree_map(
+        lambda _: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()), t)
+    out = restore_tree(t, tmp_path, 1, shardings=sh)
+    assert out["a"].sharding.mesh.shape == {"data": 1}
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    t = tree()
+    save_tree(t, tmp_path, step=1)
+    bad = {**t, "a": jnp.zeros((4, 4))}
+    with pytest.raises(ValueError):
+        restore_tree(bad, tmp_path, 1)
+
+
+def test_step_guard_retries_transient_failure():
+    calls = {"n": 0}
+
+    def flaky_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("simulated preemption")
+        return state + batch, {"loss": jnp.float32(1.0)}
+
+    guard = StepGuard(max_retries=2)
+    new_state, aux, info = guard.run(flaky_step, jnp.float32(1.0),
+                                     jnp.float32(2.0))
+    assert float(new_state) == 3.0
+    assert info["retries"] == 1
+    assert ("retry", "RuntimeError('simulated preemption')") in guard.events
+
+
+def test_step_guard_gives_up():
+    def dead_step(state, batch):
+        raise RuntimeError("hard fault")
+
+    guard = StepGuard(max_retries=1)
+    with pytest.raises(RuntimeError):
+        guard.run(dead_step, jnp.float32(0.0), jnp.float32(0.0))
+
+
+def test_straggler_policy_flags_slow_steps():
+    p = StragglerPolicy(threshold=2.0, patience=2)
+    assert not p.observe(1.0)
+    assert not p.observe(1.1)
+    assert p.observe(5.0)
+    assert not p.should_escalate
+    assert p.observe(5.0)
+    assert p.should_escalate
+
+
+def test_lm_stream_deterministic_and_resumable():
+    a = list(zip(range(3), lm_synthetic_stream(100, 2, 8, seed=1)))
+    b = list(zip(range(3), lm_synthetic_stream(100, 2, 8, seed=1)))
+    for (_, x), (_, y) in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+    # skip resumes mid-stream
+    c = next(lm_synthetic_stream(100, 2, 8, seed=1, skip=2))
+    np.testing.assert_array_equal(a[2][1]["tokens"], c["tokens"])
+
+
+def test_streams_shard_disjoint():
+    x = next(lm_synthetic_stream(1000, 4, 16, seed=3, shard_id=0, n_shards=2))
+    y = next(lm_synthetic_stream(1000, 4, 16, seed=3, shard_id=1, n_shards=2))
+    assert not np.array_equal(x["tokens"], y["tokens"])
+
+
+def test_prefetch_iterator():
+    it = PrefetchIterator(iter(range(5)), depth=2)
+    assert list(it) == [0, 1, 2, 3, 4]
+
+
+def test_prefetch_propagates_errors():
+    def gen():
+        yield 1
+        raise ValueError("boom")
+
+    it = PrefetchIterator(gen())
+    assert next(it) == 1
+    with pytest.raises(ValueError):
+        for _ in it:
+            pass
+
+
+def test_hash_partition_and_edge_cut():
+    g = random_weighted_graph(100, 300, seed=0)
+    part = hash_partition(100, 4, seed=0)
+    cut = edge_cut(g, part)
+    assert 0.5 < cut < 1.0  # random partition of a random graph: ~3/4
+    g2 = apply_partition(g, part)
+    assert g2.n_nodes == g.n_nodes
+    assert g2.n_edges_sym == g.n_edges_sym
+
+
+def test_inverted_index():
+    g, tokens = lod_like_graph(200, 400, seed=0, vocab=50)
+    idx = InvertedIndex.from_token_matrix(tokens)
+    tok = idx.vocabulary()[0]
+    nodes = idx.lookup(tok)
+    assert len(nodes) == idx.df(tok) > 0
+    for n in nodes:
+        assert tok in tokens[n]
+    masks = idx.keyword_masks([tok], 200)
+    assert masks.sum() == len(nodes)
+
+
+def test_index_from_labels():
+    idx = InvertedIndex.from_labels(["alpha beta", "beta gamma", "alpha"])
+    np.testing.assert_array_equal(idx.lookup("alpha"), [0, 2])
+    np.testing.assert_array_equal(idx.lookup("beta"), [0, 1])
+    assert idx.df("nope") == 0
+
+
+def test_sampler_shapes_and_validity():
+    g = random_weighted_graph(500, 2000, seed=1)
+    seeds = np.arange(16, dtype=np.int32)
+    sub = sample_subgraph(g, seeds, fanout=[3, 2], seed=0)
+    n_pad, e_pad = plan_sizes(16, [3, 2])
+    assert sub.node_ids.shape == (n_pad,)
+    assert sub.edge_src.shape == (e_pad,)
+    # Every valid edge endpoint is a valid node slot.
+    ev = np.asarray(sub.edge_valid)
+    assert np.all(np.asarray(sub.node_valid)[np.asarray(sub.edge_src)[ev]])
+    # Sampled edges are real graph edges.
+    for s_loc, d_loc in zip(np.asarray(sub.edge_src)[ev][:20],
+                            np.asarray(sub.edge_dst)[ev][:20]):
+        u = int(sub.node_ids[s_loc])
+        v = int(sub.node_ids[d_loc])
+        nbrs, _ = g.neighbors(v)
+        assert u in nbrs

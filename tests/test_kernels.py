@@ -1,0 +1,197 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+shape/dtype sweeps + hypothesis property tests (deliverable c)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro import INF
+from repro.core.semiring import sorted_unique_k
+from repro.kernels.subset_combine.ops import subset_combine
+from repro.kernels.subset_combine.ref import subset_combine_ref
+from repro.kernels.segment_minplus.kernel import padded_topk
+from repro.kernels.segment_minplus.ref import padded_topk_ref
+from repro.kernels.segment_minplus.ops import (
+    padded_csr_from_graph, segment_minplus_padded)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+RNG = np.random.default_rng(0)
+
+
+def random_table(v, m, k, finite_frac=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    s = rng.integers(1, 20, size=(v, 1 << m, k)).astype(np.float32)
+    mask = rng.random((v, 1 << m, k)) > finite_frac
+    s[mask] = INF
+    # Make rows sorted-unique (the lattice invariant).
+    s = np.array(sorted_unique_k(jnp.asarray(s), k))
+    s[:, 0, :] = INF
+    return jnp.asarray(s)
+
+
+# --------------------------------------------------------------------------
+# subset_combine
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,v", [(2, 1, 8), (2, 2, 32), (3, 2, 8),
+                                   (4, 2, 64), (4, 4, 16), (5, 2, 8)])
+def test_subset_combine_matches_ref(m, k, v):
+    s = random_table(v, m, k, seed=m * 100 + k)
+    got = subset_combine(s, m, interpret=True, block_v=8)
+    want = subset_combine_ref(s, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_subset_combine_single_pass_closure():
+    """The kernel reaches closure in ONE pass (in-kernel popcount sweep);
+    a second application must be a no-op (idempotence)."""
+    s = random_table(16, 4, 2, seed=7)
+    once = subset_combine(s, 4, interpret=True, block_v=8)
+    twice = subset_combine(once, 4, interpret=True, block_v=8)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice))
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 4), k=st.integers(1, 3), seed=st.integers(0, 99))
+def test_subset_combine_hypothesis(m, k, seed):
+    s = random_table(8, m, k, seed=seed)
+    got = subset_combine(s, m, interpret=True, block_v=8)
+    want = subset_combine_ref(s, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# segment_minplus (padded-CSR reduce)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vv,c,f,k", [(8, 16, 4, 2), (16, 64, 16, 2),
+                                      (8, 128, 16, 4), (24, 32, 8, 1)])
+def test_padded_topk_matches_ref(vv, c, f, k):
+    rng = np.random.default_rng(vv + c)
+    cand = rng.integers(1, 30, size=(vv, c, f)).astype(np.float32)
+    cand[rng.random((vv, c, f)) > 0.6] = INF
+    cand = jnp.asarray(cand)
+    got = padded_topk(cand, k, block_v=8, interpret=True)
+    want = padded_topk_ref(cand, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_segment_minplus_padded_vs_engine_relax():
+    """Full padded-CSR relax (gather + Pallas reduce + hub merge) equals
+    the engine's segment relax."""
+    from repro.core import dks as dks_mod
+    from repro.core.dks import DKSConfig
+    from repro.graph.generators import random_weighted_graph
+
+    g = random_weighted_graph(40, 120, seed=3)
+    dg = g.to_device()
+    m, k = 3, 2
+    cfg = DKSConfig(m=m, k=k)
+    rng = np.random.default_rng(0)
+    S = random_table(dg.v_pad, m, k, seed=11)
+    changed = jnp.asarray(rng.random(dg.v_pad) > 0.3)
+
+    want = dks_mod.relax(dg, S, changed, cfg)
+
+    deg = np.diff(g.indptr)
+    src = np.repeat(np.arange(g.n_nodes), deg).astype(np.int32)
+    dst = g.indices.astype(np.int32)
+    w = g.ew.astype(np.float32)
+    csr = padded_csr_from_graph(src, dst, w, g.n_nodes, dmax=8)
+    got = segment_minplus_padded(S, csr, changed, k, dg.v_pad,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_padded_csr_hub_split():
+    """A node with degree > dmax gets multiple virtual rows."""
+    src = np.asarray([1, 2, 3, 4, 5], np.int32)
+    dst = np.zeros(5, np.int32)
+    w = np.ones(5, np.float32)
+    csr = padded_csr_from_graph(src, dst, w, 6, dmax=2)
+    rows_for_0 = np.sum(np.asarray(csr.real_of) == 0)
+    assert rows_for_0 >= 3  # ceil(5/2) = 3 rows plus padding rows map to 0
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,sq,skv,hq,hkv,dh", [
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 4, 2, 64),      # GQA g=2
+    (1, 128, 384, 8, 1, 128),     # MQA, longer kv
+    (2, 100, 100, 4, 4, 64),      # non-multiple lengths (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, sq, skv, hq, hkv, dh, dtype):
+    rng = np.random.default_rng(b * sq)
+    q = jnp.asarray(rng.normal(size=(b, sq, hq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, skv, hkv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, skv, hkv, dh)), dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_attention_decode_offset():
+    """q_offset masking: decoding position 37 of a 64-long cache."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(2, 8, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 64, 4, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 64, 4, 64)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_offset=37, interpret=True)
+    want = attention_ref(q, k, v, causal=True, q_offset=37)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# embedding bag
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,nnz,v,d,mode", [
+    (8, 4, 100, 16, "sum"), (16, 8, 1000, 32, "mean"),
+    (5, 3, 50, 8, "sum"),   # non-multiple batch (padding path)
+])
+def test_embedding_bag_matches_ref(b, nnz, v, d, mode):
+    rng = np.random.default_rng(b * nnz)
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    ids = rng.integers(-1, v, size=(b, nnz)).astype(np.int32)
+    got = embedding_bag(table, jnp.asarray(ids), None, mode=mode,
+                        interpret=True)
+    want = embedding_bag_ref(table, jnp.asarray(ids), None, mode=mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_embedding_bag_weights():
+    table = jnp.eye(4, dtype=jnp.float32)
+    ids = jnp.asarray([[0, 1]], jnp.int32)
+    w = jnp.asarray([[2.0, 3.0]], jnp.float32)
+    got = embedding_bag(table, ids, w, mode="sum", interpret=True)
+    np.testing.assert_allclose(np.asarray(got[0]), [2.0, 3.0, 0.0, 0.0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 12), nnz=st.integers(1, 6), seed=st.integers(0, 50))
+def test_embedding_bag_hypothesis(b, nnz, seed):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(30, 8)).astype(np.float32))
+    ids = rng.integers(-1, 30, size=(b, nnz)).astype(np.int32)
+    got = embedding_bag(table, jnp.asarray(ids), None, interpret=True)
+    want = embedding_bag_ref(table, jnp.asarray(ids), None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,75 @@
+"""Pipeline parallelism: GPipe over the "pod" axis equals the plain
+forward, and the pipelined train step reduces loss (8 forced devices)."""
+
+from tests.test_distributed import run_in_subprocess
+
+
+def test_pp_forward_matches_plain():
+    out = run_in_subprocess("""
+        import dataclasses as dc
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.models import pipeline as pp
+        from repro.models import transformer as tfm
+        from repro.launch.mesh import sharding_tree
+
+        cfg = get_arch("chatglm3-6b").config.smoke()
+        cfg = dc.replace(cfg, n_layers=4, d_model=64, n_heads=4,
+                         n_kv_heads=2, vocab=128)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        b = tfm.build(cfg, tp=2)
+        with jax.set_mesh(mesh):
+            params = tfm.init_params(jax.random.PRNGKey(0), b)
+            toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 128)
+
+            # tfm.forward applies the final norm; pp_hidden_forward does
+            # too — compare directly.
+            plain_h, _, _ = tfm.forward(params, toks, b, attn_impl="naive")
+
+            piped = jax.jit(lambda p, t: pp.pp_hidden_forward(
+                p, t, b, n_stages=2, n_micro=4, attn_impl="naive"))(
+                params, toks)
+        err = float(jnp.max(jnp.abs(
+            piped.astype(jnp.float32) - plain_h.astype(jnp.float32))))
+        scale = float(jnp.max(jnp.abs(plain_h.astype(jnp.float32))))
+        out = {"err": err, "scale": scale}
+    """)
+    assert out["err"] <= 0.05 * max(out["scale"], 1.0), out
+
+
+def test_pp_train_step_improves_loss():
+    out = run_in_subprocess("""
+        import dataclasses as dc
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_arch
+        from repro.models import lm as lm_lib
+        from repro.models import pipeline as pp
+        from repro.models import transformer as tfm
+        from repro.optim import AdamWConfig
+
+        cfg = get_arch("qwen1.5-4b").config.smoke()
+        cfg = dc.replace(cfg, n_layers=4, d_model=64, n_heads=4,
+                         n_kv_heads=4, vocab=128)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        b = tfm.build(cfg, tp=2)
+        with jax.set_mesh(mesh):
+            state = lm_lib.init_train_state(jax.random.PRNGKey(0), b)
+            step = jax.jit(pp.make_pp_train_step(
+                b, AdamWConfig(lr=3e-3), n_stages=2, n_micro=4,
+                attn_impl="naive"), donate_argnums=0)
+            toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 128)
+            batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+            losses = []
+            for _ in range(6):
+                state, m = step(state, batch)
+                losses.append(float(m["loss"]))
+        out = {"losses": losses}
+    """)
+    ls = out["losses"]
+    assert all(np.isfinite(l) for l in ls), ls
+    assert ls[-1] < ls[0], ls
+
+
+import numpy as np  # noqa: E402
