@@ -1,7 +1,11 @@
 """Shared benchmark setup: synthetic LOD graphs + the paper's query
 generation strategy (Sec. 7.1, after Coffman et al.): keywords picked by
 document frequency so keyword-node counts span ~10 .. ~10^4 (Fig. 9), with
-keyword counts 2..m_max, N queries per count."""
+keyword counts 2..m_max, N queries per count.
+
+Each dataset loads once into a :class:`repro.engine.QueryEngine`; the
+benchmarks drive all measurements through it.
+"""
 
 from __future__ import annotations
 
@@ -11,6 +15,7 @@ import functools
 import numpy as np
 
 from repro.configs import DKS_CONFIGS
+from repro.engine import ExecutionPolicy, QueryEngine
 from repro.graph.generators import lod_like_graph
 from repro.graph.index import InvertedIndex
 
@@ -18,10 +23,20 @@ from repro.graph.index import InvertedIndex
 @dataclasses.dataclass
 class Bench:
     name: str
-    g: object
-    dg: object
-    index: InvertedIndex
+    engine: QueryEngine
     queries: list[list[int]]   # token lists, grouped by keyword count
+
+    @property
+    def g(self):
+        return self.engine.graph
+
+    @property
+    def dg(self):
+        return self.engine.device_graph
+
+    @property
+    def index(self) -> InvertedIndex:
+        return self.engine.index
 
 
 @functools.lru_cache(maxsize=4)
@@ -30,7 +45,9 @@ def load(dataset: str = "sec-rdfabout-cpu", m_max: int = 4,
     ds = DKS_CONFIGS[dataset]
     g, tokens = lod_like_graph(ds.n_nodes, ds.n_edges, seed=ds.seed,
                                vocab=ds.vocab, tau=ds.tau)
-    index = InvertedIndex.from_token_matrix(tokens)
+    engine = QueryEngine.build(
+        g, tokens=tokens, policy=ExecutionPolicy(max_supersteps=32))
+    index = engine.index
     # Rank tokens by df; sample across the df spectrum (paper Fig. 9:
     # keyword-node counts grow exponentially across queries).
     vocab = sorted(index.vocabulary(), key=index.df)
@@ -44,13 +61,4 @@ def load(dataset: str = "sec-rdfabout-cpu", m_max: int = 4,
             hi = min(len(usable) - 1, lo + max(2 * m, 10))
             picks = rng.choice(np.arange(lo, hi + 1), size=m, replace=False)
             queries.append([usable[int(p)] for p in picks])
-    return Bench(name=ds.name, g=g, dg=g.to_device(), index=index,
-                 queries=queries)
-
-
-def masks_for(bench: Bench, query: list[int]) -> np.ndarray:
-    masks = bench.index.keyword_masks(query, bench.g.n_nodes)
-    v_pad = bench.dg.v_pad
-    if masks.shape[1] < v_pad:
-        masks = np.pad(masks, ((0, 0), (0, v_pad - masks.shape[1])))
-    return masks
+    return Bench(name=ds.name, engine=engine, queries=queries)

@@ -1,4 +1,5 @@
-"""DKS benchmarks, one per paper table/figure (Sec. 7.2).
+"""DKS benchmarks, one per paper table/figure (Sec. 7.2), all served
+through :class:`repro.engine.QueryEngine`.
 
 Scaled to this CPU container via the *-cpu synthetic datasets; the same
 code paths drive the full-scale graphs on a pod.
@@ -20,20 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Bench, load, masks_for
-from repro import INF
+from benchmarks.common import Bench, load
 from repro.core.baselines import vanilla_parallel_bfs
-from repro.core.dks import DKSConfig, run_dks, run_dks_instrumented
-from repro.core.spa import spa_cover_dp, spa_ratio
+from repro.engine import QueryResult
 from repro.graph.partition import edge_cut, hash_partition
 
 
-def _run(bench: Bench, query, k, **kw):
-    masks = masks_for(bench, query)
-    cfg = DKSConfig(m=len(query), k=k, max_supersteps=32, **kw)
-    t0 = time.perf_counter()
-    state = jax.block_until_ready(run_dks(bench.dg, jnp.asarray(masks), cfg))
-    return state, time.perf_counter() - t0
+def _run(bench: Bench, query, k, **kw) -> QueryResult:
+    return bench.engine.query(query, k=k, extract=False, **kw)
 
 
 def table1_phase_breakdown(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
@@ -45,9 +40,8 @@ def table1_phase_breakdown(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
         agg = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0,
                "send_agg": 0.0}
         for q in bench.queries[:n_queries]:
-            masks = masks_for(bench, q)
-            cfg = DKSConfig(m=len(q), k=k, max_supersteps=24)
-            _, info = run_dks_instrumented(bench.dg, jnp.asarray(masks), cfg)
+            _, info = bench.engine.query_instrumented(
+                q, k=k, extract=False, max_supersteps=24)
             for key in agg:
                 agg[key] += info["timings"][key]
         total = sum(agg.values()) or 1.0
@@ -65,14 +59,14 @@ def fig10_time_vs_queries(dataset="sec-rdfabout-cpu", k=1):
     bfs_time = time.perf_counter() - t0
     rows = []
     for q in bench.queries:
-        state, dt = _run(bench, q, k)
+        res = _run(bench, q, k)
         rows.append({
-            "m": len(q),
-            "kw_nodes": int(sum(bench.index.df(t) for t in q)),
-            "time_s": round(dt, 3),
-            "vs_bfs": round(dt / bfs_time, 2),
-            "supersteps": int(state.step),
-            "best": float(state.topk_w[0]),
+            "m": res.m,
+            "kw_nodes": res.kw_nodes,
+            "time_s": round(res.wall_time_s, 3),
+            "vs_bfs": round(res.wall_time_s / bfs_time, 2),
+            "supersteps": res.supersteps,
+            "best": res.best_weight,
         })
     return {"bfs_time_s": round(bfs_time, 3), "queries": rows}
 
@@ -82,10 +76,8 @@ def fig11_deep_messages(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
     bench = load(dataset)
     rows = []
     for k in ks:
-        deep = []
-        for q in bench.queries[:n_queries]:
-            state, _ = _run(bench, q, k)
-            deep.append(float(state.msgs_deep))
+        deep = [_run(bench, q, k).msgs_deep
+                for q in bench.queries[:n_queries]]
         rows.append({"K": k, "mean_deep_msgs": float(np.mean(deep)),
                      "max_deep_msgs": float(np.max(deep))})
     return rows
@@ -98,16 +90,12 @@ def fig12_spa_ratio(dataset="sec-rdfabout-cpu", budget=50_000.0, k=1,
     bench = load(dataset)
     rows = []
     for q in bench.queries[:n_queries]:
-        state, _ = _run(bench, q, k, message_budget=budget)
-        if bool(state.budget_hit):
-            shat = state.s_front + bench.dg.e_min()
-            spa = spa_cover_dp(shat, len(q))
-            r = float(spa_ratio(state.topk_w[0], spa))
-        else:
-            r = 0.0
-        rows.append({"m": len(q), "budget_hit": bool(state.budget_hit),
-                     "spa_ratio": round(r, 3) if np.isfinite(r) else -1.0,
-                     "best": float(state.topk_w[0])})
+        res = _run(bench, q, k, message_budget=budget)
+        rows.append({"m": res.m, "budget_hit": res.budget_hit,
+                     "capped": res.capped,
+                     "spa_ratio": (round(res.spa_ratio, 3)
+                                   if np.isfinite(res.spa_ratio) else -1.0),
+                     "best": res.best_weight})
     return rows
 
 
@@ -115,10 +103,7 @@ def fig13_explored(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10)):
     bench = load(dataset)
     rows = []
     for q in bench.queries:
-        fr = []
-        for k in ks:
-            state, _ = _run(bench, q, k)
-            fr.append(float(jnp.mean(state.visited[: bench.g.n_nodes])))
+        fr = [_run(bench, q, k).explored_frac for k in ks]
         rows.append({"m": len(q), "explored_pct": round(100 * np.mean(fr), 1)})
     return rows
 
@@ -126,13 +111,11 @@ def fig13_explored(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10)):
 def fig14_messages(dataset="sec-rdfabout-cpu", ks=(1, 2, 5, 10),
                    n_queries=6):
     bench = load(dataset)
-    e = bench.dg.n_edges
+    e = bench.engine.n_edges
     rows = []
     for k in ks:
-        fracs = []
-        for q in bench.queries[:n_queries]:
-            state, _ = _run(bench, q, k)
-            fracs.append((float(state.msgs_bfs) + float(state.msgs_deep)) / e)
+        fracs = [_run(bench, q, k).msgs_total / e
+                 for q in bench.queries[:n_queries]]
         rows.append({"K": k, "msgs_pct_of_E": round(100 * np.mean(fracs), 1)})
     return rows
 

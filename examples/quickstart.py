@@ -42,3 +42,15 @@ for i, a in enumerate(answers):
 opt = dreyfus_wagner(g, groups)
 assert abs(answers[0].weight - opt) < 1e-6, (answers[0].weight, opt)
 print(f"verified optimal (Dreyfus-Wagner oracle: {opt})")
+
+# The same flow through the QueryEngine facade (the production front door):
+# build once, then every query is index lookup + cached compiled executors.
+from repro.engine import QueryEngine  # noqa: E402
+
+g.labels = ["alice phone", "bob phone", "carol phone", "alice", "bob",
+            "carol", "unused", "hub", "relay", "relay two"]
+engine = QueryEngine.build(g)
+result = engine.query(["alice", "bob", "carol"], k=2)
+print(f"\nengine: best weight {result.best.weight} at root "
+      f"{result.best.root} in {result.supersteps} supersteps")
+assert abs(result.best.weight - opt) < 1e-6

@@ -1,9 +1,11 @@
 """End-to-end driver (the paper's production flow, Fig. 2c): serve a batch
-of relationship queries against an LOD-scale synthetic graph.
+of relationship queries against an LOD-scale synthetic graph through the
+:class:`repro.engine.QueryEngine` facade.
 
-inverted-index lookup -> keyword masks -> jitted DKS while-loop ->
-aggregator-side tree extraction, with per-query timing, early-exit stats
-and SPA-ratio on budget-limited queries — the full Sec. 7 experiment flow.
+The engine owns index lookup, mask padding, device residency, and the
+compiled-executable cache; ``query_batch`` buckets the mixed 2-/3-keyword
+workload by ``m`` and runs each bucket as one vmapped device program —
+the full Sec. 7 experiment flow in three lines.
 
     PYTHONPATH=src python examples/relationship_queries.py [--dataset bluk-bnb-cpu]
 """
@@ -11,12 +13,9 @@ and SPA-ratio on budget-limited queries — the full Sec. 7 experiment flow.
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DKSConfig, extract_answers, run_dks
-from repro.core.spa import spa_cover_dp, spa_ratio
+from repro.engine import ExecutionPolicy, QueryEngine
 from repro.launch.dks_query import load_dataset
 
 ap = argparse.ArgumentParser()
@@ -28,7 +27,10 @@ args = ap.parse_args()
 
 ds, g, index = load_dataset(args.dataset)
 print(f"graph: {ds.name} V={g.n_nodes:,} E_sym={g.n_edges_sym:,}")
-dg = g.to_device()
+
+engine = QueryEngine.build(
+    g, index=index,
+    policy=ExecutionPolicy(max_supersteps=24, message_budget=args.budget))
 
 # Build a mixed workload: 2- and 3-keyword queries across the df spectrum.
 vocab = sorted(index.vocabulary(), key=index.df)
@@ -42,30 +44,22 @@ for i in range(args.n_queries):
                        replace=False)
     queries.append([usable[int(p)] for p in picks])
 
-total_t = 0.0
-for qi, q in enumerate(queries):
-    masks = index.keyword_masks(q, g.n_nodes)
-    masks = np.pad(masks, ((0, 0), (0, dg.v_pad - g.n_nodes)))
-    cfg = DKSConfig(m=len(q), k=args.k, max_supersteps=24,
-                    message_budget=args.budget)
-    t0 = time.perf_counter()
-    state = jax.block_until_ready(run_dks(dg, jnp.asarray(masks), cfg))
-    dt = time.perf_counter() - t0
-    total_t += dt
-    best = float(state.topk_w[0])
-    line = (f"q{qi} m={len(q)} kw_nodes={int(masks.sum()):5d} "
-            f"steps={int(state.step):2d} t={dt:6.2f}s "
-            f"explored={100*float(jnp.mean(state.visited[:g.n_nodes])):5.1f}% ")
-    if best < 1e8:
-        answers = extract_answers(np.asarray(state.S), g,
-                                  masks[:, : g.n_nodes], k=args.k)
-        line += f"best={answers[0].weight} root={answers[0].root}"
-        if bool(state.budget_hit):
-            spa = spa_cover_dp(state.s_front + dg.e_min(), cfg.m)
-            line += f" SPA-ratio={float(spa_ratio(state.topk_w[0], spa)):.2f}"
+t0 = time.perf_counter()
+results = engine.query_batch(queries, k=args.k)
+total_t = time.perf_counter() - t0
+
+for qi, res in enumerate(results):
+    line = (f"q{qi} m={res.m} kw_nodes={res.kw_nodes:5d} "
+            f"steps={res.supersteps:2d} "
+            f"explored={100*res.explored_frac:5.1f}% ")
+    if res.found:
+        line += f"best={res.best.weight} root={res.best.root}"
+        if res.budget_hit or res.capped:
+            line += f" SPA-ratio={res.spa_ratio:.2f}"
     else:
         line += "no answer (disconnected leads)"
     print(line)
 
 print(f"\nserved {len(queries)} queries in {total_t:.2f}s "
-      f"({total_t/len(queries):.2f}s avg)")
+      f"({total_t/len(queries):.2f}s avg, "
+      f"{engine.cache_stats['executables']} compiled programs)")

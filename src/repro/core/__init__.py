@@ -2,14 +2,26 @@
 (top-K Group Steiner Trees) in the Pregel model, as dense JAX tensor algebra.
 
 Public API:
-  DKSConfig, DKSState, run_dks, run_dks_instrumented  — the engine
-  extract_answers                                      — aggregator-side trees
-  dreyfus_wagner, brute_force_topk                     — exact oracles (tests)
+  DKSConfig, DKSState                       — static config / superstep state
+  run_dks                                   — jitted while-loop, one query
+  run_dks_batched                           — vmapped multi-query serving
+  run_dks_instrumented                      — host loop w/ per-phase timings
+  init_state, superstep, freeze_finished    — the loop's building blocks
+  extract_answers, AnswerTree               — aggregator-side answer trees
+  extract_answer_weights                    — top-K weights only (no trees)
+  dreyfus_wagner, brute_force_topk          — exact oracles (tests)
+
+Most callers should not drive these directly: :class:`repro.engine.QueryEngine`
+(re-exported here as ``QueryEngine`` / ``ExecutionPolicy`` / ``QueryResult`` /
+``StreamUpdate``) wraps index lookup, mask padding, device residency, and
+executable caching behind one facade.
 """
 
 from repro.core.dks import (  # noqa: F401
     DKSConfig,
     DKSState,
+    extract_answer_weights,
+    freeze_finished,
     init_state,
     run_dks,
     run_dks_batched,
@@ -18,3 +30,15 @@ from repro.core.dks import (  # noqa: F401
 )
 from repro.core.reconstruct import AnswerTree, extract_answers  # noqa: F401
 from repro.core.steiner_ref import brute_force_topk, dreyfus_wagner  # noqa: F401
+
+_ENGINE_EXPORTS = ("QueryEngine", "ExecutionPolicy", "QueryResult",
+                   "StreamUpdate")
+
+
+def __getattr__(name):
+    # Lazy re-export: repro.engine imports from repro.core submodules, so an
+    # eager import here would be circular.
+    if name in _ENGINE_EXPORTS:
+        import repro.engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

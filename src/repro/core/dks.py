@@ -93,6 +93,8 @@ class DKSState:
     step: jax.Array         # i32[]
     done: jax.Array         # bool[]
     budget_hit: jax.Array   # bool[] — stopped by message budget (Sec. 5.4)
+    capped: jax.Array       # bool[] — stopped ONLY by the superstep cap
+                            # (truncated: the answer is unproven)
 
 
 # --------------------------------------------------------------------------
@@ -123,6 +125,7 @@ def init_state(graph: DeviceGraph, kw_masks: jax.Array, cfg: DKSConfig) -> DKSSt
         step=jnp.int32(0),
         done=jnp.bool_(False),
         budget_hit=jnp.bool_(False),
+        capped=jnp.bool_(False),
     )
     return aggregate(graph, state, cfg)
 
@@ -210,7 +213,9 @@ def aggregate(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
 def exit_check(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
     """Sound exit: stop when no future superstep can produce a new full-set
     value better than the current K-th best (nu[full] >= W_K), when the
-    frontier is empty, or when the message budget is exhausted."""
+    frontier is empty, or when the message budget is exhausted.  A run that
+    stops for none of these reasons but hits ``max_supersteps`` is flagged
+    ``capped`` — truncated, its answer unproven."""
     frontier_empty = ~jnp.any(state.changed)
     done = frontier_empty
     budget_hit = jnp.bool_(False)
@@ -222,8 +227,27 @@ def exit_check(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
     if np.isfinite(cfg.message_budget):
         budget_hit = msgs > cfg.message_budget
         done = done | budget_hit
-    done = done | (state.step >= cfg.max_supersteps)
-    return dataclasses.replace(state, done=done, budget_hit=budget_hit)
+    capped = (state.step >= cfg.max_supersteps) & ~done
+    done = done | capped
+    return dataclasses.replace(state, done=done, budget_hit=budget_hit,
+                               capped=capped)
+
+
+def freeze_finished(old: DKSState, new: DKSState) -> DKSState:
+    """Keep ``old`` wherever its exit criterion has already fired.
+
+    Under ``vmap`` (:func:`run_dks_batched`, the engine's batch executors)
+    the while-loop keeps stepping every query until the whole batch
+    finishes.  The lattice makes the extra steps idempotent on ``S``, but
+    ``msgs_bfs``/``msgs_deep``/``step`` are counters, not lattice values —
+    without this select, finished queries keep accumulating them (and could
+    even flip ``budget_hit``).  Apply it around the superstep of *batched*
+    loops only: a single query's while-loop never runs the body once done,
+    so there the select would be pure overhead (an extra full-table select
+    per superstep that XLA cannot fold, ``done`` being dynamic).
+    """
+    return jax.tree_util.tree_map(
+        lambda o, n: jnp.where(old.done, o, n), old, new)
 
 
 def superstep(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
@@ -241,7 +265,7 @@ def superstep(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
     changed = jnp.any(S1 < S0, axis=(1, 2)) & graph.node_valid
     first_fire = changed & ~state.visited
     visited = state.visited | changed
-    state = dataclasses.replace(
+    nxt = dataclasses.replace(
         state,
         S=S1,
         changed=changed,
@@ -251,8 +275,8 @@ def superstep(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
         msgs_deep=state.msgs_deep + n_deep,
         step=state.step + 1,
     )
-    state = aggregate(graph, state, cfg)
-    return exit_check(graph, state, cfg)
+    nxt = aggregate(graph, nxt, cfg)
+    return exit_check(graph, nxt, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -274,17 +298,27 @@ def run_dks(graph: DeviceGraph, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState
     return jax.lax.while_loop(cond, body, state)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def run_dks_batched(graph: DeviceGraph, kw_masks_batch: jax.Array,
                     cfg: DKSConfig) -> DKSState:
     """Serve a BATCH of queries in one device program.
 
     kw_masks_batch: bool[Q, m, V].  vmap folds the query axis into every
     tensor of the superstep; ``lax.while_loop`` under vmap runs until every
-    query's exit criterion fires (finished queries step idempotently — the
-    lattice is a fixpoint).  Amortizes graph residency and kernel launches
-    across the paper's 100-query workloads.
+    query's exit criterion fires.  Finished queries are frozen
+    (:func:`freeze_finished`) so their counters stop with them.  Amortizes
+    graph residency and kernel launches across the paper's 100-query
+    workloads.
     """
-    return jax.vmap(lambda m: run_dks(graph, m, cfg))(kw_masks_batch)
+
+    def one(masks: jax.Array) -> DKSState:
+        state = init_state(graph, masks, cfg)
+        return jax.lax.while_loop(
+            lambda st: ~st.done,
+            lambda st: freeze_finished(st, superstep(graph, st, cfg)),
+            state)
+
+    return jax.vmap(one)(kw_masks_batch)
 
 
 def run_dks_instrumented(

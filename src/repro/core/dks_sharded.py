@@ -188,18 +188,18 @@ def superstep_frontier(graph: FrontierGraph, state: DKSState,
     changed = jnp.any(S1 < S0, axis=(1, 2)) & graph.node_valid
     first_fire = changed & ~state.visited
     visited = state.visited | changed
-    state = dataclasses.replace(
+    nxt = dataclasses.replace(
         state, S=S1, changed=changed, first_fire=first_fire, visited=visited,
         msgs_bfs=state.msgs_bfs + n_bfs, msgs_deep=state.msgs_deep + n_deep,
         step=state.step + 1,
     )
-    state = aggregate(graph, state, cfg)
-    state = exit_check(graph, state, cfg)
+    nxt = aggregate(graph, nxt, cfg)
+    nxt = exit_check(graph, nxt, cfg)
     # Frontier overflow == message budget exhausted (paper Sec. 5.4).
     return dataclasses.replace(
-        state,
-        budget_hit=state.budget_hit | overflow,
-        done=state.done | overflow,
+        nxt,
+        budget_hit=nxt.budget_hit | overflow,
+        done=nxt.done | overflow,
     )
 
 

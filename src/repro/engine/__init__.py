@@ -1,0 +1,26 @@
+"""One front door for DKS relationship queries: plan -> execute -> ranked
+answers with approximation bounds.
+
+    from repro.engine import QueryEngine
+
+    engine = QueryEngine.build(graph, tokens=tokens)
+    result = engine.query(["paris", "piano"], k=3)
+    for tree in result.answers:
+        print(tree.weight, tree.root, tree.edges)
+
+Public API:
+  QueryEngine      — owns graph device residency, the inverted index, and
+                     the compiled-executable cache; query / query_batch /
+                     query_stream / query_instrumented.
+  ExecutionPolicy  — backend (jnp | pallas) and partitioning (single |
+                     sharded mesh) selection, made once at build time.
+  QueryResult      — ranked AnswerTrees + superstep/message stats + SPA
+                     approximation bounds (paper Sec. 5.4 / Fig. 12).
+  StreamUpdate     — per-superstep approximate answers with monotonically
+                     tightening bounds: the paper's reported SPA ratio plus
+                     a provably sound lower bound (``proven_optimal``).
+"""
+
+from repro.engine.engine import QueryEngine  # noqa: F401
+from repro.engine.policy import ExecutionPolicy  # noqa: F401
+from repro.engine.result import QueryResult, StreamUpdate  # noqa: F401

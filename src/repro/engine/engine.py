@@ -1,0 +1,508 @@
+"""QueryEngine — the one front door for DKS relationship queries.
+
+The paper's end-to-end flow (Fig. 2c) is: inverted-index lookup ->
+keyword-node masks -> DKS supersteps -> aggregator-side answer trees.
+Before this module, every driver re-stitched that flow by hand and chose
+among four overlapping entry points (``run_dks``, ``run_dks_batched``,
+``run_dks_instrumented``, ``dks_sharded``).  The engine owns:
+
+- **graph device residency** — dense :class:`DeviceGraph` for the single-
+  program path, frontier-partitioned :class:`FrontierGraph` for the
+  ``shard_map`` mesh path, built once and reused by every query;
+- **the inverted index** — token -> keyword-node masks, padded to the
+  device layout (no ``np.pad`` dance at call sites);
+- **a compiled-executable cache** — one jitted while-loop per
+  ``(DKSConfig, partition, kind)``; repeated queries with the same
+  ``(m, k)`` shape reuse the compiled program with zero re-tracing
+  (asserted by tests via :meth:`QueryEngine.trace_count`).
+
+Three query surfaces::
+
+    engine = QueryEngine.build(graph, tokens=tokens)
+    result = engine.query(["paris", "piano"], k=3)     # ranked AnswerTrees
+    results = engine.query_batch(queries, k=1)          # m-bucketed vmap
+    for upd in engine.query_stream(query, k=1):         # per-superstep
+        ...  # upd.weights + upd.spa_ratio: answers with a sound bound
+
+``query_stream`` makes the paper's early-termination guarantee (Sec. 5.4 /
+Fig. 12) a first-class API: after every superstep the caller sees the
+current best answers together with a monotonically tightening lower bound
+on the optimum, so it can stop as soon as the approximation suffices.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import INF
+from repro.core.dks import (
+    DKSConfig,
+    DKSState,
+    freeze_finished,
+    init_state,
+    run_dks_instrumented,
+    superstep,
+)
+from repro.core.reconstruct import extract_answers
+from repro.core.spa import nu_lower_bound, spa_cover_dp, spa_ratio
+from repro.engine.policy import ExecutionPolicy
+from repro.engine.result import QueryResult, StreamUpdate
+from repro.graph.index import InvertedIndex
+from repro.graph.structure import Graph
+
+
+class QueryEngine:
+    """Facade over index lookup, device residency, and the DKS executors.
+
+    Build one per (graph, policy); serve many queries.  Thread-compatible
+    for reads after build (the caches only grow).
+    """
+
+    def __init__(
+        self,
+        graph: Graph,
+        index: InvertedIndex,
+        policy: ExecutionPolicy,
+        device_graph: Any,
+        mesh: Any = None,
+    ) -> None:
+        self.graph = graph
+        self.index = index
+        self.policy = policy
+        self.device_graph = device_graph
+        self.mesh = mesh  # set for partition="sharded"; None otherwise
+        self._e_min = float(device_graph.e_min())
+        # Compiled-executable cache: (DKSConfig, partition, kind) -> callable.
+        self._executables: dict[tuple, Any] = {}
+        self._trace_counts: dict[tuple, int] = {}
+
+    # ------------------------------------------------------------------
+    # Construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        graph: Graph,
+        tokens: np.ndarray | None = None,
+        index: InvertedIndex | None = None,
+        policy: ExecutionPolicy | None = None,
+    ) -> "QueryEngine":
+        """Build an engine: inverted index + device-resident graph.
+
+        Exactly one of ``tokens`` (int[V, L] token matrix) or ``index`` must
+        be provided, unless ``graph.labels`` is set (then the index is built
+        from the labels).
+        """
+        policy = policy or ExecutionPolicy()
+        if index is not None and tokens is not None:
+            raise ValueError(
+                "pass either tokens= or index=, not both (the tokens would "
+                "be ignored in favor of the prebuilt index)")
+        if index is None:
+            if tokens is not None:
+                index = InvertedIndex.from_token_matrix(np.asarray(tokens))
+            elif graph.labels is not None:
+                index = InvertedIndex.from_labels(graph.labels)
+            else:
+                raise ValueError(
+                    "QueryEngine.build needs tokens=, index=, or graph.labels")
+        mesh = None
+        if policy.partition == "sharded":
+            from repro.core.dks_sharded import pack_frontier_graph
+            n_shards = policy.n_shards or len(jax.devices())
+            device_graph = pack_frontier_graph(graph, n_shards)
+            try:
+                mesh = jax.make_mesh(
+                    (n_shards,), ("data",),
+                    axis_types=(jax.sharding.AxisType.Auto,))
+            except (AttributeError, TypeError):  # pre-AxisType jax
+                mesh = jax.make_mesh((n_shards,), ("data",))
+        else:
+            device_graph = graph.to_device()
+        return cls(graph, index, policy, device_graph, mesh=mesh)
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return self.graph.n_nodes
+
+    @property
+    def n_edges(self) -> int:
+        """Symmetrized device edge count (the |E| of Fig. 14)."""
+        return self.device_graph.n_edges
+
+    @property
+    def v_pad(self) -> int:
+        return self.device_graph.v_pad
+
+    def trace_count(self, m: int, k: int, kind: str = "single",
+                    **overrides) -> int:
+        """How many times the executable for this query shape was traced.
+        1 after any number of same-shape queries = the cache works."""
+        key = (self._config(m, k, **overrides), self.policy.partition, kind)
+        return self._trace_counts.get(key, 0)
+
+    @property
+    def cache_stats(self) -> dict[str, int]:
+        """{executables, traces}: cache size vs. total trace events."""
+        return {
+            "executables": len(self._executables),
+            "traces": sum(self._trace_counts.values()),
+        }
+
+    # ------------------------------------------------------------------
+    # Queries
+    # ------------------------------------------------------------------
+
+    def query(
+        self,
+        keywords: Sequence,
+        k: int = 1,
+        *,
+        extract: bool = True,
+        keep_state: bool = False,
+        **overrides,
+    ) -> QueryResult:
+        """Answer one relationship query.
+
+        ``keywords``: tokens understood by the index (int ids or strings).
+        ``extract``: reconstruct ranked :class:`AnswerTree`\\ s on the host
+        (skip for stats-only runs — the weights are always populated).
+        ``keep_state``: retain the raw final :class:`DKSState` on the
+        result (a dense ``[V, 2^m, K]`` table — off by default so served
+        results don't pin device memory).
+        ``overrides``: per-call policy overrides (``max_supersteps``,
+        ``message_budget``, ``exit_mode``) — they key the executable cache,
+        so a steady workload should keep them constant.
+        """
+        keywords = list(keywords)
+        cfg = self._config(len(keywords), k, **overrides)
+        masks = self._masks(keywords)
+        fn = self._executable(cfg, "single")
+        t0 = time.perf_counter()
+        state = self._execute(fn, self.device_graph, jnp.asarray(masks))
+        dt = time.perf_counter() - t0
+        return self._make_result(keywords, masks, state, cfg, dt, extract,
+                                 keep_state)
+
+    def query_batch(
+        self,
+        queries: Sequence[Sequence],
+        k: int = 1,
+        *,
+        extract: bool = True,
+        keep_state: bool = False,
+        **overrides,
+    ) -> list[QueryResult]:
+        """Answer a batch of queries, amortizing graph residency and kernel
+        launches (the paper's 100-query workloads).
+
+        Queries are bucketed by keyword count ``m`` (the table shape is
+        ``[V, 2^m, K]``, so only same-``m`` queries share an executable);
+        each bucket runs as one vmapped device program.  Results come back
+        in input order; ``wall_time_s`` is the shared bucket time.
+        """
+        results: list[QueryResult | None] = [None] * len(queries)
+        buckets: dict[int, list[int]] = {}
+        for i, q in enumerate(queries):
+            buckets.setdefault(len(q), []).append(i)
+        for m, idxs in sorted(buckets.items()):
+            if self.policy.partition == "sharded":
+                # shard_map under vmap is unsupported; serve sequentially.
+                for i in idxs:
+                    results[i] = self.query(queries[i], k=k, extract=extract,
+                                            keep_state=keep_state, **overrides)
+                continue
+            cfg = self._config(m, k, **overrides)
+            masks = np.stack([self._masks(list(queries[i])) for i in idxs])
+            fn = self._executable(cfg, "batch")
+            t0 = time.perf_counter()
+            states = self._execute(fn, self.device_graph, jnp.asarray(masks))
+            dt = time.perf_counter() - t0
+            for bi, i in enumerate(idxs):
+                st = jax.tree_util.tree_map(lambda x, bi=bi: x[bi], states)
+                results[i] = self._make_result(
+                    list(queries[i]), masks[bi], st, cfg, dt, extract,
+                    keep_state)
+        return results  # type: ignore[return-value]
+
+    def query_stream(
+        self,
+        keywords: Sequence,
+        k: int = 1,
+        **overrides,
+    ) -> Iterator[StreamUpdate]:
+        """Yield per-superstep approximate answers with sound bounds.
+
+        Every update carries the current top-k weights plus
+        ``opt_lower_bound`` — the running max over supersteps of
+        ``min(best_t, spa_t)`` and ``min(best_t, nu_full_t)``.  Any answer
+        either appears by superstep ``t`` (weight >= ``best_t``) or later
+        (weight >= the ``spa``/``nu`` bound at ``t``), so the optimum is
+        >= every per-step ``min`` and hence >= their running max (``nu`` is
+        provably sound; ``spa`` is the paper's Sec. 5.4 estimator).  The
+        reported ``spa_ratio`` therefore never worsens as supersteps
+        progress, and reaches 0 once the best answer cannot be improved per
+        the bound (paper Fig. 12 convention).
+        """
+        keywords = list(keywords)
+        cfg = self._config(len(keywords), k, **overrides)
+        for _state, update in self._stream(cfg, self._masks(keywords)):
+            yield update
+
+    def query_streamed(
+        self,
+        keywords: Sequence,
+        k: int = 1,
+        *,
+        on_update: Callable[[StreamUpdate], None] | None = None,
+        extract: bool = True,
+        keep_state: bool = False,
+        **overrides,
+    ) -> QueryResult:
+        """Run a streaming query to completion and return its result.
+
+        Like :meth:`query_stream` but consumes the stream internally
+        (invoking ``on_update`` per superstep) and builds the final
+        :class:`QueryResult` from the last state — the run is not repeated.
+        """
+        keywords = list(keywords)
+        cfg = self._config(len(keywords), k, **overrides)
+        masks = self._masks(keywords)
+        t0 = time.perf_counter()
+        state = None
+        for state, update in self._stream(cfg, masks):
+            if on_update is not None:
+                on_update(update)
+        dt = time.perf_counter() - t0
+        assert state is not None
+        return self._make_result(keywords, masks, state, cfg, dt, extract,
+                                 keep_state)
+
+    def _stream(self, cfg: DKSConfig, masks: np.ndarray):
+        """(state, StreamUpdate) pairs, one per superstep (incl. init)."""
+        init_fn, step_fn = self._executable(cfg, "stream")
+        state = self._execute(init_fn, self.device_graph, jnp.asarray(masks))
+        opt_lb = 0.0
+        sound_lb = 0.0
+        while True:
+            best = float(state.topk_w[0])
+            nu = nu_lower_bound(state.g, jnp.float32(self._e_min), cfg.m)
+            nu_full = float(nu[cfg.full])
+            shat = jnp.minimum(state.s_front + self._e_min, INF)
+            spa = float(spa_cover_dp(shat, cfg.m))
+            frontier = int(jnp.sum(state.changed))
+            done = bool(state.done)
+            opt_lb = max(opt_lb, min(best, spa), min(best, nu_full))
+            # Sound component only: nu is provably a lower bound on any
+            # future newly-appearing full-set value; an empty frontier (or
+            # an exit that is neither the budget nor the superstep cap)
+            # means no future superstep changes anything.
+            sound_lb = max(sound_lb, min(best, nu_full))
+            forced = bool(state.budget_hit) or bool(state.capped)
+            if frontier == 0 or (done and not forced):
+                sound_lb = max(sound_lb, best)
+            if best >= INF:
+                ratio = float("inf")
+            elif best <= opt_lb or opt_lb >= INF:
+                ratio = 0.0
+            else:
+                ratio = best / opt_lb if opt_lb > 0 else float("inf")
+            yield state, StreamUpdate(
+                step=int(state.step),
+                weights=np.asarray(state.topk_w),
+                roots=np.asarray(state.topk_root),
+                frontier=frontier,
+                msgs_bfs=float(state.msgs_bfs),
+                msgs_deep=float(state.msgs_deep),
+                nu_full=nu_full,
+                spa=spa,
+                opt_lower_bound=opt_lb,
+                sound_opt_lower_bound=min(sound_lb, INF),
+                spa_ratio=ratio,
+                done=done,
+            )
+            if done or int(state.step) >= cfg.max_supersteps:
+                return
+            state = self._execute(step_fn, self.device_graph, state)
+
+    def query_instrumented(
+        self,
+        keywords: Sequence,
+        k: int = 1,
+        *,
+        exit_hook: Callable[[DKSState], bool] | None = None,
+        extract: bool = True,
+        keep_state: bool = False,
+        **overrides,
+    ) -> tuple[QueryResult, dict[str, Any]]:
+        """Host-driven run with per-phase wall times (paper Table 1) and an
+        optional host-side exit criterion (e.g. ``fagin.paper_exit_hook``)."""
+        if self.policy.partition == "sharded":
+            raise NotImplementedError(
+                "query_instrumented requires partition='single'")
+        keywords = list(keywords)
+        cfg = self._config(len(keywords), k, **overrides)
+        masks = self._masks(keywords)
+        t0 = time.perf_counter()
+        state, info = run_dks_instrumented(
+            self.device_graph, jnp.asarray(masks), cfg, exit_hook=exit_hook)
+        dt = time.perf_counter() - t0
+        res = self._make_result(keywords, masks, state, cfg, dt, extract,
+                                keep_state)
+        return res, info
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+
+    def _mesh_context(self):
+        """Context under which sharded executors must run.
+
+        ``relax_frontier`` reads the ambient mesh via
+        ``jax.sharding.get_abstract_mesh()``, so sharded execution needs an
+        active ``jax.set_mesh`` scope — the same plumbing every direct
+        caller of :mod:`repro.core.dks_sharded` supplies by hand.
+        """
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        set_mesh = getattr(jax, "set_mesh", None) or getattr(
+            jax.sharding, "use_mesh", None)
+        if set_mesh is None:
+            raise NotImplementedError(
+                "partition='sharded' requires jax.set_mesh "
+                f"(unavailable in jax {jax.__version__})")
+        return set_mesh(self.mesh)
+
+    def _execute(self, fn, *args):
+        """Run a compiled executor under the engine's mesh (if any) and
+        block until the result is materialized."""
+        with self._mesh_context():
+            return jax.block_until_ready(fn(*args))
+
+    def _config(self, m: int, k: int, **overrides) -> DKSConfig:
+        if m < 1:
+            raise ValueError("a query needs at least one keyword")
+        policy = self.policy
+        if overrides:
+            policy = dataclasses.replace(policy, **overrides)
+        return policy.dks_config(m, k)
+
+    def _masks(self, keywords: list) -> np.ndarray:
+        return self.index.keyword_masks(keywords, self.n_nodes,
+                                        v_pad=self.v_pad)
+
+    def _step_fn(self):
+        if self.policy.partition == "sharded":
+            from repro.core.dks_sharded import superstep_frontier
+            return superstep_frontier
+        return superstep
+
+    def _executable(self, cfg: DKSConfig, kind: str):
+        """Fetch-or-compile the executor for a query shape.
+
+        ``kind``: "single" (jitted while-loop), "batch" (vmapped while-loop
+        over the query axis), "stream" ((init, superstep) jitted pair).
+        The trace counter increments at trace time only, so a cache hit
+        leaves it untouched — that is the no-re-trace guarantee tests
+        assert.
+        """
+        key = (cfg, self.policy.partition, kind)
+        fn = self._executables.get(key)
+        if fn is not None:
+            return fn
+        step = self._step_fn()
+
+        def _run(graph, masks, _freeze=False):
+            self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+            state = init_state(graph, masks, cfg)
+
+            def body(st):
+                nxt = step(graph, st, cfg)
+                # Batched loops step every lane until the whole batch is
+                # done; freeze finished lanes so counters stop with them.
+                return freeze_finished(st, nxt) if _freeze else nxt
+
+            return jax.lax.while_loop(lambda st: ~st.done, body, state)
+
+        if kind == "single":
+            fn = jax.jit(_run)
+        elif kind == "batch":
+            fn = jax.jit(jax.vmap(
+                functools.partial(_run, _freeze=True), in_axes=(None, 0)))
+        elif kind == "stream":
+            def _init(graph, masks):
+                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+                return init_state(graph, masks, cfg)
+
+            def _step(graph, st):
+                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+                return step(graph, st, cfg)
+
+            # A cached stream pair counts 2 traces (init + superstep).
+            fn = (jax.jit(_init), jax.jit(_step))
+        else:
+            raise ValueError(f"unknown executable kind {kind!r}")
+        self._executables[key] = fn
+        return fn
+
+    def _make_result(
+        self,
+        keywords: list,
+        masks: np.ndarray,
+        state: DKSState,
+        cfg: DKSConfig,
+        wall_time_s: float,
+        extract: bool,
+        keep_state: bool = False,
+    ) -> QueryResult:
+        weights = np.asarray(state.topk_w)
+        roots = np.asarray(state.topk_root)
+        budget_hit = bool(state.budget_hit)
+        capped = bool(state.capped)
+        # The SPA cover DP (a host-driven O(3^m) loop of tiny device ops)
+        # only informs the ratio on forced early exit (budget or superstep
+        # cap) — skip it on proven exits.
+        spa = None
+        ratio = 0.0
+        if budget_hit or capped:
+            shat = jnp.minimum(state.s_front + self._e_min, INF)
+            spa = float(spa_cover_dp(shat, cfg.m))
+            ratio = float(spa_ratio(state.topk_w[0], spa))
+        answers = []
+        if extract and weights[0] < INF:
+            answers = extract_answers(
+                np.asarray(state.S), self.graph,
+                masks[:, : self.n_nodes], k=cfg.k)
+        return QueryResult(
+            query=tuple(keywords),
+            m=cfg.m,
+            k=cfg.k,
+            answers=answers,
+            weights=weights,
+            roots=roots,
+            kw_nodes=int(masks.sum()),
+            supersteps=int(state.step),
+            msgs_bfs=float(state.msgs_bfs),
+            msgs_deep=float(state.msgs_deep),
+            explored_frac=float(jnp.mean(state.visited[: self.n_nodes])),
+            done=bool(state.done),
+            budget_hit=budget_hit,
+            capped=capped,
+            spa=spa,
+            spa_ratio=ratio,
+            wall_time_s=wall_time_s,
+            state=state if keep_state else None,
+        )

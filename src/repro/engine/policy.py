@@ -1,0 +1,68 @@
+"""Execution policy: every backend/partitioning knob of a DKS run in one
+place.
+
+Before the engine existed, callers picked among ``run_dks`` /
+``run_dks_batched`` / ``run_dks_instrumented`` / ``dks_sharded`` by hand and
+threaded ``combine_impl`` / ``relax_impl`` / ``frontier_frac`` flags through
+``DKSConfig`` at every call site.  :class:`ExecutionPolicy` is that choice
+made once, at engine build time; per-query shape parameters (``m``, ``k``)
+stay out of it so one policy serves every query.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dks import DKSConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a :class:`~repro.engine.QueryEngine` executes queries.
+
+    Attributes:
+      backend:    "jnp" (pure XLA ops) or "pallas" (hand-written TPU kernels
+                  for the relax and combine phases).
+      partition:  "single" — dense single-program graph residency (also the
+                  right choice under pjit auto-sharding), or "sharded" —
+                  frontier-compressed ``shard_map`` residency
+                  (:mod:`repro.core.dks_sharded`) for multi-device meshes.
+      n_shards:   shard count for ``partition="sharded"``; default = number
+                  of local devices.
+      exit_mode:  "sound" (stop once no better answer can appear, Sec. 6) or
+                  "none" (run to frontier exhaustion).
+      max_supersteps / message_budget / frontier_frac / combine_passes:
+                  forwarded to :class:`DKSConfig` (paper Sec. 5.4 budget and
+                  forced-stop semantics).
+    """
+
+    backend: str = "jnp"            # "jnp" | "pallas"
+    partition: str = "single"       # "single" | "sharded"
+    n_shards: int | None = None
+    exit_mode: str = "sound"        # "sound" | "none"
+    max_supersteps: int = 64
+    message_budget: float = float("inf")
+    frontier_frac: float = 0.25
+    combine_passes: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.partition not in ("single", "sharded"):
+            raise ValueError(f"unknown partition {self.partition!r}")
+        if self.exit_mode not in ("sound", "none"):
+            raise ValueError(f"unknown exit_mode {self.exit_mode!r}")
+
+    def dks_config(self, m: int, k: int) -> DKSConfig:
+        """Materialize the per-query static config for an (m, k) shape."""
+        return DKSConfig(
+            m=m,
+            k=k,
+            max_supersteps=self.max_supersteps,
+            message_budget=self.message_budget,
+            exit_mode=self.exit_mode,
+            combine_impl=self.backend,
+            relax_impl=self.backend,
+            combine_passes=self.combine_passes,
+            frontier_frac=self.frontier_frac,
+        )

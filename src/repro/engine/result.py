@@ -1,0 +1,148 @@
+"""Query results: ranked answer trees plus the run statistics and
+approximation bounds the paper reports (supersteps, BFS/deep messages,
+explored fraction, SPA ratio on forced early exit — Sec. 5.4 / Fig. 12).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import INF
+from repro.core.dks import DKSState
+from repro.core.reconstruct import AnswerTree
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """One answered relationship query.
+
+    Attributes:
+      query:         the tokens as given to the engine.
+      m, k:          query shape (keywords, answers requested).
+      answers:       ranked minimal answer trees (host-reconstructed; empty
+                     when extraction was skipped or nothing was found).
+      weights:       f32[k] global top-k distinct answer weights (INF pad).
+      roots:         i32[k] their root nodes (-1 pad).
+      kw_nodes:      total keyword-node count of the query (paper Fig. 9's
+                     x-axis; the size of the superstep-0 frontier).
+      supersteps:    Pregel supersteps executed.
+      msgs_bfs / msgs_deep: cumulative message counts (paper Fig. 11/14).
+      explored_frac: fraction of real nodes ever activated (paper Fig. 13).
+      done:          the run stopped (for any reason, including forced
+                     stops — check ``budget_hit``/``capped`` to tell).
+      budget_hit:    stopped by the message budget / frontier overflow
+                     (paper Sec. 5.4 forced stop).
+      capped:        stopped only by the ``max_supersteps`` cap — the run
+                     was truncated before any exit criterion fired (``spa``
+                     / ``spa_ratio`` are reported, as for ``budget_hit``).
+      spa:           smallest-possible-answer bound at exit (cover DP over
+                     frontier minima), computed only on forced stops
+                     (``budget_hit`` / ``capped``); None otherwise.
+      spa_ratio:     paper Fig. 12 degree of approximation: best/SPA, or 0
+                     when the SPA estimate certifies the answer (paper
+                     convention — on forced stops this relies on the SPA
+                     estimator, not the sound ``nu`` bound; see
+                     ``StreamUpdate.proven_optimal`` for the sound claim).
+      wall_time_s:   device wall time for the superstep loop (for batched
+                     queries: the shared bucket time).
+      state:         the raw final :class:`DKSState` (device arrays) when
+                     the query was made with ``keep_state=True``; None
+                     otherwise, so served results don't pin the dense
+                     ``[V, 2^m, K]`` table in device memory.
+    """
+
+    query: tuple
+    m: int
+    k: int
+    answers: list[AnswerTree]
+    weights: np.ndarray
+    roots: np.ndarray
+    kw_nodes: int
+    supersteps: int
+    msgs_bfs: float
+    msgs_deep: float
+    explored_frac: float
+    done: bool
+    budget_hit: bool
+    capped: bool
+    spa: float | None
+    spa_ratio: float
+    wall_time_s: float
+    state: DKSState | None
+
+    @property
+    def found(self) -> bool:
+        return bool(self.weights[0] < INF)
+
+    @property
+    def best(self) -> AnswerTree | None:
+        return self.answers[0] if self.answers else None
+
+    @property
+    def best_weight(self) -> float:
+        return float(self.weights[0])
+
+    @property
+    def msgs_total(self) -> float:
+        return self.msgs_bfs + self.msgs_deep
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamUpdate:
+    """One superstep of a streaming query (engine.query_stream).
+
+    The paper's early-termination guarantee as a first-class value: after
+    every superstep the caller sees the current best answers together with a
+    lower bound on the optimum (the paper's SPA estimate, Sec. 5.4, combined
+    with the provably sound ``nu`` bound), so it can stop as soon as the
+    approximation is good enough.
+
+    Attributes:
+      step:          superstep index (1-based; the init superstep is 0).
+      weights:       f32[k] current global top-k distinct answer weights.
+      roots:         i32[k] their roots.
+      frontier:      number of active vertices entering the next superstep.
+      msgs_bfs / msgs_deep: cumulative message counts.
+      nu_full:       sound lower bound on any *newly appearing* full-set
+                     value in a future superstep (spa.nu_lower_bound).
+      spa:           cover-DP smallest-possible-answer estimate from the
+                     current frontier minima (paper Sec. 5.4).
+      opt_lower_bound: running *reported* lower bound on the optimum: max
+                     over supersteps so far of min(best, spa) and
+                     min(best, nu_full).  The ``nu`` component is provably
+                     sound; ``spa`` is the paper's estimator, so this is
+                     the paper's reporting convention, not a proof.
+      sound_opt_lower_bound: running lower bound built from sound facts
+                     only — the ``nu`` bound, an exhausted frontier, or a
+                     non-budget exit.  ``proven_optimal`` keys off this.
+      spa_ratio:     inf while no answer is known; then
+                     best / opt_lower_bound, monotonically non-increasing;
+                     0 once the current best cannot be improved per the
+                     reported bound (paper Fig. 12 convention).
+      done:          the run's exit criterion has fired (final update).
+    """
+
+    step: int
+    weights: np.ndarray
+    roots: np.ndarray
+    frontier: int
+    msgs_bfs: float
+    msgs_deep: float
+    nu_full: float
+    spa: float
+    opt_lower_bound: float
+    sound_opt_lower_bound: float
+    spa_ratio: float
+    done: bool
+
+    @property
+    def best_weight(self) -> float:
+        return float(self.weights[0])
+
+    @property
+    def proven_optimal(self) -> bool:
+        """Sound claim: no future superstep can beat the current best."""
+        return self.best_weight < INF and \
+            self.best_weight <= self.sound_opt_lower_bound

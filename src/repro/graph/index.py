@@ -45,9 +45,19 @@ class InvertedIndex:
     def lookup(self, token) -> np.ndarray:
         return self._frozen.get(token, np.zeros(0, np.int32))
 
-    def keyword_masks(self, query: list, n_nodes: int) -> np.ndarray:
-        """bool[m, n_nodes] — keyword-node masks for a query."""
-        masks = np.zeros((len(query), n_nodes), bool)
+    def keyword_masks(
+        self, query: list, n_nodes: int, v_pad: int | None = None
+    ) -> np.ndarray:
+        """bool[m, v_pad or n_nodes] — keyword-node masks for a query.
+
+        ``v_pad``: pad the node axis out to the device graph's padded node
+        count, so the masks feed the DKS executors directly (keyword nodes
+        only ever land in the first ``n_nodes`` columns).
+        """
+        width = n_nodes if v_pad is None else v_pad
+        if width < n_nodes:
+            raise ValueError(f"v_pad={v_pad} smaller than n_nodes={n_nodes}")
+        masks = np.zeros((len(query), width), bool)
         for i, tok in enumerate(query):
             masks[i, self.lookup(tok)] = True
         return masks

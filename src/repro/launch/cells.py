@@ -404,7 +404,7 @@ def dks_cell(ds_name: str, m: int = 4, k: int = 2,
         topk_root=sds((k,), jnp.int32),
         msgs_bfs=sds((), jnp.float32), msgs_deep=sds((), jnp.float32),
         step=sds((), jnp.int32), done=sds((), jnp.bool_),
-        budget_hit=sds((), jnp.bool_))
+        budget_hit=sds((), jnp.bool_), capped=sds((), jnp.bool_))
     cfg = DKSConfig(m=m, k=k, max_supersteps=64)
     fn = functools.partial(dks_sharded.superstep_frontier, cfg=cfg)
 
@@ -420,7 +420,8 @@ def dks_cell(ds_name: str, m: int = 4, k: int = 2,
         S=P(ALL, None, None), changed=P(ALL), first_fire=P(ALL),
         visited=P(ALL),
         g=P(None), s_front=P(None), topk_w=P(None), topk_root=P(None),
-        msgs_bfs=P(), msgs_deep=P(), step=P(), done=P(), budget_hit=P())
+        msgs_bfs=P(), msgs_deep=P(), step=P(), done=P(), budget_hit=P(),
+        capped=P())
     return Cell(f"dks-{ds_name}", f"superstep_m{m}_k{k}", "dks", fn,
                 (graph, state), (gspec, sspec), donate=(1,),
                 model_flops=rl.model_flops_dks(ds.n_nodes, e_sym, m, k),
@@ -454,7 +455,7 @@ def dks_cell_dense(ds_name: str, m: int = 4, k: int = 2) -> Cell:
         topk_root=sds((k,), jnp.int32),
         msgs_bfs=sds((), jnp.float32), msgs_deep=sds((), jnp.float32),
         step=sds((), jnp.int32), done=sds((), jnp.bool_),
-        budget_hit=sds((), jnp.bool_))
+        budget_hit=sds((), jnp.bool_), capped=sds((), jnp.bool_))
     cfg = DKSConfig(m=m, k=k, max_supersteps=64)
     fn = functools.partial(dks_mod.superstep, cfg=cfg)
     gspec = DeviceGraph(
@@ -464,7 +465,8 @@ def dks_cell_dense(ds_name: str, m: int = 4, k: int = 2) -> Cell:
     sspec = DKSState(
         S=P(DP, TP, None), changed=P(DP), first_fire=P(DP), visited=P(DP),
         g=P(None), s_front=P(None), topk_w=P(None), topk_root=P(None),
-        msgs_bfs=P(), msgs_deep=P(), step=P(), done=P(), budget_hit=P())
+        msgs_bfs=P(), msgs_deep=P(), step=P(), done=P(), budget_hit=P(),
+        capped=P())
     return Cell(f"dks-{ds_name}", f"superstep_dense_m{m}_k{k}", "dks", fn,
                 (graph, state), (gspec, sspec), donate=(1,),
                 model_flops=rl.model_flops_dks(ds.n_nodes, e_sym, m, k),

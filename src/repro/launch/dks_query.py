@@ -1,10 +1,14 @@
-"""Relationship-query driver (the paper's end-to-end flow, Fig. 2c):
+"""Relationship-query CLI (the paper's end-to-end flow, Fig. 2c), served by
+:class:`repro.engine.QueryEngine`:
 
-index lookup -> keyword-node masks -> DKS supersteps (jitted while-loop)
--> aggregator-side answer-tree extraction.
+    engine = QueryEngine.build(graph, index=index, policy=policy)
+    result = engine.query(tokens, k=k)      # ranked answer trees + stats
 
 ``python -m repro.launch.dks_query --dataset bluk-bnb-cpu \
       --query 3,17,42 --k 2``
+
+``--stream`` prints per-superstep approximate answers with the paper's
+early-termination bound (SPA ratio) instead of just the final result.
 """
 
 from __future__ import annotations
@@ -12,12 +16,9 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax.numpy as jnp
-import numpy as np
-
+from repro import INF
 from repro.configs import DKS_CONFIGS
-from repro.core import DKSConfig, extract_answers, run_dks
-from repro.core.spa import nu_lower_bound, spa_cover_dp, spa_ratio
+from repro.engine import ExecutionPolicy, QueryEngine
 from repro.graph.generators import lod_like_graph
 from repro.graph.index import InvertedIndex
 
@@ -28,6 +29,12 @@ def load_dataset(name: str):
                                vocab=ds.vocab, tau=ds.tau)
     index = InvertedIndex.from_token_matrix(tokens)
     return ds, g, index
+
+
+def build_engine(name: str, policy: ExecutionPolicy | None = None):
+    """Dataset name -> (dataset config, ready QueryEngine)."""
+    ds, g, index = load_dataset(name)
+    return ds, QueryEngine.build(g, index=index, policy=policy)
 
 
 def main() -> int:
@@ -43,13 +50,23 @@ def main() -> int:
     ap.add_argument("--message-budget", type=float, default=float("inf"))
     ap.add_argument("--exit-mode", default="sound",
                     choices=["sound", "none"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-superstep answers with SPA bounds")
     args = ap.parse_args()
 
     t0 = time.time()
-    ds, g, index = load_dataset(args.dataset)
-    print(f"loaded {ds.name}: V={g.n_nodes:,} E_sym={g.n_edges_sym:,} "
+    policy = ExecutionPolicy(
+        backend=args.backend,
+        exit_mode=args.exit_mode,
+        max_supersteps=args.max_supersteps,
+        message_budget=args.message_budget,
+    )
+    ds, engine = build_engine(args.dataset, policy)
+    print(f"loaded {ds.name}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
           f"({time.time()-t0:.1f}s)")
 
+    index = engine.index
     if args.query:
         query = [int(t) for t in args.query.split(",")]
     else:
@@ -58,33 +75,30 @@ def main() -> int:
         query = mid[:: max(1, len(mid) // args.m)][: args.m]
     print("query tokens:", query, "df:", [index.df(t) for t in query])
 
-    masks = index.keyword_masks(query, g.n_nodes)
-    dg = g.to_device()
-    if masks.shape[1] < dg.v_pad:
-        masks = np.pad(masks, ((0, 0), (0, dg.v_pad - masks.shape[1])))
-    cfg = DKSConfig(m=len(query), k=args.k,
-                    max_supersteps=args.max_supersteps,
-                    message_budget=args.message_budget,
-                    exit_mode=args.exit_mode)
-    t0 = time.time()
-    state = run_dks(dg, jnp.asarray(masks), cfg)
-    dt = time.time() - t0
+    if args.stream:
+        def show(upd):
+            best = "-" if upd.best_weight >= INF else f"{upd.best_weight:g}"
+            ratio = ("inf" if upd.spa_ratio == float("inf")
+                     else f"{upd.spa_ratio:.3f}")
+            print(f"  step {upd.step:2d} frontier={upd.frontier:6d} "
+                  f"best={best:>6} spa-ratio={ratio}"
+                  f"{'  [exit]' if upd.done else ''}")
 
-    weights = np.asarray(state.topk_w)
-    print(f"\nDKS finished in {int(state.step)} supersteps, {dt:.2f}s")
-    print(f"messages: bfs={float(state.msgs_bfs):,.0f} "
-          f"deep={float(state.msgs_deep):,.0f} "
-          f"({100*(float(state.msgs_bfs)+float(state.msgs_deep))/max(dg.n_edges,1):.1f}% of |E|)")
-    print(f"explored {100*float(jnp.mean(state.visited[:g.n_nodes])):.1f}% of nodes")
-    if bool(state.budget_hit):
-        nu = nu_lower_bound(state.g, dg.e_min(), cfg.m)
-        spa = spa_cover_dp(state.s_front + dg.e_min(), cfg.m)
-        print(f"budget hit: SPA-ratio={float(spa_ratio(state.topk_w[0], spa)):.3f}")
+        res = engine.query_streamed(query, k=args.k, on_update=show)
+    else:
+        res = engine.query(query, k=args.k)
+    print(f"\nDKS finished in {res.supersteps} supersteps, "
+          f"{res.wall_time_s:.2f}s")
+    print(f"messages: bfs={res.msgs_bfs:,.0f} deep={res.msgs_deep:,.0f} "
+          f"({100*res.msgs_total/max(engine.n_edges,1):.1f}% of |E|)")
+    print(f"explored {100*res.explored_frac:.1f}% of nodes")
+    if res.budget_hit:
+        print(f"budget hit: SPA-ratio={res.spa_ratio:.3f}")
+    elif res.capped:
+        print(f"superstep cap hit: SPA-ratio={res.spa_ratio:.3f}")
 
-    print("\ntop answers (weights):", [w for w in weights if w < 1e8])
-    answers = extract_answers(np.asarray(state.S), g, masks[:, : g.n_nodes],
-                              k=args.k)
-    for i, a in enumerate(answers):
+    print("\ntop answers (weights):", [w for w in res.weights if w < 1e8])
+    for i, a in enumerate(res.answers):
         print(f"  #{i+1} weight={a.weight} root={a.root} "
               f"edges={list(a.edges)[:8]}{'...' if len(a.edges) > 8 else ''}")
     return 0

@@ -23,3 +23,28 @@ def test_batched_queries_match_singles():
         single = run_dks(dg, jnp.asarray(masks[i]), cfg)
         np.testing.assert_allclose(np.asarray(single.topk_w),
                                    np.asarray(batched.topk_w[i]))
+
+
+def test_batched_counters_freeze_after_exit():
+    """The vmapped while-loop steps every query until the whole batch
+    finishes; finished queries must not keep accumulating msgs/steps
+    (freeze_finished).  Mixing a trivially-fast query with slow ones makes
+    the unfrozen inflation visible."""
+    g = random_weighted_graph(120, 360, seed=5)
+    dg = g.to_device()
+    masks = np.zeros((3, 2, dg.v_pad), bool)
+    # q0: both keywords on one node -> exits immediately.
+    masks[0, 0, 7] = masks[0, 1, 7] = True
+    # q1/q2: far-apart keyword pairs -> many supersteps.
+    masks[1, 0, 0] = masks[1, 1, 100] = True
+    masks[2, 0, 3] = masks[2, 1, 110] = True
+    cfg = DKSConfig(m=2, k=1, max_supersteps=32)
+    batched = run_dks_batched(dg, jnp.asarray(masks), cfg)
+    steps = np.asarray(batched.step)
+    assert steps.max() > steps.min(), "need heterogeneous convergence"
+    for i in range(3):
+        single = run_dks(dg, jnp.asarray(masks[i]), cfg)
+        assert int(batched.step[i]) == int(single.step)
+        assert float(batched.msgs_bfs[i]) == float(single.msgs_bfs)
+        assert float(batched.msgs_deep[i]) == float(single.msgs_deep)
+        assert bool(batched.budget_hit[i]) == bool(single.budget_hit)

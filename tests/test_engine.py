@@ -1,0 +1,183 @@
+"""QueryEngine facade tests: parity with the raw core entry points,
+m-bucketed batching, streaming bound monotonicity, and compiled-executable
+cache reuse (no re-tracing for repeated query shapes)."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro import INF
+from repro.core import DKSConfig, extract_answers, run_dks
+from repro.engine import ExecutionPolicy, QueryEngine
+from repro.graph.generators import lod_like_graph
+from repro.graph.index import InvertedIndex
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, tokens = lod_like_graph(600, 1800, seed=11, vocab=120)
+    index = InvertedIndex.from_token_matrix(tokens)
+    engine = QueryEngine.build(
+        g, index=index, policy=ExecutionPolicy(max_supersteps=32))
+    return g, index, engine
+
+
+def mid_df_tokens(index, n, lo=2, hi=60):
+    """n tokens with moderate document frequency (answerable queries)."""
+    toks = [t for t in sorted(index.vocabulary(), key=index.df)
+            if lo <= index.df(t) <= hi]
+    assert len(toks) >= n
+    return toks[:n]
+
+
+def test_query_matches_raw_run_dks(setup):
+    g, index, engine = setup
+    query = mid_df_tokens(index, 3)
+    k = 2
+    res = engine.query(query, k=k)
+
+    masks = index.keyword_masks(query, g.n_nodes,
+                                v_pad=engine.device_graph.v_pad)
+    cfg = DKSConfig(m=len(query), k=k, max_supersteps=32)
+    state = run_dks(engine.device_graph, jnp.asarray(masks), cfg)
+    np.testing.assert_allclose(res.weights, np.asarray(state.topk_w))
+    assert res.supersteps == int(state.step)
+    assert res.msgs_bfs == float(state.msgs_bfs)
+    assert res.msgs_deep == float(state.msgs_deep)
+
+    raw_answers = extract_answers(np.asarray(state.S), g,
+                                  masks[:, : g.n_nodes], k=k)
+    assert [(a.weight, a.edges) for a in res.answers] == \
+           [(a.weight, a.edges) for a in raw_answers]
+    assert res.found and res.best.weight == res.answers[0].weight
+
+
+def test_query_batch_matches_per_query_runs(setup):
+    g, index, engine = setup
+    toks = mid_df_tokens(index, 10)
+    # Mixed keyword counts force m-bucketing (2- and 3-keyword buckets).
+    queries = [toks[0:2], toks[2:5], toks[5:7], toks[7:10]]
+    batched = engine.query_batch(queries, k=2)
+    assert len(batched) == len(queries)
+    for q, br in zip(queries, batched):
+        sr = engine.query(q, k=2)
+        assert br.query == tuple(q) and br.m == len(q)
+        np.testing.assert_allclose(br.weights, sr.weights)
+        assert br.supersteps == sr.supersteps
+        # Finished lanes are frozen, so batched counters match exactly even
+        # though the vmapped while-loop runs until the slowest query exits.
+        assert br.msgs_bfs == sr.msgs_bfs
+        assert br.msgs_deep == sr.msgs_deep
+        assert [a.weight for a in br.answers] == [a.weight for a in sr.answers]
+
+
+def test_query_stream_bound_never_worsens(setup):
+    g, index, engine = setup
+    query = mid_df_tokens(index, 3)
+    updates = list(engine.query_stream(query, k=1))
+    assert updates, "stream yielded nothing"
+    ratios = [u.spa_ratio for u in updates]
+    # inf while no answer is known, then monotone non-increasing.
+    for prev, cur in zip(ratios, ratios[1:]):
+        assert cur <= prev, f"SPA ratio worsened: {ratios}"
+    # Steps advance one superstep at a time.
+    assert [u.step for u in updates] == list(range(len(updates)))
+    last = updates[-1]
+    assert last.done
+    # Sound exit without a budget: the final answer is proven optimal.
+    assert last.spa_ratio == 0.0 and last.proven_optimal
+    # And the streamed final weights match the one-shot query.
+    res = engine.query(query, k=1)
+    np.testing.assert_allclose(last.weights, res.weights)
+
+
+def test_compiled_executable_cache_reuse(setup):
+    g, index, engine = setup
+    toks = mid_df_tokens(index, 8)
+    before = engine.cache_stats["traces"]
+    engine.query(toks[0:3], k=3, extract=False)
+    engine.query(toks[3:6], k=3, extract=False)
+    engine.query(toks[5:8], k=3, extract=False)
+    # Three same-(m, k) queries -> exactly one trace.
+    assert engine.trace_count(3, 3) == 1
+    assert engine.cache_stats["traces"] == before + 1
+    # A different shape compiles its own executable once.
+    engine.query(toks[0:2], k=3, extract=False)
+    engine.query(toks[2:4], k=3, extract=False)
+    assert engine.trace_count(2, 3) == 1
+
+
+def test_policy_overrides_key_the_cache(setup):
+    g, index, engine = setup
+    toks = mid_df_tokens(index, 2)
+    r1 = engine.query(toks, k=1, extract=False)
+    r2 = engine.query(toks, k=1, extract=False, message_budget=10.0)
+    assert r2.budget_hit and not r1.budget_hit
+    assert engine.trace_count(2, 1) == 1
+    assert engine.trace_count(2, 1, message_budget=10.0) == 1
+
+
+def test_keyword_masks_v_pad():
+    idx = InvertedIndex.from_token_matrix(
+        np.asarray([[0, 1], [1, 2], [2, 0]], np.int32))
+    masks = idx.keyword_masks([1, 2], 3, v_pad=8)
+    assert masks.shape == (2, 8)
+    assert masks[:, 3:].sum() == 0
+    np.testing.assert_array_equal(
+        masks[:, :3], idx.keyword_masks([1, 2], 3))
+    with pytest.raises(ValueError):
+        idx.keyword_masks([1], 3, v_pad=2)
+
+
+def test_build_from_labels():
+    from repro.graph.structure import build_graph
+    g = build_graph([0, 1], [1, 2], 3, w=np.ones(2, np.float32),
+                    labels=["red piano", "blue piano", "red door"])
+    engine = QueryEngine.build(g)
+    res = engine.query(["blue", "door"], k=1)
+    assert res.found
+    assert res.best_weight == 1.0  # blue@1 -- door@2 over the unit edge
+
+
+def test_capped_run_is_not_certified_optimal():
+    """A run truncated by max_supersteps must report capped (with an SPA
+    ratio), never a proven-optimal answer — the heavy direct edge is found
+    early, the cheap long path only after more supersteps."""
+    from repro.graph.structure import build_graph
+    # Direct edge 0-1 of weight 100 vs a cheap 10-hop unit path 0-2-...-10-1.
+    src = [0, 0] + list(range(2, 10)) + [10]
+    dst = [1, 2] + list(range(3, 11)) + [1]
+    w = np.asarray([100.0] + [1.0] * 10, np.float32)
+    g = build_graph(src, dst, 11, w=w)
+    tokens = np.arange(11, dtype=np.int32).reshape(11, 1)  # node i holds tok i
+    engine = QueryEngine.build(g, tokens=tokens)
+
+    trunc = engine.query([0, 1], k=1, max_supersteps=2)
+    assert trunc.best_weight == 100.0
+    assert trunc.capped and trunc.done and not trunc.budget_hit
+    assert trunc.spa is not None and trunc.spa_ratio > 0.0
+
+    updates = list(engine.query_stream([0, 1], k=1, max_supersteps=2))
+    assert not updates[-1].proven_optimal
+
+    full = engine.query([0, 1], k=1)
+    assert full.best_weight == 10.0  # the cheap path, proven
+    assert not full.capped and full.spa_ratio == 0.0 and full.spa is None
+
+
+def test_infeasible_query(setup):
+    g, index, engine = setup
+    missing = max(index.vocabulary()) + 1000
+    res = engine.query([missing, missing + 1], k=1)
+    assert not res.found and res.answers == []
+    assert res.done and not res.budget_hit
+    assert res.weights[0] >= INF
+
+
+def test_engine_reexports_from_core():
+    import repro.core as core
+    assert core.QueryEngine is QueryEngine
+    assert core.ExecutionPolicy is ExecutionPolicy
+    with pytest.raises(AttributeError):
+        core.not_a_symbol
