@@ -11,6 +11,7 @@ code paths drive the full-scale graphs on a pod.
   fig13    — % nodes explored                              (paper Fig. 13)
   fig14    — messages as % of |E|                          (paper Fig. 14)
   fig15    — parallel efficiency proxy (edge-cut + balance) (paper Fig. 15)
+  fig15_sharded — executable sharded-vs-single wall times  (paper Fig. 15)
 """
 
 from __future__ import annotations
@@ -23,7 +24,7 @@ import numpy as np
 
 from benchmarks.common import Bench, load
 from repro.core.baselines import vanilla_parallel_bfs
-from repro.engine import QueryResult
+from repro.engine import ExecutionPolicy, QueryEngine, QueryResult
 from repro.graph.partition import edge_cut, hash_partition
 
 
@@ -143,4 +144,49 @@ def fig15_parallel_efficiency(dataset="sec-rdfabout-cpu",
         rows.append({"workers": w, "edge_cut": round(cut, 3),
                      "load_imbalance": round(imbalance, 3),
                      "predicted_speedup": round(speedup, 2)})
+    return rows
+
+
+def fig15_sharded_vs_single(dataset="sec-rdfabout-cpu", k=1, n_queries=4):
+    """Paper Fig. 15's axis, *executed*: the same queries served by the
+    dense single-program engine and the frontier-compressed shard_map
+    engine (sharded over whatever devices this host exposes; runs on any
+    jax via repro.shardmap).  On the CPU container this measures the
+    shard_map machinery's overhead at n_shards=|local devices|; on a pod
+    the identical code path is the scaling curve.  Parity of the top-K
+    weights is asserted per query — the benchmark doubles as an
+    end-to-end correctness check of the revived sharded path."""
+    bench = load(dataset)
+    sharded = QueryEngine.build(
+        bench.g, index=bench.index,
+        policy=ExecutionPolicy(partition="sharded", max_supersteps=32,
+                               frontier_frac=1.0))
+    queries = bench.queries[:n_queries]
+    # Untimed warm-up, one query per (m, k) shape on each engine: the timed
+    # rows must measure execution, not the first-trace compilation.
+    for m in sorted({len(q) for q in queries}):
+        warm = next(q for q in queries if len(q) == m)
+        bench.engine.query(warm, k=k, extract=False)
+        sharded.query(warm, k=k, extract=False)
+    rows = []
+    for q in queries:
+        rs = bench.engine.query(q, k=k, extract=False)
+        rh = sharded.query(q, k=k, extract=False)
+        # Tolerant parity check: on multi-device meshes shard-order float
+        # reductions may differ in the last ulp; a real divergence still
+        # aborts loudly.
+        match = bool(np.allclose(rs.weights, rh.weights,
+                                 rtol=1e-5, atol=1e-5))
+        assert match, (
+            f"sharded/single top-K diverged for {q}: "
+            f"{rh.weights} vs {rs.weights}")
+        rows.append({
+            "m": rs.m,
+            "n_shards": sharded.device_graph.n_shards,
+            "single_s": round(rs.wall_time_s, 4),
+            "sharded_s": round(rh.wall_time_s, 4),
+            "speedup": round(rs.wall_time_s / max(rh.wall_time_s, 1e-9), 3),
+            "weights_match": match,
+            "supersteps": rh.supersteps,
+        })
     return rows

@@ -2,7 +2,9 @@
 
 One benchmark per paper table/figure (Sec. 7.2), plus kernel micro-benches.
 Prints ``name,us_per_call,derived`` CSV rows and writes the full structured
-results to experiments/bench_results.json.
+results to experiments/bench_results.json, plus the machine-readable
+per-figure wall-time summary experiments/BENCH_dks.json (the perf
+trajectory file — compare it across commits to spot regressions).
 
 ``--full`` runs the complete query suite (slower); default is a CPU-sized
 subset exercising every code path.
@@ -29,6 +31,7 @@ def main() -> None:
 
     results = {}
     rows = []
+    fig_wall_s = {}
 
     def record(name, fn, *fargs, **fkw):
         if args.only and args.only not in name:
@@ -37,6 +40,7 @@ def main() -> None:
         out = fn(*fargs, **fkw)
         dt = time.perf_counter() - t0
         results[name] = out
+        fig_wall_s[name] = round(dt, 3)
         rows.append((name, round(dt * 1e6, 1), "paper-figure"))
         print(f"# --- {name} ({dt:.1f}s) ---")
         print(json.dumps(out, indent=1)[:2000])
@@ -53,6 +57,8 @@ def main() -> None:
     record("fig14_messages", dks.fig14_messages,
            n_queries=3 if not args.full else 10)
     record("fig15_parallel_efficiency", dks.fig15_parallel_efficiency)
+    record("fig15_sharded_vs_single", dks.fig15_sharded_vs_single,
+           n_queries=2 if not args.full else 8)
 
     print("\nname,us_per_call,derived")
     for bench_fn in (kb.bench_subset_combine, kb.bench_segment_topk,
@@ -64,7 +70,18 @@ def main() -> None:
             print(f"{r['name']},{r['us_per_call']},{r['derived']}")
     OUT.mkdir(exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=1))
+    import jax
+
+    bench_dks = {
+        "jax": jax.__version__,
+        "n_devices": len(jax.devices()),
+        "full": bool(args.full),
+        "per_figure_wall_s": fig_wall_s,
+        "sharded_vs_single": results.get("fig15_sharded_vs_single"),
+    }
+    (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))
     print(f"\nwrote {OUT / 'bench_results.json'}")
+    print(f"wrote {OUT / 'BENCH_dks.json'}")
 
 
 if __name__ == "__main__":

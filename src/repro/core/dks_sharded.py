@@ -19,6 +19,12 @@ finishes with the SPA bound instead of silently dropping messages.
 
 Combine stays node-local (node axis sharded over ALL mesh axes, keyword-set
 axis replicated), so it needs no collectives at all.
+
+The mesh is *explicit*: :func:`pack_frontier_graph` records it on the
+:class:`FrontierGraph` (a static pytree field), and every executor reads it
+from there — no ambient ``get_abstract_mesh()`` state.  All shard_map/mesh
+API calls go through :mod:`repro.shardmap`, so this path runs on both jax
+0.4.x and >= 0.7.
 """
 
 from __future__ import annotations
@@ -26,13 +32,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import INF
+from repro import INF, shardmap
 from repro.core import semiring, spa
 from repro.core.dks import DKSConfig, DKSState, aggregate, combine, exit_check
 from repro.graph.structure import Graph
@@ -49,6 +56,8 @@ class FrontierGraph:
     edge_dst_l: i32[n_shards, e_cap]  destination LOCAL index on its shard
     edge_w:     f32[n_shards, e_cap]  (INF pad)
     out_degree: i32[V_pad]; node_valid: bool[V_pad]
+    mesh:       the device mesh the shards live on (static; executors read
+                it from here instead of ambient ``get_abstract_mesh`` state)
     """
 
     edge_src: jax.Array
@@ -59,6 +68,7 @@ class FrontierGraph:
     n_nodes: int = dataclasses.field(metadata=dict(static=True))
     n_edges: int = dataclasses.field(metadata=dict(static=True))
     n_shards: int = dataclasses.field(metadata=dict(static=True))
+    mesh: Any = dataclasses.field(default=None, metadata=dict(static=True))
 
     @property
     def v_pad(self) -> int:
@@ -72,9 +82,19 @@ class FrontierGraph:
         return jnp.min(jnp.where(self.edge_w < INF, self.edge_w, INF))
 
 
-def pack_frontier_graph(g: Graph, n_shards: int,
-                        e_slack: float = 1.2) -> FrontierGraph:
-    """Host-side: symmetrized edges grouped by dst owner, padded rows."""
+def pack_frontier_graph(g: Graph, n_shards: int | None = None,
+                        e_slack: float = 1.2,
+                        mesh: Any = None) -> FrontierGraph:
+    """Host-side: symmetrized edges grouped by dst owner, padded rows.
+
+    ``mesh``: the mesh the shards will execute on; recorded on the result so
+    the executors need no ambient mesh state.  ``n_shards`` defaults to the
+    mesh's device count when a mesh is given.
+    """
+    if n_shards is None:
+        if mesh is None:
+            raise ValueError("pack_frontier_graph needs n_shards= or mesh=")
+        n_shards = int(math.prod(mesh.shape.values()))
     v_pad = int(-(-g.n_nodes // n_shards) * n_shards)
     n_loc = v_pad // n_shards
     deg = np.diff(g.indptr)
@@ -104,17 +124,28 @@ def pack_frontier_graph(g: Graph, n_shards: int,
         edge_src=jnp.asarray(edge_src), edge_dst_l=jnp.asarray(edge_dst_l),
         edge_w=jnp.asarray(edge_w), out_degree=jnp.asarray(out_degree),
         node_valid=jnp.asarray(node_valid),
-        n_nodes=g.n_nodes, n_edges=len(src), n_shards=n_shards)
+        n_nodes=g.n_nodes, n_edges=len(src), n_shards=n_shards, mesh=mesh)
 
 
 def _mesh_axes(am) -> tuple[str, ...]:
     return tuple(a for a in MESH_AXES if a in am.axis_names)
 
 
+def _graph_mesh(graph: FrontierGraph):
+    """The graph's recorded mesh; ambient mesh_scope only as a legacy
+    fallback for FrontierGraphs packed without one."""
+    mesh = graph.mesh if graph.mesh is not None else shardmap.get_abstract_mesh()
+    if mesh is None:
+        raise ValueError(
+            "sharded DKS needs a mesh: pack_frontier_graph(..., mesh=...) "
+            "(or run under repro.shardmap.mesh_scope)")
+    return mesh
+
+
 def relax_frontier(graph: FrontierGraph, S: jax.Array, changed: jax.Array,
                    cfg: DKSConfig) -> tuple[jax.Array, jax.Array]:
     """Frontier-compressed relax.  Returns (R[V, 2^m, K], overflow bool)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = _graph_mesh(graph)
     axes = _mesh_axes(am)
     n_shards = graph.n_shards
     n_loc = graph.n_loc
@@ -166,7 +197,7 @@ def relax_frontier(graph: FrontierGraph, S: jax.Array, changed: jax.Array,
     )
     out_specs = (P(axes, None, None), P())
     shard_arange = jnp.arange(n_shards, dtype=jnp.int32)
-    r, ov = jax.shard_map(
+    r, ov = shardmap.shard_map(
         block, mesh=am, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(S, changed, graph.edge_src, graph.edge_dst_l, graph.edge_w,

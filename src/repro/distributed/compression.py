@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import shardmap
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -100,7 +102,7 @@ def compressed_allreduce(
                     new_e.reshape(gl.shape))
 
         other = tuple(a for a in mesh.axis_names if a != axis)
-        return jax.shard_map(
+        return shardmap.shard_map(
             block, mesh=mesh,
             in_specs=(P(), P()), out_specs=(P(), P()),
             check_vma=False,

@@ -32,7 +32,6 @@ on the optimum, so it can stop as soon as the approximation suffices.
 
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 import functools
 import time
@@ -42,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import INF
+from repro import INF, shardmap
 from repro.core.dks import (
     DKSConfig,
     DKSState,
@@ -119,13 +118,8 @@ class QueryEngine:
         if policy.partition == "sharded":
             from repro.core.dks_sharded import pack_frontier_graph
             n_shards = policy.n_shards or len(jax.devices())
-            device_graph = pack_frontier_graph(graph, n_shards)
-            try:
-                mesh = jax.make_mesh(
-                    (n_shards,), ("data",),
-                    axis_types=(jax.sharding.AxisType.Auto,))
-            except (AttributeError, TypeError):  # pre-AxisType jax
-                mesh = jax.make_mesh((n_shards,), ("data",))
+            mesh = shardmap.make_mesh((n_shards,), ("data",))
+            device_graph = pack_frontier_graph(graph, n_shards, mesh=mesh)
         else:
             device_graph = graph.to_device()
         return cls(graph, index, policy, device_graph, mesh=mesh)
@@ -173,6 +167,7 @@ class QueryEngine:
         *,
         extract: bool = True,
         keep_state: bool = False,
+        strict: bool = True,
         **overrides,
     ) -> QueryResult:
         """Answer one relationship query.
@@ -183,19 +178,23 @@ class QueryEngine:
         ``keep_state``: retain the raw final :class:`DKSState` on the
         result (a dense ``[V, 2^m, K]`` table — off by default so served
         results don't pin device memory).
+        ``strict``: raise :class:`KeyError` when a keyword matches no node
+        in the index (the query could only return INF after burning the
+        full superstep budget).  ``strict=False`` runs best-effort; the
+        offending tokens are reported on ``QueryResult.unmatched``.
         ``overrides``: per-call policy overrides (``max_supersteps``,
         ``message_budget``, ``exit_mode``) — they key the executable cache,
         so a steady workload should keep them constant.
         """
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
-        masks = self._masks(keywords)
+        masks, unmatched = self._masks(keywords, strict)
         fn = self._executable(cfg, "single")
         t0 = time.perf_counter()
         state = self._execute(fn, self.device_graph, jnp.asarray(masks))
         dt = time.perf_counter() - t0
         return self._make_result(keywords, masks, state, cfg, dt, extract,
-                                 keep_state)
+                                 keep_state, unmatched=unmatched)
 
     def query_batch(
         self,
@@ -204,6 +203,7 @@ class QueryEngine:
         *,
         extract: bool = True,
         keep_state: bool = False,
+        strict: bool = True,
         **overrides,
     ) -> list[QueryResult]:
         """Answer a batch of queries, amortizing graph residency and kernel
@@ -212,7 +212,14 @@ class QueryEngine:
         Queries are bucketed by keyword count ``m`` (the table shape is
         ``[V, 2^m, K]``, so only same-``m`` queries share an executable);
         each bucket runs as one vmapped device program.  Results come back
-        in input order; ``wall_time_s`` is the shared bucket time.
+        in input order; ``wall_time_s`` is the shared bucket time.  On
+        partition="single" that is the bucket's device execution time; the
+        sharded path serves a bucket as sequential single-query runs
+        (shard_map under vmap is unsupported) and reports the bucket's
+        total serve time — device execution plus per-query host work such
+        as answer extraction — on each of its results.  Within a bucket
+        the value is identical either way; across partitionings the two
+        quantities are not directly comparable.
         """
         results: list[QueryResult | None] = [None] * len(queries)
         buckets: dict[int, list[int]] = {}
@@ -220,13 +227,20 @@ class QueryEngine:
             buckets.setdefault(len(q), []).append(i)
         for m, idxs in sorted(buckets.items()):
             if self.policy.partition == "sharded":
-                # shard_map under vmap is unsupported; serve sequentially.
-                for i in idxs:
-                    results[i] = self.query(queries[i], k=k, extract=extract,
-                                            keep_state=keep_state, **overrides)
+                # shard_map under vmap is unsupported; serve sequentially,
+                # then stamp the shared bucket time per the contract above.
+                t0 = time.perf_counter()
+                bucket = [self.query(queries[i], k=k, extract=extract,
+                                     keep_state=keep_state, strict=strict,
+                                     **overrides)
+                          for i in idxs]
+                dt = time.perf_counter() - t0
+                for i, res in zip(idxs, bucket):
+                    results[i] = dataclasses.replace(res, wall_time_s=dt)
                 continue
             cfg = self._config(m, k, **overrides)
-            masks = np.stack([self._masks(list(queries[i])) for i in idxs])
+            pairs = [self._masks(list(queries[i]), strict) for i in idxs]
+            masks = np.stack([p[0] for p in pairs])
             fn = self._executable(cfg, "batch")
             t0 = time.perf_counter()
             states = self._execute(fn, self.device_graph, jnp.asarray(masks))
@@ -235,13 +249,15 @@ class QueryEngine:
                 st = jax.tree_util.tree_map(lambda x, bi=bi: x[bi], states)
                 results[i] = self._make_result(
                     list(queries[i]), masks[bi], st, cfg, dt, extract,
-                    keep_state)
+                    keep_state, unmatched=pairs[bi][1])
         return results  # type: ignore[return-value]
 
     def query_stream(
         self,
         keywords: Sequence,
         k: int = 1,
+        *,
+        strict: bool = True,
         **overrides,
     ) -> Iterator[StreamUpdate]:
         """Yield per-superstep approximate answers with sound bounds.
@@ -259,8 +275,16 @@ class QueryEngine:
         """
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
-        for _state, update in self._stream(cfg, self._masks(keywords)):
-            yield update
+        # Validate eagerly (this function is not a generator): strict-mode
+        # KeyError fires at the call site, not at first iteration.
+        masks, unmatched = self._masks(keywords, strict)
+
+        def updates() -> Iterator[StreamUpdate]:
+            for _state, update in self._stream(cfg, masks,
+                                               unmatched=unmatched):
+                yield update
+
+        return updates()
 
     def query_streamed(
         self,
@@ -270,6 +294,7 @@ class QueryEngine:
         on_update: Callable[[StreamUpdate], None] | None = None,
         extract: bool = True,
         keep_state: bool = False,
+        strict: bool = True,
         **overrides,
     ) -> QueryResult:
         """Run a streaming query to completion and return its result.
@@ -280,18 +305,19 @@ class QueryEngine:
         """
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
-        masks = self._masks(keywords)
+        masks, unmatched = self._masks(keywords, strict)
         t0 = time.perf_counter()
         state = None
-        for state, update in self._stream(cfg, masks):
+        for state, update in self._stream(cfg, masks, unmatched=unmatched):
             if on_update is not None:
                 on_update(update)
         dt = time.perf_counter() - t0
         assert state is not None
         return self._make_result(keywords, masks, state, cfg, dt, extract,
-                                 keep_state)
+                                 keep_state, unmatched=unmatched)
 
-    def _stream(self, cfg: DKSConfig, masks: np.ndarray):
+    def _stream(self, cfg: DKSConfig, masks: np.ndarray,
+                unmatched: tuple = ()):
         """(state, StreamUpdate) pairs, one per superstep (incl. init)."""
         init_fn, step_fn = self._executable(cfg, "stream")
         state = self._execute(init_fn, self.device_graph, jnp.asarray(masks))
@@ -333,6 +359,7 @@ class QueryEngine:
                 sound_opt_lower_bound=min(sound_lb, INF),
                 spa_ratio=ratio,
                 done=done,
+                unmatched=tuple(unmatched),
             )
             if done or int(state.step) >= cfg.max_supersteps:
                 return
@@ -346,6 +373,7 @@ class QueryEngine:
         exit_hook: Callable[[DKSState], bool] | None = None,
         extract: bool = True,
         keep_state: bool = False,
+        strict: bool = True,
         **overrides,
     ) -> tuple[QueryResult, dict[str, Any]]:
         """Host-driven run with per-phase wall times (paper Table 1) and an
@@ -355,13 +383,13 @@ class QueryEngine:
                 "query_instrumented requires partition='single'")
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
-        masks = self._masks(keywords)
+        masks, unmatched = self._masks(keywords, strict)
         t0 = time.perf_counter()
         state, info = run_dks_instrumented(
             self.device_graph, jnp.asarray(masks), cfg, exit_hook=exit_hook)
         dt = time.perf_counter() - t0
         res = self._make_result(keywords, masks, state, cfg, dt, extract,
-                                keep_state)
+                                keep_state, unmatched=unmatched)
         return res, info
 
     # ------------------------------------------------------------------
@@ -369,22 +397,15 @@ class QueryEngine:
     # ------------------------------------------------------------------
 
     def _mesh_context(self):
-        """Context under which sharded executors must run.
+        """Ambient-mesh scope for sharded execution.
 
-        ``relax_frontier`` reads the ambient mesh via
-        ``jax.sharding.get_abstract_mesh()``, so sharded execution needs an
-        active ``jax.set_mesh`` scope — the same plumbing every direct
-        caller of :mod:`repro.core.dks_sharded` supplies by hand.
+        The sharded executors take their mesh *explicitly* (it rides on
+        :class:`FrontierGraph`), so this scope is not load-bearing for
+        correctness — it is kept so any auto-sharded ops around the
+        shard_map (and user callbacks) see the engine's mesh, on every jax
+        generation (:func:`repro.shardmap.mesh_scope`).
         """
-        if self.mesh is None:
-            return contextlib.nullcontext()
-        set_mesh = getattr(jax, "set_mesh", None) or getattr(
-            jax.sharding, "use_mesh", None)
-        if set_mesh is None:
-            raise NotImplementedError(
-                "partition='sharded' requires jax.set_mesh "
-                f"(unavailable in jax {jax.__version__})")
-        return set_mesh(self.mesh)
+        return shardmap.mesh_scope(self.mesh)
 
     def _execute(self, fn, *args):
         """Run a compiled executor under the engine's mesh (if any) and
@@ -400,9 +421,17 @@ class QueryEngine:
             policy = dataclasses.replace(policy, **overrides)
         return policy.dks_config(m, k)
 
-    def _masks(self, keywords: list) -> np.ndarray:
-        return self.index.keyword_masks(keywords, self.n_nodes,
-                                        v_pad=self.v_pad)
+    def _masks(self, keywords: list,
+               strict: bool = True) -> tuple[np.ndarray, tuple]:
+        """(masks, unmatched tokens).  ``strict`` raises on unmatched —
+        and then guarantees ``unmatched == ()``, so the scan for them only
+        runs in best-effort mode."""
+        masks = self.index.keyword_masks(
+            keywords, self.n_nodes, v_pad=self.v_pad,
+            on_missing="raise" if strict else "ignore")
+        unmatched = () if strict else tuple(
+            self.index.missing_tokens(keywords))
+        return masks, unmatched
 
     def _step_fn(self):
         if self.policy.partition == "sharded":
@@ -467,6 +496,7 @@ class QueryEngine:
         wall_time_s: float,
         extract: bool,
         keep_state: bool = False,
+        unmatched: tuple = (),
     ) -> QueryResult:
         weights = np.asarray(state.topk_w)
         roots = np.asarray(state.topk_root)
@@ -505,4 +535,5 @@ class QueryEngine:
             spa_ratio=ratio,
             wall_time_s=wall_time_s,
             state=state if keep_state else None,
+            unmatched=tuple(unmatched),
         )

@@ -51,6 +51,11 @@ class QueryResult:
                      the query was made with ``keep_state=True``; None
                      otherwise, so served results don't pin the dense
                      ``[V, 2^m, K]`` table in device memory.
+      unmatched:     tokens of the query that matched no node in the index
+                     (always empty under ``strict=True``, which raises
+                     instead; with ``strict=False`` a nonempty value
+                     explains an INF answer without burning supersteps on
+                     diagnosis).
     """
 
     query: tuple
@@ -71,6 +76,7 @@ class QueryResult:
     spa_ratio: float
     wall_time_s: float
     state: DKSState | None
+    unmatched: tuple = ()
 
     @property
     def found(self) -> bool:
@@ -122,6 +128,9 @@ class StreamUpdate:
                      0 once the current best cannot be improved per the
                      reported bound (paper Fig. 12 convention).
       done:          the run's exit criterion has fired (final update).
+      unmatched:     tokens that matched no node (nonempty only under
+                     ``strict=False`` — the streamed diagnosis for an INF
+                     answer, same as ``QueryResult.unmatched``).
     """
 
     step: int
@@ -136,6 +145,7 @@ class StreamUpdate:
     sound_opt_lower_bound: float
     spa_ratio: float
     done: bool
+    unmatched: tuple = ()
 
     @property
     def best_weight(self) -> float:

@@ -45,18 +45,39 @@ class InvertedIndex:
     def lookup(self, token) -> np.ndarray:
         return self._frozen.get(token, np.zeros(0, np.int32))
 
+    def missing_tokens(self, query: list) -> list:
+        """Tokens of ``query`` that match no node (the single definition of
+        "unmatched" — keyword_masks and the engine both use it)."""
+        return [tok for tok in query if len(self.lookup(tok)) == 0]
+
     def keyword_masks(
-        self, query: list, n_nodes: int, v_pad: int | None = None
+        self, query: list, n_nodes: int, v_pad: int | None = None,
+        on_missing: str = "raise",
     ) -> np.ndarray:
         """bool[m, v_pad or n_nodes] — keyword-node masks for a query.
 
         ``v_pad``: pad the node axis out to the device graph's padded node
         count, so the masks feed the DKS executors directly (keyword nodes
         only ever land in the first ``n_nodes`` columns).
+
+        ``on_missing``: a token absent from the index produces an all-False
+        row, which makes the query burn its full superstep budget and
+        return INF with no diagnosis — so ``"raise"`` (the default) raises
+        :class:`KeyError` naming the missing tokens up front.  Pass
+        ``"ignore"`` for best-effort masks (callers should then surface the
+        missing tokens themselves, e.g. ``QueryResult.unmatched``).
         """
+        if on_missing not in ("raise", "ignore"):
+            raise ValueError(f"unknown on_missing={on_missing!r}")
         width = n_nodes if v_pad is None else v_pad
         if width < n_nodes:
             raise ValueError(f"v_pad={v_pad} smaller than n_nodes={n_nodes}")
+        if on_missing == "raise":
+            missing = self.missing_tokens(query)
+            if missing:
+                raise KeyError(
+                    f"query keywords match no node in the index: {missing!r} "
+                    "(pass on_missing='ignore' for best-effort masks)")
         masks = np.zeros((len(query), width), bool)
         for i, tok in enumerate(query):
             masks[i, self.lookup(tok)] = True

@@ -15,6 +15,7 @@ from collections import defaultdict
 
 import jax  # noqa: E402
 
+from repro import shardmap
 from repro.analysis import hlo as H
 from repro.analysis import build_roofline
 from repro.launch import cells as cells_mod
@@ -34,7 +35,7 @@ def compile_cell(cell_name: str, multi_pod: bool = False):
         cell = cells_mod.build_cell(arch, shape)
     mesh = make_production_mesh(multi_pod=multi_pod)
     in_sh = tuple(sharding_tree(mesh, s) for s in cell.in_specs)
-    with jax.set_mesh(mesh):
+    with shardmap.mesh_scope(mesh):
         compiled = jax.jit(cell.fn, in_shardings=in_sh,
                            donate_argnums=cell.donate
                            ).lower(*cell.args).compile()

@@ -51,6 +51,10 @@ def main() -> int:
     ap.add_argument("--exit-mode", default="sound",
                     choices=["sound", "none"])
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--partition", default="single",
+                    choices=["single", "sharded"],
+                    help="sharded = frontier-compressed shard_map over the "
+                         "local devices (runs on any jax via repro.shardmap)")
     ap.add_argument("--stream", action="store_true",
                     help="print per-superstep answers with SPA bounds")
     args = ap.parse_args()
@@ -58,6 +62,7 @@ def main() -> int:
     t0 = time.time()
     policy = ExecutionPolicy(
         backend=args.backend,
+        partition=args.partition,
         exit_mode=args.exit_mode,
         max_supersteps=args.max_supersteps,
         message_budget=args.message_budget,

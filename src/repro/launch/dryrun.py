@@ -26,6 +26,7 @@ from pathlib import Path
 
 import jax  # noqa: E402  (after XLA_FLAGS on purpose)
 
+from repro import shardmap
 from repro.analysis import analyze_hlo, build_roofline
 from repro.launch import cells as cells_mod
 from repro.launch.mesh import make_production_mesh, sharding_tree
@@ -37,7 +38,7 @@ def run_cell(cell, mesh, mesh_name: str, out_dir: Path,
              save_hlo: bool = False) -> dict:
     t0 = time.time()
     in_shardings = tuple(sharding_tree(mesh, s) for s in cell.in_specs)
-    with jax.set_mesh(mesh):
+    with shardmap.mesh_scope(mesh):
         jitted = jax.jit(cell.fn, in_shardings=in_shardings,
                          donate_argnums=cell.donate)
         lowered = jitted.lower(*cell.args)

@@ -2,7 +2,8 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; the dry-run sets XLA_FLAGS for 512 host devices *before* any jax
-import and only then calls these.
+import and only then calls these.  Mesh construction goes through
+:mod:`repro.shardmap` so the same code runs on jax 0.4.x and >= 0.7.
 """
 
 from __future__ import annotations
@@ -10,22 +11,20 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro import shardmap
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (data, model) single pod; 2x16x16 (pod, data, model) for two."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return shardmap.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Whatever devices exist locally, as a 1D (data,) mesh (tests/CPU)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return shardmap.make_mesh((n,), ("data",))
 
 
 def filter_spec(spec: P, mesh) -> P:

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import shardmap
+
 # Canonical logical axes: data-parallel dims ("pod","data"), tensor dim
 # ("model").  constrain() drops axes missing from the ambient mesh, so the
 # same model code runs on 1 CPU device, a 16x16 pod, or a 2x16x16 multi-pod.
@@ -27,22 +29,15 @@ def _filter_axes(entry, mesh_axes: tuple[str, ...]):
     return kept if kept else None
 
 
-def _auto_axes(am) -> tuple[str, ...]:
-    """Mesh axes usable in sharding constraints: Auto type only (axes made
-    Manual by an enclosing shard_map cannot be constrained)."""
-    return tuple(n for n, t in zip(am.axis_names, am.axis_types)
-                 if "Auto" in str(t))
-
-
 def constrain(x: jax.Array, *spec) -> jax.Array:
-    """with_sharding_constraint against the ambient abstract mesh; no-op when
-    no mesh is installed (unit tests / single device); axes that are Manual
-    in the current scope (e.g. "pod" inside the pipeline shard_map) are
-    dropped from the spec."""
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or not am.axis_names:
+    """with_sharding_constraint against the ambient mesh; no-op when no mesh
+    is installed (unit tests / single device); axes that are Manual in the
+    current scope (e.g. "pod" inside the pipeline shard_map) are dropped
+    from the spec (:func:`repro.shardmap.auto_axis_names`)."""
+    am = shardmap.get_abstract_mesh()
+    if am is None or not shardmap.constraints_supported_here():
         return x
-    axes = _auto_axes(am)
+    axes = shardmap.auto_axis_names(am)
     if not axes:
         return x
     clean = tuple(_filter_axes(s, axes) for s in spec)
@@ -51,14 +46,7 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
 
 def mesh_axis_size(*names: str) -> int:
     """Product of the sizes of the given axes in the ambient mesh (1 if none)."""
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or not am.axis_names:
-        return 1
-    size = 1
-    for n in names:
-        if n in am.axis_names:
-            size *= am.shape[n]
-    return size
+    return shardmap.mesh_axis_size(shardmap.get_abstract_mesh(), *names)
 
 
 def pad_to(x: int, multiple: int) -> int:

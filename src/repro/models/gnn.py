@@ -18,6 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import shardmap
 from repro.configs.base import GNNConfig
 from repro.models.common import constrain, dense_init, split_keys
 
@@ -67,7 +68,7 @@ def _gather_rows(h: jax.Array, idx: jax.Array, mpd) -> jax.Array:
     (and f32 cotangments on the way back); this shard_map pins an explicit
     bf16 all_gather, halving the GNN's dominant collective.  The backward
     is the transpose (bf16 reduce-scatter of message cotangents)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = shardmap.get_abstract_mesh()
     axes = tuple(a for a in ALL_AXES if am is not None and a in am.axis_names)
     if not axes:
         return h.astype(mpd)[idx]
@@ -79,7 +80,7 @@ def _gather_rows(h: jax.Array, idx: jax.Array, mpd) -> jax.Array:
         return h_all[idx_loc]
 
     from jax.sharding import PartitionSpec as P
-    return jax.shard_map(
+    return shardmap.shard_map(
         block, mesh=am,
         in_specs=(P(axes, *trailing), P(axes)),
         out_specs=P(axes, *trailing),

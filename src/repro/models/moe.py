@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import shardmap
 from repro.configs.base import MoESpec
 from repro.models.common import dense_init, pad_to, split_keys
 
@@ -174,7 +175,7 @@ def _moe_sharded(params, x3d, spec: MoESpec, n_real: int, am):
         P(fsdp, tp, None),                   # x [B, S, D] sequence-parallel
     )
     out_specs = (P(fsdp, tp, None), P(), P(), P())
-    y, lb, rz, dropped = jax.shard_map(
+    y, lb, rz, dropped = shardmap.shard_map(
         block, mesh=am, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )(params["router"], params["w_gate"], params["w_up"], params["w_down"],
@@ -186,8 +187,8 @@ def moe_ffn(params: dict, x: jax.Array, spec: MoESpec,
             n_experts_real: int) -> tuple[jax.Array, dict]:
     """x: [B, S, D] -> ([B, S, D], aux metrics)."""
     b, s, d = x.shape
-    am = jax.sharding.get_abstract_mesh()
-    if am is None or not am.axis_names:
+    am = shardmap.get_abstract_mesh()
+    if am is None:
         y, aux = _moe_local(params, x.reshape(b * s, d), spec, n_experts_real)
         return y.reshape(b, s, d), aux
     fsdp = math.prod(am.shape[a] for a in ("pod", "data")

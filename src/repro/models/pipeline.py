@@ -4,7 +4,8 @@ The 2-pod mesh's cross-pod hop is the scarcest link (DCI, not ICI).  PP
 sends ONE activation tensor per microbatch per boundary instead of
 FSDP/TP traffic for every layer — the right parallelism for the slow axis.
 
-Implementation: `jax.shard_map` manual over *only* `"pod"` (data/model
+Implementation: shard_map (via :mod:`repro.shardmap`) manual over *only*
+`"pod"` (data/model
 axes stay auto, so each stage's layer math keeps its TP/FSDP shardings).
 Layers are stage-sharded at rest (`P("pod", ...)` on the stacked layer
 axis); microbatches stream through a `lax.scan` of length
@@ -23,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import shardmap
 from repro.models import transformer as tfm
 from repro.models.common import constrain
 
@@ -130,13 +132,13 @@ def pp_hidden_forward(params: dict, tokens: jax.Array, b: tfm.BuiltLM, *,
                  for j in range(n_micro // n_stages)]
         return jnp.stack(local, axis=0)[None]  # [1, n_micro/ns, mb, S, D]
 
-    am = jax.sharding.get_abstract_mesh()
+    am = shardmap.get_abstract_mesh()
     x_sharded = jax.lax.with_sharding_constraint(
         x_mb.reshape(n_micro // n_stages, n_stages, mb, s, cfg.d_model)
         .swapaxes(0, 1), P("pod"))
     # x_sharded: [n_stages, n_micro/n_stages, mb, S, D]; row p = microbatches
     # with t % n_stages == p.
-    outs = jax.shard_map(
+    outs = shardmap.shard_map(
         block, mesh=am,
         in_specs=(jax.tree_util.tree_map(
             lambda _: P("pod"), layers_st,

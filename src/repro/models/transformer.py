@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import shardmap
 from repro.configs.base import LMConfig
 from repro.models import moe as moe_lib
 from repro.models.attention import attention, rotary
@@ -240,7 +241,7 @@ def _layer(x, lw, b: BuiltLM, positions, cache_kv=None, cache_pos=None,
 
 
 def _tp_size() -> int:
-    am = jax.sharding.get_abstract_mesh()
+    am = shardmap.get_abstract_mesh()
     if am is None or "model" not in am.axis_names:
         return 1
     return am.shape["model"]

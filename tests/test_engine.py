@@ -169,10 +169,38 @@ def test_capped_run_is_not_certified_optimal():
 def test_infeasible_query(setup):
     g, index, engine = setup
     missing = max(index.vocabulary()) + 1000
-    res = engine.query([missing, missing + 1], k=1)
+    # strict (default): unmatched keywords are a hard error naming the token.
+    with pytest.raises(KeyError, match=str(missing)):
+        engine.query([missing, missing + 1], k=1)
+    # best-effort: INF answer, and the result says *why*.
+    res = engine.query([missing, missing + 1], k=1, strict=False)
     assert not res.found and res.answers == []
     assert res.done and not res.budget_hit
     assert res.weights[0] >= INF
+    assert res.unmatched == (missing, missing + 1)
+    # The streaming surface carries the same diagnosis on every update,
+    # and strict validation fires at the call site (not first iteration).
+    with pytest.raises(KeyError):
+        engine.query_stream([missing], k=1)
+    ups = list(engine.query_stream([missing, missing + 1], k=1,
+                                   strict=False))
+    assert ups and ups[0].unmatched == (missing, missing + 1)
+    seen = []
+    engine.query_streamed([missing, missing + 1], k=1, strict=False,
+                          extract=False, on_update=seen.append)
+    assert seen and seen[0].unmatched == (missing, missing + 1)
+
+
+def test_partially_matched_query_reports_unmatched(setup):
+    g, index, engine = setup
+    tok = index.vocabulary()[0]
+    missing = max(index.vocabulary()) + 1000
+    with pytest.raises(KeyError):
+        engine.query([tok, missing], k=1)
+    res = engine.query([tok, missing], k=1, strict=False)
+    assert res.unmatched == (missing,)
+    matched = engine.query([tok, index.vocabulary()[1]], k=1)
+    assert matched.unmatched == ()
 
 
 def test_engine_reexports_from_core():
@@ -181,3 +209,61 @@ def test_engine_reexports_from_core():
     assert core.ExecutionPolicy is ExecutionPolicy
     with pytest.raises(AttributeError):
         core.not_a_symbol
+
+
+# ---------------------------------------------------------------------------
+# Sharded partition in-process (1 local device -> 1-shard mesh).  The full
+# multi-device story lives in tests/test_distributed.py; these tier-1 tests
+# keep the shard_map code path and its engine plumbing exercised on every
+# pytest run, on any jax generation (via repro.shardmap).
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sharded_setup(setup):
+    g, index, _ = setup
+    engine = QueryEngine.build(
+        g, index=index,
+        policy=ExecutionPolicy(partition="sharded", max_supersteps=32,
+                               frontier_frac=1.0))
+    return g, index, engine
+
+
+def test_sharded_engine_matches_single_inprocess(setup, sharded_setup):
+    _, index, single = setup
+    _, _, sharded = sharded_setup
+    assert sharded.mesh is not None
+    query = mid_df_tokens(index, 3)
+    rs = single.query(query, k=2, extract=False)
+    rh = sharded.query(query, k=2, extract=False)
+    np.testing.assert_array_equal(rs.weights, rh.weights)
+    assert rs.supersteps == rh.supersteps
+    assert not rh.budget_hit
+
+
+def test_sharded_engine_stream_inprocess(sharded_setup):
+    _, index, sharded = sharded_setup
+    query = mid_df_tokens(index, 2)
+    updates = list(sharded.query_stream(query, k=1))
+    assert updates and updates[-1].done
+    ratios = [u.spa_ratio for u in updates]
+    assert all(cur <= prev for prev, cur in zip(ratios, ratios[1:]))
+    res = sharded.query(query, k=1, extract=False)
+    np.testing.assert_array_equal(updates[-1].weights, res.weights)
+
+
+def test_sharded_query_batch_reports_bucket_time(sharded_setup):
+    """The docstring contract: ``wall_time_s`` is the shared bucket time —
+    also on the sharded fallback, which serves the bucket sequentially."""
+    _, index, sharded = sharded_setup
+    toks = mid_df_tokens(index, 7)
+    queries = [toks[0:2], toks[2:4], toks[4:7]]  # two m=2, one m=3
+    results = sharded.query_batch(queries, k=1, extract=False)
+    t2a, t2b, t3 = (results[0].wall_time_s, results[1].wall_time_s,
+                    results[2].wall_time_s)
+    # Same-m queries share one bucket and must report one shared time.
+    assert t2a == t2b
+    assert t2a > 0 and t3 > 0
+    for q, br in zip(queries, results):
+        sr = sharded.query(q, k=1, extract=False)
+        np.testing.assert_array_equal(br.weights, sr.weights)

@@ -60,8 +60,8 @@ def test_checkpoint_async_and_retention(tmp_path):
 def test_checkpoint_restore_with_sharding(tmp_path):
     """Elastic restore: device_put onto explicit shardings (1-device mesh
     here; the same path reshapes onto any mesh)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.shardmap import make_mesh
+    mesh = make_mesh((1,), ("data",))
     t = tree()
     save_tree(t, tmp_path, step=1)
     sh = jax.tree_util.tree_map(

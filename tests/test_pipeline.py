@@ -13,13 +13,13 @@ def test_pp_forward_matches_plain():
         from repro.models import transformer as tfm
         from repro.launch.mesh import sharding_tree
 
+        from repro.shardmap import make_mesh, mesh_scope
         cfg = get_arch("chatglm3-6b").config.smoke()
         cfg = dc.replace(cfg, n_layers=4, d_model=64, n_heads=4,
                          n_kv_heads=2, vocab=128)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         b = tfm.build(cfg, tp=2)
-        with jax.set_mesh(mesh):
+        with mesh_scope(mesh):
             params = tfm.init_params(jax.random.PRNGKey(0), b)
             toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 128)
 
@@ -48,13 +48,13 @@ def test_pp_train_step_improves_loss():
         from repro.models import transformer as tfm
         from repro.optim import AdamWConfig
 
+        from repro.shardmap import make_mesh, mesh_scope
         cfg = get_arch("qwen1.5-4b").config.smoke()
         cfg = dc.replace(cfg, n_layers=4, d_model=64, n_heads=4,
                          n_kv_heads=4, vocab=128)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         b = tfm.build(cfg, tp=2)
-        with jax.set_mesh(mesh):
+        with mesh_scope(mesh):
             state = lm_lib.init_train_state(jax.random.PRNGKey(0), b)
             step = jax.jit(pp.make_pp_train_step(
                 b, AdamWConfig(lr=3e-3), n_stages=2, n_micro=4,

@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro import INF
 from repro.core import semiring
