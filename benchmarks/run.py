@@ -3,8 +3,10 @@
 One benchmark per paper table/figure (Sec. 7.2), plus kernel micro-benches.
 Prints ``name,us_per_call,derived`` CSV rows and writes the full structured
 results to experiments/bench_results.json, plus the machine-readable
-per-figure wall-time summary experiments/BENCH_dks.json (the perf
-trajectory file — compare it across commits to spot regressions).
+per-figure wall-time summary experiments/BENCH_dks.json and the serving
+summary experiments/BENCH_serve.json (throughput + p95 vs micro-batch
+size) — the perf trajectory files; compare them across commits to spot
+regressions.
 
 ``--full`` runs the complete query suite (slower); default is a CPU-sized
 subset exercising every code path.
@@ -28,6 +30,7 @@ def main() -> None:
 
     from benchmarks import dks_benchmarks as dks
     from benchmarks import kernel_benchmarks as kb
+    from benchmarks import serve_benchmarks as sv
 
     results = {}
     rows = []
@@ -59,6 +62,10 @@ def main() -> None:
     record("fig15_parallel_efficiency", dks.fig15_parallel_efficiency)
     record("fig15_sharded_vs_single", dks.fig15_sharded_vs_single,
            n_queries=2 if not args.full else 8)
+    record("fig_serve_throughput", sv.fig_serve_throughput,
+           batch_sizes=(1, 4) if not args.full else (1, 2, 4, 8),
+           n_requests=12 if not args.full else 32,
+           unique=4 if not args.full else 8)
 
     print("\nname,us_per_call,derived")
     for bench_fn in (kb.bench_subset_combine, kb.bench_segment_topk,
@@ -70,18 +77,37 @@ def main() -> None:
             print(f"{r['name']},{r['us_per_call']},{r['derived']}")
     OUT.mkdir(exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=1))
+    print(f"\nwrote {OUT / 'bench_results.json'}")
     import jax
 
-    bench_dks = {
-        "jax": jax.__version__,
-        "n_devices": len(jax.devices()),
-        "full": bool(args.full),
-        "per_figure_wall_s": fig_wall_s,
-        "sharded_vs_single": results.get("fig15_sharded_vs_single"),
-    }
-    (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))
-    print(f"\nwrote {OUT / 'bench_results.json'}")
-    print(f"wrote {OUT / 'BENCH_dks.json'}")
+    # The trajectory files are committed and compared across commits, so
+    # a filtered run (--only) must not clobber them with partial or
+    # foreign data.  BENCH_dks spans many figures: only an unfiltered run
+    # writes it.  BENCH_serve holds a single figure, so it is written
+    # whenever that figure ran in full.
+    dks_figs = {k: v for k, v in fig_wall_s.items()
+                if k != "fig_serve_throughput"}
+    if dks_figs and args.only is None:
+        bench_dks = {
+            "jax": jax.__version__,
+            "n_devices": len(jax.devices()),
+            "full": bool(args.full),
+            "per_figure_wall_s": dks_figs,
+            "sharded_vs_single": results.get("fig15_sharded_vs_single"),
+        }
+        (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))
+        print(f"wrote {OUT / 'BENCH_dks.json'}")
+    if "fig_serve_throughput" in results:
+        bench_serve = {
+            "jax": jax.__version__,
+            "n_devices": len(jax.devices()),
+            "full": bool(args.full),
+            "wall_s": fig_wall_s.get("fig_serve_throughput"),
+            "throughput_vs_batch": results["fig_serve_throughput"],
+        }
+        (OUT / "BENCH_serve.json").write_text(
+            json.dumps(bench_serve, indent=1))
+        print(f"wrote {OUT / 'BENCH_serve.json'}")
 
 
 if __name__ == "__main__":

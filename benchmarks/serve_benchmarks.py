@@ -1,0 +1,62 @@
+"""Serving-layer benchmarks, driven through :class:`repro.serve.DKSService`.
+
+  fig_serve_throughput — throughput + tail latency vs micro-batch size:
+  the same request trace replayed by concurrent closed-loop clients at
+  several ``max_batch`` settings.  The result cache is OFF so the curve
+  measures batching, not caching; ``pad_batches="max"`` keeps the vmapped
+  executor at one batch shape per keyword count, and an untimed warm-up
+  replay pays the compilation so the timed pass measures serving.
+
+``python -m benchmarks.run`` writes the rows to
+``experiments/BENCH_serve.json`` (the serving perf-trajectory file —
+compare across commits like BENCH_dks.json).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import load
+from repro.serve import DKSService, ServeConfig
+from repro.serve.loadgen import make_trace, replay
+
+
+def fig_serve_throughput(dataset="sec-rdfabout-cpu",
+                         batch_sizes=(1, 2, 4, 8), n_clients=8,
+                         n_requests=24, unique=8, k=1):
+    """Throughput + p50/p95 latency + batch-fill per ``max_batch``.
+
+    ``max_batch=1`` is the no-batching baseline (every request its own
+    dispatch); the gap to larger settings is the amortization the
+    micro-batcher buys under this client concurrency.  Caveat for reading
+    the numbers on this single-core CPU container: a vmapped lane is extra
+    *serial* compute here, so larger batches mostly amortize dispatch
+    overhead and can lose on raw throughput — the batching win appears on
+    parallel hardware, where lanes share the device program.  The curve's
+    shape across commits is still the regression signal."""
+    bench = load(dataset)
+    trace = make_trace(bench.index, n_requests, unique=unique, k=k, seed=3)
+    rows = []
+    for mb in batch_sizes:
+        cfg = ServeConfig(max_batch=mb, max_wait_ms=10.0, cache_size=0,
+                          extract=False, pad_batches="max")
+        # Untimed warm-up: pays the one batch-shape trace per keyword
+        # count so the timed replay measures serving, not compilation.
+        with DKSService(bench.engine, cfg) as svc:
+            replay(svc, trace[: max(2 * mb, 4)],
+                   n_clients=min(n_clients, 4))
+        with DKSService(bench.engine, cfg) as svc:
+            t0 = time.perf_counter()
+            replay(svc, trace, n_clients=n_clients)
+            wall = time.perf_counter() - t0
+            st = svc.stats()
+        rows.append({
+            "max_batch": mb,
+            "throughput_rps": round(st.throughput_rps, 2),
+            "p50_ms": round(st.p50_ms, 1),
+            "p95_ms": round(st.p95_ms, 1),
+            "mean_batch_fill": round(st.mean_batch_fill, 2),
+            "dispatches": st.batch_dispatches,
+            "wall_s": round(wall, 2),
+        })
+    return rows

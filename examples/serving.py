@@ -1,0 +1,53 @@
+"""Serving demo: DKSService in front of QueryEngine — concurrent clients
+coalesced by the micro-batcher, repeat queries served from the LRU result
+cache, and a deadline-bounded query answered best-so-far with its SPA
+lower bound (the paper's Sec. 5.4 early-termination guarantee as a
+serving feature).
+
+    PYTHONPATH=src python examples/serving.py [--dataset sec-rdfabout-cpu]
+"""
+
+import argparse
+
+from repro.engine import ExecutionPolicy
+from repro.launch.dks_query import build_engine
+from repro.serve import DKSService, ServeConfig
+from repro.serve.loadgen import make_trace, replay
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--dataset", default="sec-rdfabout-cpu")
+ap.add_argument("--requests", type=int, default=16)
+ap.add_argument("--clients", type=int, default=8)
+args = ap.parse_args()
+
+ds, engine = build_engine(
+    args.dataset, ExecutionPolicy(max_supersteps=16))
+print(f"graph: {ds.name} V={engine.n_nodes:,} E_sym={engine.n_edges:,}")
+
+trace = make_trace(engine.index, args.requests, unique=4, seed=7)
+with DKSService(engine,
+                ServeConfig(max_batch=4, max_wait_ms=25.0,
+                            cache_size=64)) as svc:
+    served = replay(svc, trace, n_clients=args.clients)
+    for i, (req, srv) in enumerate(zip(trace, served)):
+        src = "cache" if srv.cache_hit else f"batch[{srv.batch_size}]"
+        best = srv.best_weight if srv.found else None
+        print(f"q{i:02d} m={len(req.keywords)} {src:9s} "
+              f"{srv.latency_ms:7.1f} ms  best={best}")
+
+    # Deadline-bounded: the budget expires mid-run, the client still gets
+    # ranked best-so-far answers plus a lower bound on the optimum.
+    svc.invalidate_cache()
+    q = list(trace[0].keywords)
+    bounded = svc.query(q, k=1, deadline_ms=5.0)
+    best = bounded.best_weight if bounded.found else None
+    if bounded.approximate:
+        print(f"\ndeadline 5ms on {q}: approximate, best-so-far={best}, "
+              f"optimum >= {bounded.opt_lower_bound} "
+              f"(sound: {bounded.sound_opt_lower_bound})")
+    else:
+        print(f"\ndeadline 5ms on {q}: finished inside the budget, "
+              f"exact best={best}")
+
+    print("\n--- ServeStats ---")
+    print(svc.stats().summary())

@@ -250,6 +250,35 @@ def freeze_finished(old: DKSState, new: DKSState) -> DKSState:
         lambda o, n: jnp.where(old.done, o, n), old, new)
 
 
+def finish_superstep(graph: Any, S0: jax.Array, state: DKSState,
+                     cfg: DKSConfig, overflow: jax.Array | None = None,
+                     ) -> DKSState:
+    """The post-combine tail shared by every superstep flavor (dense,
+    frontier-sharded, and their instrumented hosts): recompute the active
+    set from the table delta, fold visit tracking, run the aggregators,
+    and apply the exit check.  ``state.S`` must already hold the combined
+    table; ``S0`` is the pre-relax table; counters/step are the caller's.
+
+    ``overflow``: the frontier-sharded paths pass their frontier-overflow
+    flag — it folds into ``budget_hit``/``done`` (frontier overflow == the
+    paper's Sec. 5.4 message-budget forced stop).
+    """
+    changed = jnp.any(state.S < S0, axis=(1, 2)) & graph.node_valid
+    st = dataclasses.replace(
+        state,
+        changed=changed,
+        first_fire=changed & ~state.visited,
+        visited=state.visited | changed,
+    )
+    st = aggregate(graph, st, cfg)
+    st = exit_check(graph, st, cfg)
+    if overflow is not None:
+        st = dataclasses.replace(
+            st, budget_hit=st.budget_hit | overflow,
+            done=st.done | overflow)
+    return st
+
+
 def superstep(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
     """One Pregel superstep (phases 1-4 above)."""
     S0 = state.S
@@ -262,21 +291,14 @@ def superstep(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
     R = relax(graph, S0, state.changed, cfg)
     S1 = semiring.topk_merge(S0, R)
     S1 = combine(S1, cfg)
-    changed = jnp.any(S1 < S0, axis=(1, 2)) & graph.node_valid
-    first_fire = changed & ~state.visited
-    visited = state.visited | changed
     nxt = dataclasses.replace(
         state,
         S=S1,
-        changed=changed,
-        first_fire=first_fire,
-        visited=visited,
         msgs_bfs=state.msgs_bfs + n_bfs,
         msgs_deep=state.msgs_deep + n_deep,
         step=state.step + 1,
     )
-    nxt = aggregate(graph, nxt, cfg)
-    return exit_check(graph, nxt, cfg)
+    return finish_superstep(graph, S0, nxt, cfg)
 
 
 # --------------------------------------------------------------------------
@@ -321,6 +343,71 @@ def run_dks_batched(graph: DeviceGraph, kw_masks_batch: jax.Array,
     return jax.vmap(one)(kw_masks_batch)
 
 
+def host_instrumented_loop(
+    graph: Any,
+    kw_masks: jax.Array,
+    cfg: DKSConfig,
+    exit_hook: Callable[[DKSState], bool] | None,
+    phase_relax: Callable,
+    phase_receive: Callable,
+    phase_combine: Callable,
+    phase_agg: Callable,
+) -> tuple[DKSState, dict[str, Any]]:
+    """The host-driven per-phase superstep loop shared by the dense and
+    sharded instrumented runners — one copy of the timing buckets, message
+    accounting, history rows, and ``exit_hook`` contract.
+
+    Phase signatures (each jitted by the caller, timed here):
+      phase_relax(S, changed) -> aux           "send_bfs"
+      phase_receive(S, aux) -> S1              "receive"
+      phase_combine(S1) -> S1                  "evaluate"
+      phase_agg(S0, state, aux) -> state       "send_agg"
+    ``aux`` is whatever relax must hand forward (per-edge candidates on the
+    dense path; (R, overflow) on the sharded path).
+    """
+    timings = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0,
+               "send_agg": 0.0}
+    state = jax.block_until_ready(init_state(graph, kw_masks, cfg))
+    history = []
+    while not bool(state.done):
+        deg = graph.out_degree.astype(jnp.float32)
+        n_bfs = float(jnp.sum(jnp.where(state.first_fire, deg, 0.0)))
+        n_deep = float(jnp.sum(
+            jnp.where(state.changed & ~state.first_fire, deg, 0.0)))
+
+        t0 = time.perf_counter()
+        aux = jax.block_until_ready(phase_relax(state.S, state.changed))
+        t1 = time.perf_counter()
+        S1 = jax.block_until_ready(phase_receive(state.S, aux))
+        t2 = time.perf_counter()
+        S1 = jax.block_until_ready(phase_combine(S1))
+        t3 = time.perf_counter()
+        S0 = state.S
+        state = dataclasses.replace(
+            state,
+            S=S1,
+            msgs_bfs=state.msgs_bfs + n_bfs,
+            msgs_deep=state.msgs_deep + n_deep,
+            step=state.step + 1,
+        )
+        state = jax.block_until_ready(phase_agg(S0, state, aux))
+        t4 = time.perf_counter()
+
+        timings["send_bfs"] += t1 - t0
+        timings["receive"] += t2 - t1
+        timings["evaluate"] += t3 - t2
+        timings["send_agg"] += t4 - t3
+        history.append(
+            dict(step=int(state.step), frontier=int(jnp.sum(state.changed)),
+                 msgs_bfs=float(state.msgs_bfs), msgs_deep=float(state.msgs_deep),
+                 best=float(state.topk_w[0]))
+        )
+        if exit_hook is not None and exit_hook(state):
+            state = dataclasses.replace(state, done=jnp.bool_(True))
+    info = dict(timings=timings, history=history)
+    return state, info
+
+
 def run_dks_instrumented(
     graph: DeviceGraph,
     kw_masks: jax.Array,
@@ -337,7 +424,6 @@ def run_dks_instrumented(
     ``exit_hook``: optional host-side exit criterion (e.g. the literal paper
     Eq. 2 check, fagin.paper_exit_hook) evaluated between supersteps.
     """
-    timings = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0, "send_agg": 0.0}
 
     @jax.jit
     def _phase_relax(S, changed):
@@ -359,56 +445,12 @@ def run_dks_instrumented(
         return combine(S, cfg)
 
     @jax.jit
-    def _phase_agg(S0, state):
-        changed = jnp.any(state.S < S0, axis=(1, 2)) & graph.node_valid
-        st = dataclasses.replace(
-            state, changed=changed,
-            first_fire=changed & ~state.visited,
-            visited=state.visited | changed,
-        )
-        st = aggregate(graph, st, cfg)
-        return exit_check(graph, st, cfg)
+    def _phase_agg(S0, state, _aux):
+        return finish_superstep(graph, S0, state, cfg)
 
-    state = init_state(graph, kw_masks, cfg)
-    state = jax.block_until_ready(state)
-    history = []
-    while not bool(state.done):
-        deg = graph.out_degree.astype(jnp.float32)
-        n_bfs = float(jnp.sum(jnp.where(state.first_fire, deg, 0.0)))
-        n_deep = float(jnp.sum(
-            jnp.where(state.changed & ~state.first_fire, deg, 0.0)))
-
-        t0 = time.perf_counter()
-        cand = jax.block_until_ready(_phase_relax(state.S, state.changed))
-        t1 = time.perf_counter()
-        S1 = jax.block_until_ready(_phase_receive(state.S, cand))
-        t2 = time.perf_counter()
-        S1 = jax.block_until_ready(_phase_combine(S1))
-        t3 = time.perf_counter()
-        S0 = state.S
-        state = dataclasses.replace(
-            state,
-            S=S1,
-            msgs_bfs=state.msgs_bfs + n_bfs,
-            msgs_deep=state.msgs_deep + n_deep,
-            step=state.step + 1,
-        )
-        state = jax.block_until_ready(_phase_agg(S0, state))
-        t4 = time.perf_counter()
-
-        timings["send_bfs"] += t1 - t0
-        timings["receive"] += t2 - t1
-        timings["evaluate"] += t3 - t2
-        timings["send_agg"] += t4 - t3
-        history.append(
-            dict(step=int(state.step), frontier=int(jnp.sum(state.changed)),
-                 msgs_bfs=float(state.msgs_bfs), msgs_deep=float(state.msgs_deep),
-                 best=float(state.topk_w[0]))
-        )
-        if exit_hook is not None and exit_hook(state):
-            state = dataclasses.replace(state, done=jnp.bool_(True))
-    info = dict(timings=timings, history=history)
-    return state, info
+    return host_instrumented_loop(
+        graph, kw_masks, cfg, exit_hook,
+        _phase_relax, _phase_receive, _phase_combine, _phase_agg)
 
 
 def extract_answer_weights(state: DKSState, cfg: DKSConfig) -> np.ndarray:

@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro import INF, shardmap
 from repro.core import semiring, spa
-from repro.core.dks import DKSConfig, DKSState, aggregate, combine, exit_check
+from repro.core.dks import (
+    DKSConfig,
+    DKSState,
+    combine,
+    finish_superstep,
+)
 from repro.graph.structure import Graph
 
 MESH_AXES = ("pod", "data", "model")
@@ -216,22 +221,12 @@ def superstep_frontier(graph: FrontierGraph, state: DKSState,
     R, overflow = relax_frontier(graph, S0, state.changed, cfg)
     S1 = semiring.topk_merge(S0, R)
     S1 = combine(S1, cfg)
-    changed = jnp.any(S1 < S0, axis=(1, 2)) & graph.node_valid
-    first_fire = changed & ~state.visited
-    visited = state.visited | changed
     nxt = dataclasses.replace(
-        state, S=S1, changed=changed, first_fire=first_fire, visited=visited,
+        state, S=S1,
         msgs_bfs=state.msgs_bfs + n_bfs, msgs_deep=state.msgs_deep + n_deep,
         step=state.step + 1,
     )
-    nxt = aggregate(graph, nxt, cfg)
-    nxt = exit_check(graph, nxt, cfg)
-    # Frontier overflow == message budget exhausted (paper Sec. 5.4).
-    return dataclasses.replace(
-        nxt,
-        budget_hit=nxt.budget_hit | overflow,
-        done=nxt.done | overflow,
-    )
+    return finish_superstep(graph, S0, nxt, cfg, overflow=overflow)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -245,3 +240,47 @@ def run_dks_frontier(graph: FrontierGraph, kw_masks: jax.Array,
         lambda st: ~st.done,
         lambda st: superstep_frontier(graph, st, cfg),
         state)
+
+
+def run_dks_frontier_instrumented(
+    graph: FrontierGraph,
+    kw_masks: jax.Array,
+    cfg: DKSConfig,
+    exit_hook: Callable[[DKSState], bool] | None = None,
+) -> tuple[DKSState, dict[str, Any]]:
+    """Host-driven frontier-sharded loop with per-phase wall times — the
+    sharded counterpart of :func:`repro.core.dks.run_dks_instrumented`
+    (same ``timings`` keys, same ``history`` rows, same ``exit_hook``
+    contract), so ``QueryEngine.query_instrumented`` serves both
+    partitionings.
+
+    Phase attribution differs from the dense path where the sharded
+    dataflow forces it to: the frontier pack + all-gather + edge relax are
+    fused inside one shard_map (:func:`relax_frontier`) and cannot be
+    timed apart, so that whole exchange lands in "send_bfs"; "receive" is
+    the per-node top-K merge of what arrived; "evaluate" (subset combine)
+    and "send_agg" (aggregators + exit check) match the dense buckets.
+    """
+    from repro.core.dks import host_instrumented_loop
+
+    @jax.jit
+    def _phase_relax(S, changed):
+        return relax_frontier(graph, S, changed, cfg)
+
+    @jax.jit
+    def _phase_receive(S, aux):
+        R, _overflow = aux
+        return semiring.topk_merge(S, R)
+
+    @jax.jit
+    def _phase_combine(S):
+        return combine(S, cfg)
+
+    @jax.jit
+    def _phase_agg(S0, state, aux):
+        _R, overflow = aux
+        return finish_superstep(graph, S0, state, cfg, overflow=overflow)
+
+    return host_instrumented_loop(
+        graph, kw_masks, cfg, exit_hook,
+        _phase_relax, _phase_receive, _phase_combine, _phase_agg)

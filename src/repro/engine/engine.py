@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 import time
 from typing import Any, Callable, Iterator, Sequence
 
@@ -58,12 +59,29 @@ from repro.graph.index import InvertedIndex
 from repro.graph.structure import Graph
 
 
+@dataclasses.dataclass(frozen=True)
+class _StateBounds:
+    """One DKS state's bound facts (see QueryEngine._state_bounds)."""
+
+    best: float
+    nu_full: float
+    spa: float
+    frontier: int
+    opt_lb: float
+    sound_lb: float
+
+
 class QueryEngine:
     """Facade over index lookup, device residency, and the DKS executors.
 
     Build one per (graph, policy); serve many queries.  Thread-compatible
     for reads after build (the caches only grow).
     """
+
+    # Monotone build ids: every built engine gets a fresh ``version``, so
+    # result caches keyed on cache_token() can never serve answers computed
+    # against a previous graph build.
+    _build_counter = itertools.count(1)
 
     def __init__(
         self,
@@ -78,10 +96,12 @@ class QueryEngine:
         self.policy = policy
         self.device_graph = device_graph
         self.mesh = mesh  # set for partition="sharded"; None otherwise
+        self.version = next(QueryEngine._build_counter)
         self._e_min = float(device_graph.e_min())
         # Compiled-executable cache: (DKSConfig, partition, kind) -> callable.
         self._executables: dict[tuple, Any] = {}
         self._trace_counts: dict[tuple, int] = {}
+        self._execute_count = 0
 
     # ------------------------------------------------------------------
     # Construction
@@ -156,6 +176,34 @@ class QueryEngine:
             "traces": sum(self._trace_counts.values()),
         }
 
+    @property
+    def execute_count(self) -> int:
+        """Device dispatches made through the compiled-executable cache —
+        the ``query`` / ``query_batch`` / ``query_stream(ed)`` surfaces
+        (streaming queries count one per superstep).  A serving layer's
+        result-cache hit must leave this untouched — that is what its
+        tests assert.  ``query_instrumented`` runs its own host-driven
+        per-phase jits and is not counted here."""
+        return self._execute_count
+
+    def cache_token(self, keywords: Sequence, k: int = 1,
+                    **overrides) -> tuple:
+        """Hashable result-cache key for a query against THIS engine build.
+
+        Normalizes the keywords to a sorted multiset — DKS answers are
+        keyword-order invariant (permuting keywords permutes subset-lattice
+        bits; every reduction is a min/top-k over the same value sets) —
+        and folds in everything else that determines the answer: ``k``, the
+        effective :class:`ExecutionPolicy` including per-call overrides,
+        and the engine build ``version`` (a rebuilt graph gets a fresh
+        version, so stale cached results can never be served).
+        """
+        norm = tuple(sorted((type(t).__name__, t) for t in keywords))
+        policy = self.policy
+        if overrides:
+            policy = dataclasses.replace(policy, **overrides)
+        return (norm, int(k), policy, self.version)
+
     # ------------------------------------------------------------------
     # Queries
     # ------------------------------------------------------------------
@@ -194,7 +242,8 @@ class QueryEngine:
         state = self._execute(fn, self.device_graph, jnp.asarray(masks))
         dt = time.perf_counter() - t0
         return self._make_result(keywords, masks, state, cfg, dt, extract,
-                                 keep_state, unmatched=unmatched)
+                                 keep_state, unmatched=unmatched,
+                                 own_time_s=dt)
 
     def query_batch(
         self,
@@ -204,8 +253,9 @@ class QueryEngine:
         extract: bool = True,
         keep_state: bool = False,
         strict: bool = True,
+        n_real: int | None = None,
         **overrides,
-    ) -> list[QueryResult]:
+    ) -> list[QueryResult | None]:
         """Answer a batch of queries, amortizing graph residency and kernel
         launches (the paper's 100-query workloads).
 
@@ -220,7 +270,19 @@ class QueryEngine:
         as answer extraction — on each of its results.  Within a bucket
         the value is identical either way; across partitionings the two
         quantities are not directly comparable.
+
+        ``own_time_s`` carries each query's individual serve time where one
+        exists: on the sequential sharded path every result records its own
+        run's time (so serving stats stay honest — the shared bucket total
+        would overbill every query); inside a vmapped bucket it is None.
+
+        ``n_real``: serving hook — queries at index >= ``n_real`` are
+        padding lanes (added by a serving layer to stabilize the vmapped
+        batch shape).  They still ride in their bucket's device program,
+        but skip host-side result construction (answer-tree extraction is
+        O(V·2^m) per lane) and come back as None.
         """
+        n_real = len(queries) if n_real is None else n_real
         results: list[QueryResult | None] = [None] * len(queries)
         buckets: dict[int, list[int]] = {}
         for i, q in enumerate(queries):
@@ -229,13 +291,15 @@ class QueryEngine:
             if self.policy.partition == "sharded":
                 # shard_map under vmap is unsupported; serve sequentially,
                 # then stamp the shared bucket time per the contract above.
+                # Padding lanes would be whole wasted runs here: skip them.
+                real = [i for i in idxs if i < n_real]
                 t0 = time.perf_counter()
                 bucket = [self.query(queries[i], k=k, extract=extract,
                                      keep_state=keep_state, strict=strict,
                                      **overrides)
-                          for i in idxs]
+                          for i in real]
                 dt = time.perf_counter() - t0
-                for i, res in zip(idxs, bucket):
+                for i, res in zip(real, bucket):
                     results[i] = dataclasses.replace(res, wall_time_s=dt)
                 continue
             cfg = self._config(m, k, **overrides)
@@ -246,6 +310,8 @@ class QueryEngine:
             states = self._execute(fn, self.device_graph, jnp.asarray(masks))
             dt = time.perf_counter() - t0
             for bi, i in enumerate(idxs):
+                if i >= n_real:
+                    continue
                 st = jax.tree_util.tree_map(lambda x, bi=bi: x[bi], states)
                 results[i] = self._make_result(
                     list(queries[i]), masks[bi], st, cfg, dt, extract,
@@ -292,6 +358,7 @@ class QueryEngine:
         k: int = 1,
         *,
         on_update: Callable[[StreamUpdate], None] | None = None,
+        until: Callable[[StreamUpdate], bool] | None = None,
         extract: bool = True,
         keep_state: bool = False,
         strict: bool = True,
@@ -302,19 +369,132 @@ class QueryEngine:
         Like :meth:`query_stream` but consumes the stream internally
         (invoking ``on_update`` per superstep) and builds the final
         :class:`QueryResult` from the last state — the run is not repeated.
+
+        ``until``: optional host-side stop predicate evaluated on every
+        update (after ``on_update``).  When it fires before the run's own
+        exit criterion, the stream stops and the result is built from the
+        best-so-far state *as a forced stop*: ``done=False`` and the SPA
+        bound / ratio are computed exactly as for ``budget_hit`` — the
+        paper's early-termination guarantee (Sec. 5.4) as a serving
+        primitive (deadline-bounded answers route through this).
         """
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
         masks, unmatched = self._masks(keywords, strict)
         t0 = time.perf_counter()
         state = None
+        interrupted = False
         for state, update in self._stream(cfg, masks, unmatched=unmatched):
             if on_update is not None:
                 on_update(update)
+            if until is not None and not update.done and until(update):
+                interrupted = True
+                break
         dt = time.perf_counter() - t0
         assert state is not None
         return self._make_result(keywords, masks, state, cfg, dt, extract,
-                                 keep_state, unmatched=unmatched)
+                                 keep_state, unmatched=unmatched,
+                                 own_time_s=dt, interrupted=interrupted)
+
+    def query_deadline(
+        self,
+        keywords: Sequence,
+        k: int = 1,
+        *,
+        deadline_s: float,
+        extract: bool = True,
+        keep_state: bool = False,
+        strict: bool = True,
+        **overrides,
+    ) -> tuple[QueryResult, dict[str, Any]]:
+        """Serving hook: run under a wall-clock budget, bounds computed
+        once at the end.
+
+        Steps the streaming executor with a wall-clock check between
+        supersteps but WITHOUT the per-superstep SPA/nu computation of
+        :meth:`query_stream` — the cover DP is a host-driven O(3^m) loop
+        of tiny dispatches that can cost many times a superstep, so under
+        a tight budget it would eat the very time it is meant to bound.
+        The lower bounds are computed once, from the final state (each
+        per-step bound is individually valid, so the final one is too —
+        it just isn't the running max a full stream would report).
+
+        Returns ``(result, info)`` with ``info`` carrying
+        ``opt_lower_bound`` (paper Sec. 5.4 reporting convention: max of
+        min(best, spa) and min(best, nu), folded with the sound facts so
+        it is never below the sound bound), ``sound_opt_lower_bound``
+        (the provably sound part), and ``interrupted`` (True when the
+        deadline expired before the run's own exit criterion).  On a
+        proven exit both bounds equal the certified best answer and the
+        cover DP is skipped entirely.
+        """
+        keywords = list(keywords)
+        cfg = self._config(len(keywords), k, **overrides)
+        masks, unmatched = self._masks(keywords, strict)
+        t0 = time.perf_counter()
+        deadline_t = t0 + max(deadline_s, 0.0)
+        init_fn, step_fn = self._executable(cfg, "stream")
+        state = self._execute(init_fn, self.device_graph, jnp.asarray(masks))
+        interrupted = False
+        while True:
+            if bool(state.done) or int(state.step) >= cfg.max_supersteps:
+                break
+            if time.perf_counter() >= deadline_t:
+                interrupted = True
+                break
+            state = self._execute(step_fn, self.device_graph, state)
+        forced = bool(state.budget_hit) or bool(state.capped)
+        if interrupted or forced:
+            bounds = self._state_bounds(state, cfg)
+            spa = bounds.spa
+            sound_lb = bounds.sound_lb
+            # Reported bound folds in the sound facts, so it can never
+            # sit below the guarantee it accompanies.
+            opt_lb = max(bounds.opt_lb, sound_lb)
+        else:
+            # Proven exit: the run certified its best answer — that IS
+            # the bound, and the O(3^m) cover DP would be dead weight.
+            spa = None
+            opt_lb = sound_lb = min(float(state.topk_w[0]), INF)
+        dt = time.perf_counter() - t0
+        res = self._make_result(keywords, masks, state, cfg, dt, extract,
+                                keep_state, unmatched=unmatched,
+                                own_time_s=dt, interrupted=interrupted,
+                                spa_hint=spa)
+        info = dict(
+            opt_lower_bound=min(opt_lb, INF),
+            sound_opt_lower_bound=min(sound_lb, INF),
+            interrupted=interrupted,
+        )
+        return res, info
+
+    def _state_bounds(self, state: DKSState, cfg: DKSConfig):
+        """One state's lower-bound facts, shared by the stream and
+        deadline paths.
+
+        ``opt_lb`` is the paper's reported bound — max of min(best, spa)
+        and min(best, nu) — where ``nu`` is provably a lower bound on any
+        future newly-appearing full-set value and ``spa`` is the Sec. 5.4
+        estimator.  ``sound_lb`` keeps only the provable facts: the ``nu``
+        component, plus ``best`` itself when an empty frontier (or an exit
+        that is neither the budget nor the superstep cap) proves no future
+        superstep changes anything.  Each is a valid bound on its own; a
+        stream takes their running max across supersteps.
+        """
+        best = float(state.topk_w[0])
+        nu = nu_lower_bound(state.g, jnp.float32(self._e_min), cfg.m)
+        nu_full = float(nu[cfg.full])
+        shat = jnp.minimum(state.s_front + self._e_min, INF)
+        spa = float(spa_cover_dp(shat, cfg.m))
+        frontier = int(jnp.sum(state.changed))
+        opt_lb = max(min(best, spa), min(best, nu_full))
+        sound_lb = min(best, nu_full)
+        forced = bool(state.budget_hit) or bool(state.capped)
+        if frontier == 0 or (bool(state.done) and not forced):
+            sound_lb = max(sound_lb, best)
+        return _StateBounds(best=best, nu_full=nu_full, spa=spa,
+                            frontier=frontier, opt_lb=min(opt_lb, INF),
+                            sound_lb=min(sound_lb, INF))
 
     def _stream(self, cfg: DKSConfig, masks: np.ndarray,
                 unmatched: tuple = ()):
@@ -324,22 +504,11 @@ class QueryEngine:
         opt_lb = 0.0
         sound_lb = 0.0
         while True:
-            best = float(state.topk_w[0])
-            nu = nu_lower_bound(state.g, jnp.float32(self._e_min), cfg.m)
-            nu_full = float(nu[cfg.full])
-            shat = jnp.minimum(state.s_front + self._e_min, INF)
-            spa = float(spa_cover_dp(shat, cfg.m))
-            frontier = int(jnp.sum(state.changed))
+            bounds = self._state_bounds(state, cfg)
+            best = bounds.best
             done = bool(state.done)
-            opt_lb = max(opt_lb, min(best, spa), min(best, nu_full))
-            # Sound component only: nu is provably a lower bound on any
-            # future newly-appearing full-set value; an empty frontier (or
-            # an exit that is neither the budget nor the superstep cap)
-            # means no future superstep changes anything.
-            sound_lb = max(sound_lb, min(best, nu_full))
-            forced = bool(state.budget_hit) or bool(state.capped)
-            if frontier == 0 or (done and not forced):
-                sound_lb = max(sound_lb, best)
+            opt_lb = max(opt_lb, bounds.opt_lb)
+            sound_lb = max(sound_lb, bounds.sound_lb)
             if best >= INF:
                 ratio = float("inf")
             elif best <= opt_lb or opt_lb >= INF:
@@ -350,13 +519,13 @@ class QueryEngine:
                 step=int(state.step),
                 weights=np.asarray(state.topk_w),
                 roots=np.asarray(state.topk_root),
-                frontier=frontier,
+                frontier=bounds.frontier,
                 msgs_bfs=float(state.msgs_bfs),
                 msgs_deep=float(state.msgs_deep),
-                nu_full=nu_full,
-                spa=spa,
+                nu_full=bounds.nu_full,
+                spa=bounds.spa,
                 opt_lower_bound=opt_lb,
-                sound_opt_lower_bound=min(sound_lb, INF),
+                sound_opt_lower_bound=sound_lb,
                 spa_ratio=ratio,
                 done=done,
                 unmatched=tuple(unmatched),
@@ -377,19 +546,30 @@ class QueryEngine:
         **overrides,
     ) -> tuple[QueryResult, dict[str, Any]]:
         """Host-driven run with per-phase wall times (paper Table 1) and an
-        optional host-side exit criterion (e.g. ``fagin.paper_exit_hook``)."""
+        optional host-side exit criterion (e.g. ``fagin.paper_exit_hook``).
+
+        Works on both partitionings.  On partition="sharded" the frontier
+        exchange and edge relax are fused inside one shard_map, so the
+        "send_bfs" bucket covers both (see
+        :func:`repro.core.dks_sharded.run_dks_frontier_instrumented` for
+        the exact attribution)."""
         if self.policy.partition == "sharded":
-            raise NotImplementedError(
-                "query_instrumented requires partition='single'")
+            from repro.core.dks_sharded import run_dks_frontier_instrumented
+            run_fn = run_dks_frontier_instrumented
+        else:
+            run_fn = run_dks_instrumented
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
         masks, unmatched = self._masks(keywords, strict)
         t0 = time.perf_counter()
-        state, info = run_dks_instrumented(
-            self.device_graph, jnp.asarray(masks), cfg, exit_hook=exit_hook)
+        with self._mesh_context():
+            state, info = run_fn(
+                self.device_graph, jnp.asarray(masks), cfg,
+                exit_hook=exit_hook)
         dt = time.perf_counter() - t0
         res = self._make_result(keywords, masks, state, cfg, dt, extract,
-                                keep_state, unmatched=unmatched)
+                                keep_state, unmatched=unmatched,
+                                own_time_s=dt)
         return res, info
 
     # ------------------------------------------------------------------
@@ -410,6 +590,7 @@ class QueryEngine:
     def _execute(self, fn, *args):
         """Run a compiled executor under the engine's mesh (if any) and
         block until the result is materialized."""
+        self._execute_count += 1
         with self._mesh_context():
             return jax.block_until_ready(fn(*args))
 
@@ -497,19 +678,27 @@ class QueryEngine:
         extract: bool,
         keep_state: bool = False,
         unmatched: tuple = (),
+        own_time_s: float | None = None,
+        interrupted: bool = False,
+        spa_hint: float | None = None,
     ) -> QueryResult:
         weights = np.asarray(state.topk_w)
         roots = np.asarray(state.topk_root)
         budget_hit = bool(state.budget_hit)
         capped = bool(state.capped)
         # The SPA cover DP (a host-driven O(3^m) loop of tiny device ops)
-        # only informs the ratio on forced early exit (budget or superstep
-        # cap) — skip it on proven exits.
+        # only informs the ratio on forced early exit (budget, superstep
+        # cap, or a deadline-interrupted run) — skip it on proven exits,
+        # and reuse ``spa_hint`` when the caller already computed it on
+        # this very state (query_deadline does).
         spa = None
         ratio = 0.0
-        if budget_hit or capped:
-            shat = jnp.minimum(state.s_front + self._e_min, INF)
-            spa = float(spa_cover_dp(shat, cfg.m))
+        if budget_hit or capped or interrupted:
+            if spa_hint is not None:
+                spa = spa_hint
+            else:
+                shat = jnp.minimum(state.s_front + self._e_min, INF)
+                spa = float(spa_cover_dp(shat, cfg.m))
             ratio = float(spa_ratio(state.topk_w[0], spa))
         answers = []
         if extract and weights[0] < INF:
@@ -536,4 +725,5 @@ class QueryEngine:
             wall_time_s=wall_time_s,
             state=state if keep_state else None,
             unmatched=tuple(unmatched),
+            own_time_s=own_time_s,
         )

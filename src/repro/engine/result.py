@@ -39,7 +39,9 @@ class QueryResult:
                      / ``spa_ratio`` are reported, as for ``budget_hit``).
       spa:           smallest-possible-answer bound at exit (cover DP over
                      frontier minima), computed only on forced stops
-                     (``budget_hit`` / ``capped``); None otherwise.
+                     (``budget_hit`` / ``capped``, or a streamed run
+                     stopped early by its ``until=`` predicate — e.g. a
+                     serving deadline); None otherwise.
       spa_ratio:     paper Fig. 12 degree of approximation: best/SPA, or 0
                      when the SPA estimate certifies the answer (paper
                      convention — on forced stops this relies on the SPA
@@ -47,6 +49,14 @@ class QueryResult:
                      ``StreamUpdate.proven_optimal`` for the sound claim).
       wall_time_s:   device wall time for the superstep loop (for batched
                      queries: the shared bucket time).
+      own_time_s:    THIS query's individual serve time, where one is
+                     measurable: equal to ``wall_time_s`` for single-query
+                     surfaces, the query's own serve time on the sharded
+                     ``query_batch`` path (which runs a bucket's queries
+                     sequentially — serving stats should bill each query
+                     its own time, not the shared bucket total), and None
+                     inside a vmapped bucket (the lanes execute as one
+                     device program, so per-query time does not exist).
       state:         the raw final :class:`DKSState` (device arrays) when
                      the query was made with ``keep_state=True``; None
                      otherwise, so served results don't pin the dense
@@ -77,6 +87,7 @@ class QueryResult:
     wall_time_s: float
     state: DKSState | None
     unmatched: tuple = ()
+    own_time_s: float | None = None
 
     @property
     def found(self) -> bool:

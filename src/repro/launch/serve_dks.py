@@ -1,0 +1,144 @@
+"""DKS serving CLI: load-replay a synthetic request trace against
+:class:`repro.serve.DKSService` with concurrent closed-loop clients, then
+print the :class:`ServeStats` report and verify every served answer
+against the direct single-query engine.
+
+    python -m repro.launch.serve_dks --dataset sec-rdfabout-cpu \
+        --clients 8 --requests 32 --max-batch 8 --max-wait-ms 25
+
+``--smoke`` shrinks the run to CI size and *asserts* the serving
+invariants: mean batch-fill > 1 (the micro-batcher coalesced concurrent
+clients), warm cache-hit rate > 0 (the trace repeats, the cache caught
+it), and every served answer either matches the direct engine result or
+carries ``approximate=True`` with a valid SPA lower bound.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.engine import ExecutionPolicy
+from repro.launch.dks_query import build_engine
+from repro.serve import DKSService, ServeConfig
+from repro.serve.loadgen import make_trace, replay
+
+
+def verify_served(engine, trace, served, atol=1e-5):
+    """Check every served answer against the direct engine.
+
+    Exact results must match the single-query weights; approximate
+    (deadline-terminated) results must bracket the optimum:
+    ``sound_opt_lower_bound <= optimum <= best-so-far``.  (The *sound*
+    bound is the one asserted — ``opt_lower_bound`` follows the paper's
+    reporting convention, whose SPA component is an estimator and may in
+    principle overestimate.)  Returns (n_exact, n_approx); raises
+    AssertionError on any mismatch.
+    """
+    refs: dict = {}
+    n_exact = n_approx = 0
+    for req, srv in zip(trace, served):
+        key = (req.keywords, req.k)
+        if key not in refs:
+            refs[key] = engine.query(list(req.keywords), k=req.k,
+                                     extract=False)
+        ref = refs[key]
+        if srv.approximate:
+            n_approx += 1
+            assert srv.opt_lower_bound is not None, \
+                "approximate result without a lower bound"
+            assert srv.sound_opt_lower_bound is not None, \
+                "approximate result without a sound lower bound"
+            assert srv.sound_opt_lower_bound <= ref.best_weight + atol, (
+                f"invalid sound bound for {req.keywords}: "
+                f"{srv.sound_opt_lower_bound} > optimum {ref.best_weight}")
+            assert srv.result.weights[0] >= ref.weights[0] - atol, (
+                f"best-so-far beats the optimum for {req.keywords}")
+        else:
+            n_exact += 1
+            np.testing.assert_allclose(
+                srv.result.weights, ref.weights, rtol=1e-5, atol=atol,
+                err_msg=f"served weights diverged for {req.keywords}")
+    return n_exact, n_approx
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="sec-rdfabout-cpu")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--unique", type=int, default=8,
+                    help="distinct queries in the trace (repeats warm the "
+                         "cache)")
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=25.0)
+    ap.add_argument("--cache-size", type=int, default=256)
+    ap.add_argument("--deadline-frac", type=float, default=0.25,
+                    help="fraction of requests carrying a latency budget")
+    ap.add_argument("--deadline-ms", type=float, default=75.0)
+    ap.add_argument("--max-supersteps", type=int, default=24)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--partition", default="single",
+                    choices=["single", "sharded"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the direct-engine parity pass")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run + hard asserts on coalescing, "
+                         "cache hits, and answer parity")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests = min(args.requests, 20)
+        args.unique = min(args.unique, 5)
+        args.max_batch = min(args.max_batch, 4)
+        args.max_wait_ms = 50.0
+        args.max_supersteps = min(args.max_supersteps, 12)
+
+    t0 = time.time()
+    policy = ExecutionPolicy(
+        backend=args.backend, partition=args.partition,
+        max_supersteps=args.max_supersteps)
+    ds, engine = build_engine(args.dataset, policy)
+    print(f"loaded {ds.name}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
+          f"({time.time()-t0:.1f}s)")
+
+    trace = make_trace(
+        engine.index, args.requests, unique=args.unique, k=args.k,
+        deadline_frac=args.deadline_frac, deadline_ms=args.deadline_ms,
+        seed=args.seed)
+    cfg = ServeConfig(max_batch=args.max_batch,
+                      max_wait_ms=args.max_wait_ms,
+                      cache_size=args.cache_size)
+    print(f"replaying {len(trace)} requests ({args.unique} unique) through "
+          f"{args.clients} clients; max_batch={cfg.max_batch} "
+          f"max_wait_ms={cfg.max_wait_ms:g}")
+
+    t0 = time.perf_counter()
+    with DKSService(engine, cfg) as svc:
+        served = replay(svc, trace, n_clients=args.clients)
+        stats = svc.stats()
+    wall = time.perf_counter() - t0
+
+    print(f"\n--- ServeStats ({wall:.2f}s wall) ---")
+    print(stats.summary())
+
+    if not args.no_verify:
+        n_exact, n_approx = verify_served(engine, trace, served)
+        print(f"\nverified: {n_exact} exact answers match the direct "
+              f"engine, {n_approx} approximate answers carry valid SPA "
+              f"bounds")
+
+    if args.smoke:
+        assert stats.mean_batch_fill > 1.0, (
+            f"no coalescing: mean batch-fill {stats.mean_batch_fill}")
+        assert stats.cache_hits > 0, "warm cache saw no hits"
+        print("smoke invariants hold: batch-fill > 1, cache hits > 0")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

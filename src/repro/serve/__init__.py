@@ -1,0 +1,33 @@
+"""repro.serve — the serving subsystem on top of :class:`QueryEngine`.
+
+Turns the engine's one-blocking-call-at-a-time query surface into an
+online answer-ranking service (the workload EMBANKS/KlusTree frame, and
+the ROADMAP's heavy-traffic north star):
+
+    from repro.serve import DKSService, ServeConfig
+
+    with DKSService(engine, ServeConfig(max_batch=8, max_wait_ms=5.0)) as svc:
+        served = svc.query(["paris", "piano"], k=3, deadline_ms=50.0)
+    print(svc.stats().summary())
+
+Public API:
+  DKSService    — admission + dynamic micro-batching (shape-bucketed
+                  through the engine's vmapped executors), LRU result
+                  cache, and deadline-bounded best-so-far answers with
+                  SPA lower bounds (paper Sec. 5.4 as a serving feature).
+  ServeConfig   — max_batch / max_wait_ms / cache_size / padding knobs.
+  ServedResult  — QueryResult + cache_hit / approximate / opt_lower_bound
+                  / batch_size / latency_ms.
+  ServeStats    — p50/p95 latency, throughput, batch-fill, cache-hit rate.
+  ResultCache   — the LRU (exposed for direct use and tests).
+  loadgen       — synthetic traces + concurrent replay clients
+                  (make_trace / replay / TraceRequest).
+"""
+
+from repro.serve.cache import ResultCache  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    DKSService,
+    ServeConfig,
+    ServedResult,
+)
+from repro.serve.stats import ServeStats  # noqa: F401

@@ -1,0 +1,220 @@
+"""Dynamic micro-batching: an admission queue that coalesces concurrent
+requests into shape buckets and dispatches each bucket as one call.
+
+Only queries with the same shape key — keyword count ``m``, answer count
+``k``, and policy overrides — can share a vmapped device program (the DKS
+table is ``[V, 2^m, K]``), so the batcher buckets by exactly that.  A
+bucket dispatches when it reaches ``max_batch`` or when its oldest member
+has waited ``max_wait_ms`` (the classic latency/throughput knob pair).
+
+Everything executes inline on the single dispatcher thread: client threads
+only ever touch the queue and their futures, so jax sees one caller and the
+service needs no further locking around device work.  Deadline-bounded
+requests never wait in a bucket — a deadline is per-request, so they are
+handed to the dispatch function immediately as singletons.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Hashable
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted query, waiting in the batcher.
+
+    ``overrides`` is the per-call policy override dict as a sorted item
+    tuple (hashable, order-free).  ``deadline_t`` is an absolute
+    ``time.perf_counter()`` deadline — queue wait counts against it.
+    ``engine`` is the engine build that admitted (and will serve) the
+    request: snapshotting it here keeps a ``set_engine`` swap from
+    changing the build mid-flight — admission-time validation and the
+    version-carrying cache key stay consistent with execution.
+    """
+
+    keywords: tuple
+    k: int
+    overrides: tuple[tuple[str, Any], ...]
+    future: Future
+    t_submit: float
+    engine: Any = None
+    deadline_t: float | None = None
+    cache_key: Hashable = None
+
+    @property
+    def shape_key(self) -> tuple:
+        # The engine build is part of the shape: requests admitted under
+        # different builds must never share a dispatch.
+        version = self.engine.version if self.engine is not None else None
+        return (len(self.keywords), self.k, self.overrides, version)
+
+
+_STOP = object()
+
+
+class MicroBatcher:
+    """Admission queue + dispatcher thread.
+
+    ``dispatch`` is called on the dispatcher thread with a non-empty list
+    of same-shape requests (or a deadline singleton) and must resolve every
+    request's future — including on error.  :class:`DKSService` provides
+    it; the batcher owns only admission, grouping, and timing.
+    """
+
+    def __init__(self, dispatch: Callable[[list[Request]], None], *,
+                 max_batch: int = 8, max_wait_ms: float = 5.0) -> None:
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._dispatch = dispatch
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self._queue: queue.Queue = queue.Queue()
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+        # Makes submit's running-check + enqueue atomic against stop():
+        # any request admitted under the lock is enqueued before _STOP,
+        # so the dispatcher always sees (and flushes) it before exiting.
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    def start(self) -> None:
+        with self._lock:
+            if self._thread is not None:
+                raise RuntimeError("batcher already started")
+            # Drain anything stale from a prior generation (a _STOP left
+            # by a stop() whose dispatcher had already died would make
+            # the new dispatcher exit on arrival, wedging every future).
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, Request) and not item.future.done():
+                    item.future.set_exception(
+                        RuntimeError("service restarted before dispatch"))
+            self._stopping = False
+            self._thread = threading.Thread(
+                target=self._loop, name="dks-serve-dispatcher", daemon=True)
+            self._thread.start()
+
+    def stop(self) -> None:
+        """Stop accepting requests, flush pending buckets, join.
+
+        Safe under concurrent calls: the first caller claims the thread
+        (and enqueues exactly one _STOP); later callers return at once.
+        """
+        with self._lock:
+            thread = self._thread
+            if thread is None:
+                return
+            self._thread = None
+            self._stopping = True
+            self._queue.put(_STOP)
+        thread.join()
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        with self._lock:
+            if self._stopping or self._thread is None:
+                raise RuntimeError("service is not running")
+            self._queue.put(request)
+
+    # ------------------------------------------------------------------
+    # Dispatcher thread
+    # ------------------------------------------------------------------
+
+    def _loop(self) -> None:
+        pending: dict[tuple, list[Request]] = {}
+        try:
+            self._loop_body(pending)
+        except BaseException as exc:  # noqa: BLE001 — dispatcher last resort
+            # A bookkeeping failure outside _safe_dispatch must not wedge
+            # the service with unresolvable futures: fail everything
+            # pending and queued, and refuse new submits.
+            with self._lock:
+                self._stopping = True
+            for group in pending.values():
+                for req in group:
+                    if not req.future.done():
+                        req.future.set_exception(exc)
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, Request) and not item.future.done():
+                    item.future.set_exception(exc)
+
+    def _loop_body(self, pending: dict[tuple, list[Request]]) -> None:
+        stopping = False
+        while True:
+            timeout = self._next_timeout(pending)
+            try:
+                item = self._queue.get(
+                    timeout=timeout) if timeout != 0 else None
+            except queue.Empty:
+                item = None
+            drained = [] if item is None else [item]
+            while True:
+                try:
+                    drained.append(self._queue.get_nowait())
+                except queue.Empty:
+                    break
+            for req in drained:
+                if req is _STOP:
+                    stopping = True
+                elif req.deadline_t is not None:
+                    # Deadline requests dispatch immediately, solo.
+                    self._safe_dispatch([req])
+                else:
+                    pending.setdefault(req.shape_key, []).append(req)
+            now = time.perf_counter()
+            for key in list(pending):
+                group = pending[key]
+                while len(group) >= self.max_batch:
+                    self._safe_dispatch(group[: self.max_batch])
+                    del group[: self.max_batch]
+                if group and (stopping or
+                              now - group[0].t_submit >= self.max_wait_s):
+                    self._safe_dispatch(group)
+                    group = []
+                if group:
+                    pending[key] = group
+                else:
+                    del pending[key]
+            if stopping and not pending:
+                return
+
+    def _next_timeout(self, pending: dict[tuple, list[Request]]):
+        """Block forever when idle; otherwise wake for the nearest bucket
+        window expiry (0 = poll without blocking)."""
+        if not pending:
+            return None
+        now = time.perf_counter()
+        nearest = min(group[0].t_submit + self.max_wait_s
+                      for group in pending.values())
+        remaining = nearest - now
+        return max(remaining, 0.0) if remaining > 1e-4 else 0
+
+    def _safe_dispatch(self, group: list[Request]) -> None:
+        try:
+            self._dispatch(group)
+        except BaseException as exc:  # noqa: BLE001 — must resolve futures
+            for req in group:
+                if not req.future.done():
+                    req.future.set_exception(exc)

@@ -1,0 +1,109 @@
+"""Load generation: synthetic request traces + concurrent replay clients.
+
+``make_trace`` builds a replay trace the way the paper builds query
+workloads (Sec. 7.1: keywords sampled across the document-frequency
+spectrum), then draws requests from that pool with a skewed (1/rank)
+popularity — real query streams repeat, which is what gives a warm result
+cache its hits.
+
+``replay`` drives a :class:`~repro.serve.service.DKSService` with N
+closed-loop clients (each submits, waits, submits the next), the standard
+serving-benchmark shape: concurrency creates admission pressure, so the
+micro-batcher has something to coalesce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.serve.service import DKSService, ServedResult
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One replayable request: keywords + answer count + optional budget."""
+
+    keywords: tuple
+    k: int = 1
+    deadline_ms: float | None = None
+
+
+def make_trace(index, n_requests: int = 48, *, unique: int = 8,
+               m_choices: tuple = (2, 3), k: int = 1,
+               deadline_frac: float = 0.0, deadline_ms: float = 75.0,
+               seed: int = 0) -> list[TraceRequest]:
+    """Synthetic request trace over an :class:`InvertedIndex`'s vocabulary.
+
+    ``unique`` distinct queries are built first (keyword counts cycling
+    through ``m_choices``, tokens picked from spread-out windows of the
+    df-sorted vocabulary so keyword-node counts span the Fig. 9 range),
+    then ``n_requests`` draws follow a 1/rank popularity — the head query
+    repeats often enough that a warm cache sees hits.  A ``deadline_frac``
+    fraction of requests (every ``1/deadline_frac``-th, deterministic)
+    carries a ``deadline_ms`` budget to exercise the approximate path.
+    """
+    vocab = sorted(index.vocabulary(), key=index.df)
+    usable = [t for t in vocab if index.df(t) >= 2]
+    if len(usable) < max(m_choices) * 2:
+        raise ValueError("vocabulary too small for a trace")
+    rng = np.random.default_rng(seed)
+    pool: list[tuple] = []
+    for i in range(unique):
+        m = m_choices[i % len(m_choices)]
+        lo = int((len(usable) - m) * i / max(unique, 1))
+        hi = min(len(usable) - 1, lo + max(2 * m, 10))
+        picks = rng.choice(np.arange(lo, hi + 1), size=m, replace=False)
+        pool.append(tuple(usable[int(p)] for p in picks))
+    ranks = np.arange(len(pool))
+    popularity = 1.0 / (ranks + 1.0)
+    popularity /= popularity.sum()
+    every = int(round(1.0 / deadline_frac)) if deadline_frac > 0 else 0
+    trace = []
+    for j in range(n_requests):
+        q = pool[int(rng.choice(len(pool), p=popularity))]
+        dl = deadline_ms if (every and j % every == every - 1) else None
+        trace.append(TraceRequest(keywords=q, k=k, deadline_ms=dl))
+    return trace
+
+
+def replay(service: DKSService, trace: list[TraceRequest], *,
+           n_clients: int = 8) -> list[ServedResult]:
+    """Replay ``trace`` through ``service`` with ``n_clients`` concurrent
+    closed-loop clients.  Returns results in trace order; the first client
+    error (if any) is re-raised after all clients stop."""
+    results: list[ServedResult | None] = [None] * len(trace)
+    errors: list[BaseException] = []
+    cursor = [0]
+    lock = threading.Lock()
+    n_clients = max(1, min(n_clients, len(trace)))
+    barrier = threading.Barrier(n_clients)
+
+    def client() -> None:
+        barrier.wait()
+        while True:
+            with lock:
+                i = cursor[0]
+                cursor[0] += 1
+            if i >= len(trace) or errors:
+                return
+            req = trace[i]
+            try:
+                results[i] = service.query(
+                    list(req.keywords), k=req.k,
+                    deadline_ms=req.deadline_ms)
+            except BaseException as exc:  # noqa: BLE001 — reported below
+                errors.append(exc)
+                return
+
+    threads = [threading.Thread(target=client, name=f"dks-client-{c}")
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return results  # type: ignore[return-value]

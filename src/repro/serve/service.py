@@ -1,0 +1,389 @@
+"""DKSService — the serving layer in front of :class:`QueryEngine`.
+
+The paper's headline guarantee (Sec. 5.4 / Fig. 12) — a DKS run stopped
+early still yields ranked answers with a sound lower bound — is exactly
+the contract a latency-budgeted query service needs.  This module turns
+the engine into that service:
+
+- **admission + dynamic micro-batching** — concurrent requests coalesce
+  into ``(m, k)``-shape buckets and dispatch through the engine's vmapped
+  batch executors, amortizing device dispatch (and, via shape-padded
+  buckets, compilation) across clients;
+- **a result cache** — LRU keyed on the engine's normalized cache token
+  (keyword multiset + ``(k, policy)`` + engine build version), with
+  hit/miss/eviction stats and explicit invalidation on graph rebuild;
+- **deadline-bounded answers** — a per-request latency budget routes the
+  query through the streaming executor and returns the best-so-far
+  answers *with* their SPA lower bound and ``approximate=True`` when the
+  deadline expires.
+
+Usage::
+
+    with DKSService(engine, ServeConfig(max_batch=8)) as svc:
+        fut = svc.submit(["paris", "piano"], k=3)          # non-blocking
+        served = svc.query(query, k=1, deadline_ms=50.0)   # blocking
+        if served.approximate:
+            print(served.result.weights, ">=", served.opt_lower_bound)
+    print(svc.stats().summary())
+
+All device work happens on the service's single dispatcher thread; client
+threads only touch the cache, the admission queue, and their futures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from typing import Sequence
+
+from repro.engine import QueryEngine, QueryResult
+from repro.serve.batcher import MicroBatcher, Request
+from repro.serve.cache import ResultCache
+from repro.serve.stats import ServeStats, StatsCollector
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs, fixed at service construction.
+
+    Attributes:
+      max_batch:   most requests coalesced into one device dispatch.
+      max_wait_ms: admission window — a partial bucket dispatches once its
+                   oldest request has waited this long.  The classic
+                   trade: higher = better fill, worse p50.
+      cache_size:  LRU entries; 0 disables the result cache.
+      extract:     reconstruct AnswerTrees on served results (skip for
+                   weight-only serving).
+      strict:      reject queries with unmatched keywords at admission
+                   (KeyError on the future) instead of poisoning a whole
+                   co-batched dispatch.
+      pad_batches: pad partial buckets up to a fixed lane count by
+                   repeating the last query, so the vmapped executor sees
+                   few distinct batch shapes (each new shape re-traces):
+                   "pow2" (next power of two, the default), "max" (always
+                   ``max_batch`` lanes), or "none".  Padding lanes burn
+                   device FLOPs only — the engine skips host-side result
+                   construction for them (``query_batch(n_real=)``) — and
+                   batch-fill stats count real requests only.  No-op on
+                   partition="sharded", where buckets run sequentially and
+                   a padding lane would be a whole wasted run.
+      default_deadline_ms: deadline applied when a request sets none.
+                   Caution: deadline-bounded requests route solo through
+                   the streaming executor (a deadline is per-request and
+                   needs per-superstep control), so setting a service-wide
+                   default turns off micro-batching and the fused
+                   while-loop executor for every request — use per-request
+                   ``deadline_ms`` for requests that actually have a
+                   budget, not this, for a blanket safety SLO.
+    """
+
+    max_batch: int = 8
+    max_wait_ms: float = 5.0
+    cache_size: int = 1024
+    extract: bool = True
+    strict: bool = True
+    pad_batches: str = "pow2"   # "pow2" | "max" | "none"
+    default_deadline_ms: float | None = None
+
+    def __post_init__(self) -> None:
+        if self.pad_batches not in ("pow2", "max", "none"):
+            raise ValueError(f"unknown pad_batches {self.pad_batches!r}")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedResult:
+    """One served request: the engine's answer plus serving metadata.
+
+    Attributes:
+      result:      the :class:`QueryResult` (for ``approximate`` results:
+                   best-so-far weights/answers, ``done=False``, and the
+                   forced-stop SPA bound on ``result.spa``).
+      cache_hit:   served from the result cache (no device work).
+      approximate: the deadline expired before the run's exit criterion —
+                   the answer is best-so-far, bounded below by
+                   ``opt_lower_bound`` (the paper's early-termination
+                   guarantee as a serving feature).
+      opt_lower_bound: the *reported* lower bound on the optimum from the
+                   last streamed update (deadline-routed requests only) —
+                   the paper's Sec. 5.4 convention, mixing the provably
+                   sound ``nu`` bound with the SPA estimator, which can in
+                   principle overestimate.
+      sound_opt_lower_bound: the provably sound lower bound (``nu`` /
+                   exhausted-frontier facts only).  This is the value a
+                   client may rely on: optimum >= sound_opt_lower_bound,
+                   always.
+      batch_size:  real requests that shared this dispatch (1 for solo and
+                   deadline dispatches, 0 for cache hits).
+      latency_ms:  end-to-end submit -> resolve latency.
+    """
+
+    result: QueryResult
+    cache_hit: bool
+    approximate: bool
+    batch_size: int
+    latency_ms: float
+    opt_lower_bound: float | None = None
+    sound_opt_lower_bound: float | None = None
+
+    @property
+    def weights(self):
+        return self.result.weights
+
+    @property
+    def found(self) -> bool:
+        return self.result.found
+
+    @property
+    def best_weight(self) -> float:
+        return self.result.best_weight
+
+
+class DKSService:
+    """Micro-batching, caching, deadline-aware front end over one engine.
+
+    Lifecycle: ``start()``/``stop()`` or use as a context manager.  Safe
+    for any number of client threads; all device execution is serialized
+    on the internal dispatcher thread.
+    """
+
+    def __init__(self, engine: QueryEngine,
+                 config: ServeConfig | None = None) -> None:
+        self.engine = engine
+        self.config = config or ServeConfig()
+        self._cache = ResultCache(self.config.cache_size)
+        self._stats = StatsCollector()
+        self._batcher = MicroBatcher(
+            self._dispatch, max_batch=self.config.max_batch,
+            max_wait_ms=self.config.max_wait_ms)
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    def start(self) -> "DKSService":
+        self._batcher.start()
+        return self
+
+    def stop(self) -> None:
+        self._batcher.stop()
+
+    def __enter__(self) -> "DKSService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+
+    def submit(self, keywords: Sequence, k: int = 1, *,
+               deadline_ms: float | None = None,
+               **overrides) -> "Future[ServedResult]":
+        """Admit one query; returns a future resolving to a
+        :class:`ServedResult`.
+
+        ``deadline_ms``: per-request latency budget.  Queue wait counts
+        against it; when it expires mid-run the request resolves with the
+        best-so-far answer, ``approximate=True``, and its SPA lower bound.
+        Deadline-less requests run to their exit criterion.
+        ``overrides``: per-call policy overrides, forwarded to the engine
+        (they key both the result cache and the shape bucket).
+        """
+        t_submit = time.perf_counter()
+        keywords = tuple(keywords)
+        if deadline_ms is None:
+            deadline_ms = self.config.default_deadline_ms
+        future: Future = Future()
+        if not self._batcher.running:
+            raise RuntimeError("service is not running")
+        engine = self.engine  # snapshot: set_engine must not swap mid-flight
+        if self.config.strict:
+            missing = engine.index.missing_tokens(list(keywords))
+            if missing:
+                # Admission-time validation: fail this request alone, not
+                # the co-batched dispatch it would have poisoned.
+                future.set_exception(KeyError(
+                    f"keywords matched no node in the index: {missing}"))
+                return future
+        if overrides:
+            # Normalize: an override equal to the engine's policy value is
+            # no override at all — dropping it lets the request coalesce
+            # with no-override requests (the batcher buckets on these) and
+            # matches how cache_token's effective-policy key behaves.
+            # Unknown override names fail this request's future at
+            # admission, like every other admission error.
+            try:
+                overrides = {name: value
+                             for name, value in overrides.items()
+                             if getattr(engine.policy, name) != value}
+            except AttributeError as exc:
+                future.set_exception(TypeError(
+                    f"unknown policy override: {exc}"))
+                return future
+        # Counters only move for requests that will actually be served: a
+        # hit counts on the spot (its serving is the set_result below); a
+        # miss counts only after durable admission to the batcher, so a
+        # submit racing stop() skews neither the stats window nor the
+        # miss rate.
+        cache_key = engine.cache_token(keywords, k, **overrides)
+        try:
+            hash(cache_key)
+        except TypeError as exc:
+            # An unhashable keyword or override value would otherwise blow
+            # up on the dispatcher thread; fail this request alone.
+            future.set_exception(TypeError(
+                f"unhashable query or override value: {exc}"))
+            return future
+        hit = self._cache.get(cache_key, count_miss=False)
+        if hit is not None:
+            t_done = time.perf_counter()
+            self._stats.record_request(t_submit, t_done)
+            future.set_result(ServedResult(
+                result=hit, cache_hit=True, approximate=False,
+                batch_size=0, latency_ms=(t_done - t_submit) * 1e3))
+            return future
+        self._batcher.submit(Request(
+            keywords=keywords, k=k,
+            overrides=tuple(sorted(overrides.items())),
+            future=future, t_submit=t_submit, engine=engine,
+            deadline_t=(t_submit + deadline_ms / 1e3
+                        if deadline_ms is not None else None),
+            cache_key=cache_key))
+        self._cache.count_miss()
+        return future
+
+    def query(self, keywords: Sequence, k: int = 1, *,
+              deadline_ms: float | None = None, timeout: float | None = None,
+              **overrides) -> ServedResult:
+        """Blocking :meth:`submit` — one served answer."""
+        return self.submit(keywords, k,
+                           deadline_ms=deadline_ms, **overrides
+                           ).result(timeout)
+
+    # ------------------------------------------------------------------
+    # Cache control / introspection
+    # ------------------------------------------------------------------
+
+    def invalidate_cache(self) -> int:
+        """Drop every cached result (call on graph rebuild).  Returns the
+        number of entries dropped."""
+        return self._cache.invalidate()
+
+    def set_engine(self, engine: QueryEngine) -> None:
+        """Swap in a rebuilt engine (graph update) and invalidate the
+        cache.  In-flight requests snapshot their admitting engine, so
+        they are answered by the previous build (its version rides on the
+        batcher shape key — a dispatch never mixes builds); their results
+        are keyed under that version and can never be served to post-swap
+        clients."""
+        self.engine = engine
+        self.invalidate_cache()
+
+    def stats(self) -> ServeStats:
+        """Aggregate :class:`ServeStats` snapshot (p50/p95 latency,
+        throughput, batch-fill, cache-hit rate)."""
+        return self._stats.report(self._cache.stats())
+
+    # ------------------------------------------------------------------
+    # Dispatcher-thread execution
+    # ------------------------------------------------------------------
+
+    def _dispatch(self, group: list[Request]) -> None:
+        # Move every future to RUNNING before touching the device: a
+        # client that cancelled while queued drops out here (saving its
+        # lanes), and set_result below can no longer race a cancel —
+        # which would poison the co-batched futures with InvalidStateError.
+        group = [req for req in group
+                 if req.future.set_running_or_notify_cancel()]
+        if not group:
+            return
+        try:
+            if len(group) == 1 and group[0].deadline_t is not None:
+                self._serve_deadline(group[0])
+            else:
+                self._serve_batch(group)
+        except BaseException:
+            # The batcher resolves the still-pending futures with this
+            # exception; count only those, so requests + failures equals
+            # admitted load even if some of the group already resolved.
+            self._stats.record_failure(
+                sum(1 for req in group if not req.future.done()))
+            raise
+
+    def _padded_len(self, engine: QueryEngine, n: int) -> int:
+        mode = self.config.pad_batches
+        if engine.policy.partition == "sharded":
+            # The sharded query_batch serves a bucket as sequential
+            # single-query runs (one fixed-shape executable regardless of
+            # bucket size), so a padding lane would be a full wasted DKS
+            # run instead of the free vmap lane it is on "single".
+            return n
+        if mode == "none" or n >= self.config.max_batch:
+            return n
+        if mode == "max":
+            return self.config.max_batch
+        p = 1
+        while p < n:
+            p *= 2
+        return min(p, self.config.max_batch)
+
+    def _serve_batch(self, group: list[Request]) -> None:
+        cfg = self.config
+        # The admitting engine build serves the group (a group never mixes
+        # builds — the build version is part of the batcher's shape key).
+        engine = group[0].engine
+        queries = [list(req.keywords) for req in group]
+        n_real = len(queries)
+        queries += [queries[-1]] * (self._padded_len(engine, n_real)
+                                    - n_real)
+        # n_real: padding lanes ride the device program for shape reuse
+        # but skip host-side result construction in the engine.
+        results = engine.query_batch(
+            queries, k=group[0].k, extract=cfg.extract, strict=cfg.strict,
+            n_real=n_real, **dict(group[0].overrides))
+        t_done = time.perf_counter()
+        self._stats.record_dispatch(n_real, deadline=False)
+        # After a set_engine swap, results of the old build are keyed
+        # under its version — unreachable to every future lookup, so
+        # caching them would only evict live entries.
+        cacheable = engine is self.engine
+        for req, res in zip(group, results):
+            if cacheable:
+                self._cache.put(req.cache_key, res)
+            self._stats.record_request(req.t_submit, t_done)
+            req.future.set_result(ServedResult(
+                result=res, cache_hit=False, approximate=False,
+                batch_size=n_real,
+                latency_ms=(t_done - req.t_submit) * 1e3))
+
+    def _serve_deadline(self, req: Request) -> None:
+        cfg = self.config
+        # query_deadline spends the budget on supersteps, not on
+        # per-superstep bound computation (the SPA cover DP can cost many
+        # times a superstep); bounds are computed once, at the end.
+        # Queue wait already counted against the deadline.
+        res, info = req.engine.query_deadline(
+            list(req.keywords), k=req.k, extract=cfg.extract,
+            strict=cfg.strict,
+            deadline_s=req.deadline_t - time.perf_counter(),
+            **dict(req.overrides))
+        t_done = time.perf_counter()
+        approximate = info["interrupted"]
+        if not approximate and req.engine is self.engine:
+            # Finished inside its budget: an exact answer, cacheable like
+            # any other (unless the build was swapped while in flight —
+            # the old-version key would be unreachable).  Best-so-far
+            # results are budget-specific — never cached.
+            self._cache.put(req.cache_key, res)
+        self._stats.record_dispatch(1, deadline=True)
+        self._stats.record_request(req.t_submit, t_done,
+                                   approximate=approximate)
+        req.future.set_result(ServedResult(
+            result=res, cache_hit=False, approximate=approximate,
+            batch_size=1, latency_ms=(t_done - req.t_submit) * 1e3,
+            opt_lower_bound=info["opt_lower_bound"],
+            sound_opt_lower_bound=info["sound_opt_lower_bound"]))

@@ -1,0 +1,167 @@
+"""Serving statistics: per-request latencies, dispatch batch-fill, and
+cache counters, aggregated into the :class:`ServeStats` report (p50/p95
+latency, throughput, batch-fill, cache-hit rate).
+
+Latencies are end-to-end client latencies — submit to resolved future —
+so they include queue wait and the micro-batching admission window, not
+just device time.  That is the number a latency budget is written against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+
+import numpy as np
+
+# Latency percentiles are computed over a bounded window of the most
+# recent requests, so a long-lived service holds O(1) memory and stats()
+# stays cheap; counters (requests, failures, ...) are exact totals.
+LATENCY_WINDOW = 16384
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    """Aggregate serving report (one snapshot of ``DKSService.stats()``).
+
+    Attributes:
+      requests:        requests served so far (cache hits included;
+                       admission-rejected submits are not counted and do
+                       not skew the window).
+      failures:        dispatched requests whose execution raised (their
+                       futures carry the exception).
+      batch_dispatches: device dispatches made by the micro-batcher.
+      deadline_dispatches: solo dispatches for deadline-bounded requests
+                       (they route through the streaming executor and never
+                       coalesce — a deadline is per-request).
+      batched_requests: requests served through batch dispatches.
+      mean_batch_fill: batched_requests / batch_dispatches — how many
+                       client requests each vmapped device program served
+                       (padding lanes are not counted; > 1 means the
+                       batcher is amortizing dispatch across clients).
+      cache_hits / cache_misses / cache_evictions / cache_hit_rate:
+                       result-cache counters (hit rate over hits+misses).
+      approximate:     requests answered best-so-far under a deadline.
+      p50_ms / p95_ms / mean_ms / max_ms: end-to-end latency percentiles
+                       over the last ``LATENCY_WINDOW`` requests (exact
+                       until the window fills).
+      window_s:        first submit -> last resolve.
+      throughput_rps:  requests / window_s.
+    """
+
+    requests: int
+    failures: int
+    batch_dispatches: int
+    deadline_dispatches: int
+    batched_requests: int
+    mean_batch_fill: float
+    cache_hits: int
+    cache_misses: int
+    cache_evictions: int
+    cache_hit_rate: float
+    approximate: int
+    p50_ms: float
+    p95_ms: float
+    mean_ms: float
+    max_ms: float
+    window_s: float
+    throughput_rps: float
+
+    def summary(self) -> str:
+        """Human-readable multi-line report (the CLI prints this)."""
+        failed = f", {self.failures} failed" if self.failures else ""
+        return (
+            f"requests      {self.requests}"
+            f"  ({self.approximate} approximate under deadline{failed})\n"
+            f"throughput    {self.throughput_rps:.1f} req/s"
+            f" over {self.window_s:.2f}s\n"
+            f"latency ms    p50={self.p50_ms:.1f} p95={self.p95_ms:.1f}"
+            f" mean={self.mean_ms:.1f} max={self.max_ms:.1f}\n"
+            f"batch-fill    {self.mean_batch_fill:.2f} mean over"
+            f" {self.batch_dispatches} batch dispatches"
+            f" (+{self.deadline_dispatches} deadline singles)\n"
+            f"cache         hits={self.cache_hits}"
+            f" misses={self.cache_misses}"
+            f" evictions={self.cache_evictions}"
+            f" hit-rate={self.cache_hit_rate:.2f}"
+        )
+
+
+class StatsCollector:
+    """Thread-safe recorder behind ``DKSService.stats()``.
+
+    Requests resolve on two threads — cache hits on the client thread,
+    everything else on the dispatcher thread — so every mutation takes the
+    lock.  ``report()`` is a consistent snapshot.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._lat_ms: deque[float] = deque(maxlen=LATENCY_WINDOW)
+        self._n_requests = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._approximate = 0
+        self._failures = 0
+        self._batch_dispatches = 0
+        self._deadline_dispatches = 0
+        self._batched_requests = 0
+
+    def record_request(self, t_submit: float, t_done: float,
+                       approximate: bool = False) -> None:
+        """One served request.  The stats window (t_first..t_last) is
+        derived here, from served requests only — so a rejected submit
+        never skews it and every snapshot is internally consistent."""
+        with self._lock:
+            self._lat_ms.append((t_done - t_submit) * 1e3)
+            self._n_requests += 1
+            if self._t_first is None or t_submit < self._t_first:
+                self._t_first = t_submit
+            if self._t_last is None or t_done > self._t_last:
+                self._t_last = t_done
+            if approximate:
+                self._approximate += 1
+
+    def record_failure(self, n_requests: int) -> None:
+        with self._lock:
+            self._failures += n_requests
+
+    def record_dispatch(self, n_requests: int, deadline: bool) -> None:
+        with self._lock:
+            if deadline:
+                self._deadline_dispatches += 1
+            else:
+                self._batch_dispatches += 1
+                self._batched_requests += n_requests
+
+    def report(self, cache_stats: dict[str, int]) -> ServeStats:
+        with self._lock:
+            lat = np.asarray(self._lat_ms, np.float64)
+            n = self._n_requests
+            window = ((self._t_last - self._t_first)
+                      if n and self._t_first is not None else 0.0)
+            hits = cache_stats.get("hits", 0)
+            misses = cache_stats.get("misses", 0)
+            looked = hits + misses
+            return ServeStats(
+                requests=n,
+                failures=self._failures,
+                batch_dispatches=self._batch_dispatches,
+                deadline_dispatches=self._deadline_dispatches,
+                batched_requests=self._batched_requests,
+                mean_batch_fill=(
+                    self._batched_requests / self._batch_dispatches
+                    if self._batch_dispatches else 0.0),
+                cache_hits=hits,
+                cache_misses=misses,
+                cache_evictions=cache_stats.get("evictions", 0),
+                cache_hit_rate=hits / looked if looked else 0.0,
+                approximate=self._approximate,
+                p50_ms=float(np.percentile(lat, 50)) if n else 0.0,
+                p95_ms=float(np.percentile(lat, 95)) if n else 0.0,
+                mean_ms=float(lat.mean()) if n else 0.0,
+                max_ms=float(lat.max()) if n else 0.0,
+                window_s=window,
+                throughput_rps=n / window if window > 0 else 0.0,
+            )

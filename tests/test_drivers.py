@@ -61,3 +61,13 @@ def test_dks_query_cli():
                    "--max-supersteps", "12"])
     assert "DKS finished" in out
     assert "top answers" in out
+
+
+def test_serve_dks_cli_smoke():
+    """The serving acceptance run: >= 8 concurrent clients, batch
+    coalescing (mean fill > 1), warm cache hits, and parity with the
+    direct engine — the CLI asserts all of it under --smoke."""
+    out = run_cli(["-m", "repro.launch.serve_dks", "--smoke"])
+    assert "batch-fill" in out and "cache" in out
+    assert "verified:" in out
+    assert "smoke invariants hold" in out

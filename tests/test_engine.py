@@ -203,6 +203,53 @@ def test_partially_matched_query_reports_unmatched(setup):
     assert matched.unmatched == ()
 
 
+def test_own_time_reporting(setup):
+    """own_time_s: per-query serve time where measurable — equal to the
+    wall time on single-query surfaces, None inside a vmapped bucket."""
+    g, index, engine = setup
+    toks = mid_df_tokens(index, 4)
+    res = engine.query(toks[:2], k=1, extract=False)
+    assert res.own_time_s == res.wall_time_s and res.own_time_s > 0
+    batched = engine.query_batch([toks[0:2], toks[2:4]], k=1, extract=False)
+    assert all(b.own_time_s is None for b in batched)
+
+
+def test_query_deadline_hook(setup):
+    """The serving hook: wall-clock-bounded stepping, bounds computed once
+    at the end (valid, though not the stream's running max)."""
+    g, index, engine = setup
+    q = mid_df_tokens(index, 3)
+    full = engine.query(q, k=1, extract=False)
+    res, info = engine.query_deadline(q, k=1, extract=False,
+                                      deadline_s=120.0)
+    assert not info["interrupted"] and res.done
+    np.testing.assert_allclose(res.weights, full.weights)
+    # A proven exit certifies the best answer soundly; both bounds say so.
+    assert info["sound_opt_lower_bound"] == res.best_weight
+    assert info["opt_lower_bound"] == res.best_weight
+    trunc, info2 = engine.query_deadline(q, k=1, extract=False,
+                                         deadline_s=0.0)
+    assert info2["interrupted"] and not trunc.done
+    assert trunc.spa is not None  # forced-stop SPA on the result
+    # Valid bracket around the optimum.
+    assert info2["sound_opt_lower_bound"] <= info2["opt_lower_bound"] + 1e-6
+    assert info2["sound_opt_lower_bound"] <= full.best_weight + 1e-5
+    assert trunc.weights[0] >= full.weights[0] - 1e-5
+
+
+def test_query_batch_n_real_skips_padding(setup):
+    """The serving hook: padding lanes (index >= n_real) ride the vmapped
+    program but skip host-side result construction, returning None."""
+    g, index, engine = setup
+    toks = mid_df_tokens(index, 4)
+    queries = [toks[0:2], toks[2:4], toks[2:4]]
+    out = engine.query_batch(queries, k=1, extract=False, n_real=2)
+    assert out[2] is None
+    refs = engine.query_batch(queries[:2], k=1, extract=False)
+    for served, ref in zip(out[:2], refs):
+        np.testing.assert_allclose(served.weights, ref.weights)
+
+
 def test_engine_reexports_from_core():
     import repro.core as core
     assert core.QueryEngine is QueryEngine
@@ -264,6 +311,30 @@ def test_sharded_query_batch_reports_bucket_time(sharded_setup):
     # Same-m queries share one bucket and must report one shared time.
     assert t2a == t2b
     assert t2a > 0 and t3 > 0
+    # ...but each query also records its OWN serve time (the bucket runs
+    # sequentially here), so serving stats can bill queries honestly.
+    for br in results:
+        assert br.own_time_s is not None
+        assert 0 < br.own_time_s <= br.wall_time_s
+    assert results[0].own_time_s + results[1].own_time_s <= t2a + 1e-6
     for q, br in zip(queries, results):
         sr = sharded.query(q, k=1, extract=False)
         np.testing.assert_array_equal(br.weights, sr.weights)
+
+
+def test_sharded_query_instrumented(setup, sharded_setup):
+    """The partition='single' restriction is lifted: the sharded engine
+    serves query_instrumented with the same timings/history contract and
+    parity with the dense path."""
+    _, index, single = setup
+    _, _, sharded = sharded_setup
+    query = mid_df_tokens(index, 2)
+    res, info = sharded.query_instrumented(query, k=1, extract=False,
+                                           max_supersteps=24)
+    ref = single.query(query, k=1, extract=False, max_supersteps=24)
+    np.testing.assert_allclose(res.weights, ref.weights)
+    assert set(info["timings"]) == \
+        {"send_bfs", "receive", "evaluate", "send_agg"}
+    assert all(v >= 0 for v in info["timings"].values())
+    assert res.supersteps == len(info["history"])
+    assert info["history"][-1]["best"] == ref.best_weight

@@ -1,0 +1,270 @@
+"""Serving subsystem tests: micro-batcher coalescing + shape separation,
+result-cache hits that skip device execution (asserted via the engine's
+trace/executor counters), deadline-bounded approximate answers with valid
+SPA bounds, and multi-threaded client parity with direct engine.query."""
+
+import numpy as np
+import pytest
+
+from repro.engine import ExecutionPolicy, QueryEngine
+from repro.graph.generators import lod_like_graph
+from repro.graph.index import InvertedIndex
+from repro.serve import DKSService, ResultCache, ServeConfig
+from repro.serve.loadgen import TraceRequest, make_trace, replay
+
+
+@pytest.fixture(scope="module")
+def engine():
+    g, tokens = lod_like_graph(600, 1800, seed=11, vocab=120)
+    index = InvertedIndex.from_token_matrix(tokens)
+    return QueryEngine.build(
+        g, index=index, policy=ExecutionPolicy(max_supersteps=32))
+
+
+def mid_df_tokens(index, n, lo=2, hi=60):
+    toks = [t for t in sorted(index.vocabulary(), key=index.df)
+            if lo <= index.df(t) <= hi]
+    assert len(toks) >= n
+    return toks[:n]
+
+
+def test_concurrent_clients_match_direct_engine(engine):
+    """8 closed-loop clients; every served answer equals engine.query."""
+    toks = mid_df_tokens(engine.index, 9)
+    pool = [tuple(toks[0:2]), tuple(toks[2:4]), tuple(toks[4:6]),
+            tuple(toks[6:9]), tuple(toks[3:6])]
+    trace = [TraceRequest(pool[i % len(pool)]) for i in range(15)]
+    with DKSService(engine, ServeConfig(max_batch=4, max_wait_ms=40.0,
+                                        cache_size=64)) as svc:
+        served = replay(svc, trace, n_clients=8)
+        stats = svc.stats()
+    assert stats.requests == len(trace)
+    assert stats.batch_dispatches > 0
+    # The trace repeats each query 3x; once the first wave resolves, the
+    # warm cache must catch at least one repeat.
+    assert stats.cache_hits > 0
+    refs = {q: engine.query(list(q), k=1) for q in pool}
+    for req, srv in zip(trace, served):
+        assert not srv.approximate
+        ref = refs[req.keywords]
+        np.testing.assert_allclose(srv.result.weights, ref.weights)
+        assert [a.weight for a in srv.result.answers] == \
+               [a.weight for a in ref.answers]
+
+
+def test_batcher_coalesces_same_shape_and_separates(engine):
+    """Same-shape requests share one vmapped dispatch; a different m (or
+    k) cannot ride along — the DKS table shape [V, 2^m, K] differs."""
+    toks = mid_df_tokens(engine.index, 9)
+    m2 = [toks[0:2], toks[2:4], toks[4:6], toks[6:8]]
+    m3 = [toks[0:3], toks[6:9]]
+    with DKSService(engine, ServeConfig(max_batch=4, max_wait_ms=250.0,
+                                        cache_size=0)) as svc:
+        futures = [svc.submit(q, k=1) for q in m2 + m3]
+        served = [f.result(timeout=300) for f in futures]
+        stats = svc.stats()
+    # The four m=2 queries filled one batch exactly...
+    assert [s.batch_size for s in served[:4]] == [4, 4, 4, 4]
+    # ...and the m=3 queries dispatched separately, together.
+    assert [s.batch_size for s in served[4:]] == [2, 2]
+    assert stats.batch_dispatches == 2
+    assert stats.mean_batch_fill == 3.0
+    assert stats.cache_hits == 0 and stats.cache_misses == 0  # cache off
+    for q, srv in zip(m2 + m3, served):
+        np.testing.assert_allclose(
+            srv.result.weights, engine.query(q, k=1).weights)
+
+
+def test_cache_hit_skips_execution_and_normalizes(engine):
+    q = mid_df_tokens(engine.index, 2)
+    with DKSService(engine, ServeConfig(max_batch=2, max_wait_ms=1.0,
+                                        cache_size=8)) as svc:
+        first = svc.query(q, k=1)
+        assert not first.cache_hit and first.batch_size == 1
+        executes = engine.execute_count
+        traces = engine.cache_stats["traces"]
+        second = svc.query(q, k=1)
+        permuted = svc.query(list(reversed(q)), k=1)
+        # Hits skip the device entirely: no dispatch, no re-trace.
+        assert second.cache_hit and permuted.cache_hit
+        assert second.batch_size == 0
+        assert engine.execute_count == executes
+        assert engine.cache_stats["traces"] == traces
+        np.testing.assert_allclose(second.result.weights,
+                                   first.result.weights)
+        np.testing.assert_allclose(permuted.result.weights,
+                                   first.result.weights)
+        stats = svc.stats()
+        assert stats.cache_hits == 2 and stats.cache_misses == 1
+        # A different k or policy override is a different answer: miss.
+        assert not svc.query(q, k=2).cache_hit
+        assert not svc.query(q, k=1, max_supersteps=8).cache_hit
+        # Explicit invalidation (graph rebuild): the entry is gone.
+        assert svc.invalidate_cache() > 0
+        assert not svc.query(q, k=1).cache_hit
+
+
+def test_cache_lru_eviction_and_disable():
+    cache = ResultCache(capacity=2)
+    cache.put("a", 1)
+    cache.put("b", 2)
+    assert cache.get("a") == 1       # refreshes a
+    cache.put("c", 3)                # evicts b (LRU)
+    assert cache.get("b") is None
+    assert cache.get("a") == 1 and cache.get("c") == 3
+    st = cache.stats()
+    assert st["evictions"] == 1 and st["size"] == 2
+    disabled = ResultCache(capacity=0)
+    disabled.put("a", 1)
+    assert disabled.get("a") is None
+    assert disabled.stats()["hits"] == 0 and disabled.stats()["misses"] == 0
+
+
+def test_deadline_expiry_returns_approximate_with_bound():
+    """The paper's early-termination guarantee as a serving feature: a
+    heavy direct edge is found early, the cheap 10-hop path later; an
+    expired deadline returns best-so-far + a valid lower bound."""
+    from repro.graph.structure import build_graph
+    src = [0, 0] + list(range(2, 10)) + [10]
+    dst = [1, 2] + list(range(3, 11)) + [1]
+    w = np.asarray([100.0] + [1.0] * 10, np.float32)
+    g = build_graph(src, dst, 11, w=w)
+    tokens = np.arange(11, dtype=np.int32).reshape(11, 1)
+    engine = QueryEngine.build(g, tokens=tokens)
+    with DKSService(engine, ServeConfig(cache_size=8)) as svc:
+        exact = svc.query([0, 1], k=1)
+        assert not exact.approximate and exact.best_weight == 10.0
+        svc.invalidate_cache()
+        served = svc.query([0, 1], k=1, deadline_ms=0.0)
+        assert served.approximate
+        assert not served.result.done
+        # Valid bracket: lower bound <= optimum <= best-so-far.  The
+        # sound bound is the guaranteed one; the reported bound (paper
+        # convention, SPA estimator) also holds on this graph.
+        assert served.opt_lower_bound is not None
+        assert served.sound_opt_lower_bound is not None
+        assert served.sound_opt_lower_bound <= served.opt_lower_bound
+        assert served.sound_opt_lower_bound <= 10.0 + 1e-6
+        assert served.opt_lower_bound <= 10.0 + 1e-6
+        assert served.result.weights[0] >= 10.0 - 1e-6
+        # The interrupted run reports its forced-stop SPA bound, and is
+        # never presented as certified (ratio 0 only means certified).
+        assert served.result.spa is not None
+        # Approximate results are budget-specific: never cached.
+        assert svc.stats().cache_hits == 0
+        again = svc.query([0, 1], k=1)
+        assert not again.cache_hit and not again.approximate
+        assert again.best_weight == 10.0
+        # A budget generous enough to finish yields the exact answer.
+        done = svc.query([0, 1], k=1, deadline_ms=60_000.0)
+        assert done.cache_hit and not done.approximate
+
+
+def test_streamed_until_bound_monotone_and_forced(engine):
+    """The engine primitive under the deadline path: until= interrupts the
+    stream, bounds never worsen, and the result reports a forced stop."""
+    q = mid_df_tokens(engine.index, 3)
+    updates = []
+    res = engine.query_streamed(
+        q, k=1, extract=False, on_update=updates.append,
+        until=lambda u: u.step >= 1)
+    assert len(updates) == 2 and not res.done
+    assert res.spa is not None
+    ratios = [u.spa_ratio for u in updates]
+    assert all(cur <= prev for prev, cur in zip(ratios, ratios[1:]))
+    bounds = [u.opt_lower_bound for u in updates]
+    assert all(cur >= prev for prev, cur in zip(bounds, bounds[1:]))
+    # Without until= the same call runs to its proven exit.
+    full = engine.query_streamed(q, k=1, extract=False)
+    assert full.done and full.spa is None
+
+
+def test_strict_admission_rejects_unmatched_alone(engine):
+    """An unmatched keyword fails its own future at admission — it must
+    not poison a co-batched dispatch."""
+    good = mid_df_tokens(engine.index, 2)
+    missing = max(engine.index.vocabulary()) + 1000
+    with DKSService(engine, ServeConfig(max_batch=4, max_wait_ms=60.0,
+                                        cache_size=0)) as svc:
+        bad_future = svc.submit([missing, missing + 1], k=1)
+        good_future = svc.submit(good, k=1)
+        with pytest.raises(KeyError, match=str(missing)):
+            bad_future.result(timeout=300)
+        served = good_future.result(timeout=300)
+    np.testing.assert_allclose(served.result.weights,
+                               engine.query(good, k=1).weights)
+
+
+def test_set_engine_inflight_served_by_admitting_build(engine):
+    """A set_engine swap must not change the build mid-flight: queued
+    requests are served by the engine that admitted them, and their
+    results are unreachable to post-swap clients (version-keyed cache)."""
+    g2, tokens2 = lod_like_graph(300, 900, seed=5, vocab=80)
+    engine2 = QueryEngine.build(g2, tokens=tokens2)
+    both = set(engine2.index.vocabulary())
+    q = [t for t in sorted(engine.index.vocabulary(), key=engine.index.df)
+         if engine.index.df(t) >= 2 and t in both][:2]
+    assert len(q) == 2
+    with DKSService(engine, ServeConfig(max_batch=8, max_wait_ms=400.0,
+                                        cache_size=8)) as svc:
+        queued = svc.submit(q, k=1)          # sits in the admission window
+        svc.set_engine(engine2)              # graph rebuild mid-flight
+        served = queued.result(timeout=300)
+        np.testing.assert_allclose(served.result.weights,
+                                   engine.query(q, k=1).weights)
+        # The old build's answer was cached under its version: a
+        # post-swap client cannot hit it.
+        post = svc.query(q, k=1)
+        assert not post.cache_hit
+        np.testing.assert_allclose(post.result.weights,
+                                   engine2.query(q, k=1).weights)
+
+
+def test_default_equal_override_coalesces(engine):
+    """An override equal to the engine policy's value is normalized away
+    at admission, so the request coalesces with no-override requests."""
+    toks = mid_df_tokens(engine.index, 4)
+    with DKSService(engine, ServeConfig(max_batch=2, max_wait_ms=250.0,
+                                        cache_size=0)) as svc:
+        f1 = svc.submit(toks[0:2], k=1)
+        f2 = svc.submit(toks[2:4], k=1, max_supersteps=32)  # policy value
+        r1 = f1.result(timeout=300)
+        r2 = f2.result(timeout=300)
+    assert r1.batch_size == 2 and r2.batch_size == 2
+
+
+def test_unhashable_override_fails_alone(engine):
+    """An unhashable override value fails its own future at admission —
+    it must not reach (and kill) the dispatcher thread."""
+    good = mid_df_tokens(engine.index, 2)
+    with DKSService(engine, ServeConfig(max_wait_ms=1.0,
+                                        cache_size=0)) as svc:
+        bad = svc.submit(good, k=1, max_supersteps=[8])
+        with pytest.raises(TypeError, match="unhashable"):
+            bad.result(timeout=60)
+        # The service is still alive and serving.
+        ok = svc.query(good, k=1)
+    np.testing.assert_allclose(ok.result.weights,
+                               engine.query(good, k=1).weights)
+
+
+def test_loadgen_trace_shapes(engine):
+    trace = make_trace(engine.index, 12, unique=4, deadline_frac=0.25,
+                       deadline_ms=50.0, seed=1)
+    assert len(trace) == 12
+    assert {len(t.keywords) for t in trace} <= {2, 3}
+    assert sum(t.deadline_ms is not None for t in trace) == 3
+    assert len({t.keywords for t in trace}) <= 4
+    # deterministic
+    assert trace == make_trace(engine.index, 12, unique=4,
+                               deadline_frac=0.25, deadline_ms=50.0, seed=1)
+
+
+def test_stopped_service_rejects_submits(engine):
+    svc = DKSService(engine, ServeConfig())
+    with pytest.raises(RuntimeError):
+        svc.submit(mid_df_tokens(engine.index, 2), k=1)
+    svc.start()
+    svc.stop()
+    with pytest.raises(RuntimeError):
+        svc.submit(mid_df_tokens(engine.index, 2), k=1)
