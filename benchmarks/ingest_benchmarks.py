@@ -1,0 +1,99 @@
+"""Graph-store benchmarks: ingestion throughput and artifact open time.
+
+  fig_ingest — the store subsystem's reason to exist, measured:
+  (a) ingest throughput (edges/s) for the synthetic from_graph path and
+      for the streaming TSV reader (dictionary encoding + chunked
+      accumulation + degree weights + CSR);
+  (b) artifact write wall time (atomic npy + manifest + checksums);
+  (c) engine-ready wall time, open-vs-rebuild: mmap-open the artifact and
+      build a QueryEngine versus re-generating the graph and rebuilding
+      from scratch.  The open path must win — that is the asserted
+      acceptance criterion (a serve restart should cost milliseconds of
+      manifest parsing, not a re-ingest) — and one query is checked
+      bit-identical across the two engines while we're there.
+
+``python -m benchmarks.run`` writes the row to
+``experiments/BENCH_ingest.json`` (perf-trajectory file — compare across
+commits like BENCH_dks.json / BENCH_serve.json).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import DKS_CONFIGS
+from repro.engine import ExecutionPolicy, QueryEngine
+from repro.graph.generators import lod_like_graph
+from repro.store import from_graph, ingest_tsv, open_artifact, write_artifact
+from repro.store.ingest import write_tsv
+
+
+def fig_ingest(dataset: str = "sec-rdfabout-cpu") -> dict:
+    ds = DKS_CONFIGS[dataset]
+    policy = ExecutionPolicy(max_supersteps=32)
+
+    with tempfile.TemporaryDirectory(prefix="repro-bench-ingest-") as td:
+        td = Path(td)
+
+        # -- rebuild path: generate + pack + index, engine from scratch --
+        t0 = time.perf_counter()
+        g, tokens = lod_like_graph(ds.n_nodes, ds.n_edges, seed=ds.seed,
+                                   vocab=ds.vocab, tau=ds.tau)
+        engine_mem = QueryEngine.build(g, tokens=tokens, policy=policy)
+        t_rebuild = time.perf_counter() - t0
+
+        # -- ingest (from_graph envelope) + artifact write ---------------
+        t0 = time.perf_counter()
+        result = from_graph(g, tokens=tokens, tau=ds.tau,
+                            edges_requested=ds.n_edges)
+        artifact = write_artifact(td / "artifact", result.graph,
+                                  result.index, tau=ds.tau,
+                                  stats=result.stats.as_dict())
+        t_write = time.perf_counter() - t0
+
+        # -- streaming text path: TSV reader over the same edges ---------
+        tsv = td / "edges.tsv"
+        write_tsv(tsv, g.src, g.dst)
+        t0 = time.perf_counter()
+        tsv_result = ingest_tsv(tsv, tau=ds.tau)
+        t_tsv = time.perf_counter() - t0
+        assert tsv_result.stats.edges_directed == g.n_edges_directed
+
+        # -- open path: mmap artifact -> engine ---------------------------
+        t0 = time.perf_counter()
+        reopened = open_artifact(td / "artifact")
+        engine_art = QueryEngine.build(artifact=reopened, policy=policy)
+        t_open = time.perf_counter() - t0
+
+        # Parity spot-check (the full property test lives in
+        # tests/test_store.py).
+        vocab = sorted(engine_mem.index.vocabulary(),
+                       key=engine_mem.index.df)
+        q = [t for t in vocab if engine_mem.index.df(t) >= 2][:2]
+        np.testing.assert_array_equal(
+            engine_mem.query(q, k=1, extract=False).weights,
+            engine_art.query(q, k=1, extract=False).weights)
+
+        assert t_open < t_rebuild, (
+            f"artifact open ({t_open:.2f}s) not faster than rebuild "
+            f"({t_rebuild:.2f}s) — the store lost its reason to exist")
+
+        return {
+            "dataset": ds.name,
+            "n_nodes": g.n_nodes,
+            "n_edges_directed": g.n_edges_directed,
+            "ingest_write_s": round(t_write, 3),
+            "ingest_write_edges_per_s": round(
+                g.n_edges_directed / t_write, 1),
+            "tsv_stream_s": round(t_tsv, 3),
+            "tsv_stream_edges_per_s": round(
+                g.n_edges_directed / t_tsv, 1),
+            "artifact_mb": round(artifact.nbytes() / 1e6, 2),
+            "engine_ready_open_s": round(t_open, 3),
+            "engine_ready_rebuild_s": round(t_rebuild, 3),
+            "open_speedup": round(t_rebuild / t_open, 2),
+        }

@@ -29,6 +29,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import dks_benchmarks as dks
+    from benchmarks import ingest_benchmarks as ing
     from benchmarks import kernel_benchmarks as kb
     from benchmarks import serve_benchmarks as sv
 
@@ -66,6 +67,7 @@ def main() -> None:
            batch_sizes=(1, 4) if not args.full else (1, 2, 4, 8),
            n_requests=12 if not args.full else 32,
            unique=4 if not args.full else 8)
+    record("fig_ingest", ing.fig_ingest)
 
     print("\nname,us_per_call,derived")
     for bench_fn in (kb.bench_subset_combine, kb.bench_segment_topk,
@@ -86,7 +88,7 @@ def main() -> None:
     # writes it.  BENCH_serve holds a single figure, so it is written
     # whenever that figure ran in full.
     dks_figs = {k: v for k, v in fig_wall_s.items()
-                if k != "fig_serve_throughput"}
+                if k not in ("fig_serve_throughput", "fig_ingest")}
     if dks_figs and args.only is None:
         bench_dks = {
             "jax": jax.__version__,
@@ -108,6 +110,17 @@ def main() -> None:
         (OUT / "BENCH_serve.json").write_text(
             json.dumps(bench_serve, indent=1))
         print(f"wrote {OUT / 'BENCH_serve.json'}")
+    if "fig_ingest" in results:
+        bench_ingest = {
+            "jax": jax.__version__,
+            "n_devices": len(jax.devices()),
+            "full": bool(args.full),
+            "wall_s": fig_wall_s.get("fig_ingest"),
+            "ingest": results["fig_ingest"],
+        }
+        (OUT / "BENCH_ingest.json").write_text(
+            json.dumps(bench_ingest, indent=1))
+        print(f"wrote {OUT / 'BENCH_ingest.json'}")
 
 
 if __name__ == "__main__":

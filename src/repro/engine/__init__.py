@@ -8,6 +8,10 @@ answers with approximation bounds.
     for tree in result.answers:
         print(tree.weight, tree.root, tree.edges)
 
+    # or from a persisted repro.store artifact (mmap, no re-tokenizing;
+    # the artifact content hash keys version/cache_token):
+    engine = QueryEngine.build(artifact="artifacts/sec-rdfabout")
+
 Public API:
   QueryEngine      — owns graph device residency, the inverted index, and
                      the compiled-executable cache; query / query_batch /

@@ -36,6 +36,7 @@ import dataclasses
 import functools
 import itertools
 import time
+from pathlib import Path
 from typing import Any, Callable, Iterator, Sequence
 
 import jax
@@ -80,7 +81,10 @@ class QueryEngine:
 
     # Monotone build ids: every built engine gets a fresh ``version``, so
     # result caches keyed on cache_token() can never serve answers computed
-    # against a previous graph build.
+    # against a previous graph build.  Engines built from a persisted
+    # artifact use the artifact's content hash instead — stable across
+    # rebuilds of the SAME artifact (a serve restart keeps its cache
+    # keys), necessarily different for any other graph content.
     _build_counter = itertools.count(1)
 
     def __init__(
@@ -90,13 +94,17 @@ class QueryEngine:
         policy: ExecutionPolicy,
         device_graph: Any,
         mesh: Any = None,
+        graph_hash: str | None = None,
     ) -> None:
         self.graph = graph
         self.index = index
         self.policy = policy
         self.device_graph = device_graph
         self.mesh = mesh  # set for partition="sharded"; None otherwise
-        self.version = next(QueryEngine._build_counter)
+        self.graph_hash = graph_hash
+        self.version: int | str = (
+            f"artifact:{graph_hash}" if graph_hash is not None
+            else next(QueryEngine._build_counter))
         self._e_min = float(device_graph.e_min())
         # Compiled-executable cache: (DKSConfig, partition, kind) -> callable.
         self._executables: dict[tuple, Any] = {}
@@ -110,18 +118,42 @@ class QueryEngine:
     @classmethod
     def build(
         cls,
-        graph: Graph,
+        graph: Graph | None = None,
         tokens: np.ndarray | None = None,
         index: InvertedIndex | None = None,
         policy: ExecutionPolicy | None = None,
+        artifact: Any = None,
     ) -> "QueryEngine":
         """Build an engine: inverted index + device-resident graph.
 
-        Exactly one of ``tokens`` (int[V, L] token matrix) or ``index`` must
-        be provided, unless ``graph.labels`` is set (then the index is built
-        from the labels).
+        Two entry modes:
+
+        - ``graph=`` plus exactly one of ``tokens`` (int[V, L] token
+          matrix) or ``index`` — or neither, when ``graph.labels`` is set
+          (then the index is built from the labels);
+        - ``artifact=`` — a :class:`repro.store.GraphArtifact` (or a path
+          to one): graph, dst-sorted device layout, and the persisted
+          inverted index all come straight off the mmapped buffers — no
+          re-tokenizing, no edge re-sort — and the artifact's
+          ``content_hash`` becomes the engine ``version`` (so
+          ``cache_token`` keys are stable across rebuilds of the same
+          artifact and distinct for any other graph).
         """
         policy = policy or ExecutionPolicy()
+        graph_hash = None
+        if artifact is not None:
+            if graph is not None or tokens is not None or index is not None:
+                raise ValueError(
+                    "pass artifact= alone — it already carries the graph "
+                    "and the persisted index")
+            if isinstance(artifact, (str, Path)):
+                from repro.store import open_artifact
+                artifact = open_artifact(artifact)
+            graph = artifact.graph()
+            index = artifact.index()
+            graph_hash = artifact.content_hash
+        if graph is None:
+            raise ValueError("QueryEngine.build needs graph= or artifact=")
         if index is not None and tokens is not None:
             raise ValueError(
                 "pass either tokens= or index=, not both (the tokens would "
@@ -142,7 +174,8 @@ class QueryEngine:
             device_graph = pack_frontier_graph(graph, n_shards, mesh=mesh)
         else:
             device_graph = graph.to_device()
-        return cls(graph, index, policy, device_graph, mesh=mesh)
+        return cls(graph, index, policy, device_graph, mesh=mesh,
+                   graph_hash=graph_hash)
 
     # ------------------------------------------------------------------
     # Introspection
@@ -196,7 +229,10 @@ class QueryEngine:
         and folds in everything else that determines the answer: ``k``, the
         effective :class:`ExecutionPolicy` including per-call overrides,
         and the engine build ``version`` (a rebuilt graph gets a fresh
-        version, so stale cached results can never be served).
+        version, so stale cached results can never be served).  For an
+        artifact-built engine the version IS the artifact's content hash:
+        rebuilding from the same artifact keys the same (caches survive a
+        restart), any other graph content keys differently.
         """
         norm = tuple(sorted((type(t).__name__, t) for t in keywords))
         policy = self.policy

@@ -20,23 +20,48 @@ def rmat_edges(
     n_edges: int,
     seed: int = 0,
     a: float = 0.57, b: float = 0.19, c: float = 0.19,
+    max_resample_rounds: int = 16,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """R-MAT power-law edge generator (Chakrabarti et al., SDM'04)."""
+    """R-MAT power-law edge generator (Chakrabarti et al., SDM'04).
+
+    Self-loops are rejected and their slots *resampled* (each of up to
+    ``max_resample_rounds`` rounds draws 2x the remaining deficit, so the
+    deficit shrinks super-geometrically even at high per-draw self-loop
+    probability), so the result carries exactly ``n_edges`` edges instead
+    of silently undershooting the requested size the way a filter-only
+    implementation does.  Deterministic for a given seed (the resample
+    draws continue the same rng stream).  Only pathological configs
+    (``n_nodes == 1``, where every edge is a self-loop) come up short
+    after the bounded retries — callers that care should check the length
+    (ingestion stats report requested vs produced).
+    """
     rng = np.random.default_rng(seed)
     scale = int(np.ceil(np.log2(max(n_nodes, 2))))
-    src = np.zeros(n_edges, np.int64)
-    dst = np.zeros(n_edges, np.int64)
-    for level in range(scale):
-        r = rng.random(n_edges)
-        # Quadrant probabilities a, b, c, d.
-        go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
-        go_down = r >= a + b
-        src = src * 2 + go_down.astype(np.int64)
-        dst = dst * 2 + go_right.astype(np.int64)
-    src = src % n_nodes
-    dst = dst % n_nodes
-    keep = src != dst
-    return src[keep].astype(np.int32), dst[keep].astype(np.int32)
+
+    def draw(n: int) -> tuple[np.ndarray, np.ndarray]:
+        src = np.zeros(n, np.int64)
+        dst = np.zeros(n, np.int64)
+        for _level in range(scale):
+            r = rng.random(n)
+            # Quadrant probabilities a, b, c, d.
+            go_right = (r >= a) & (r < a + b) | (r >= a + b + c)
+            go_down = r >= a + b
+            src = src * 2 + go_down.astype(np.int64)
+            dst = dst * 2 + go_right.astype(np.int64)
+        src %= n_nodes
+        dst %= n_nodes
+        keep = src != dst
+        return src[keep], dst[keep]
+
+    src, dst = draw(n_edges)
+    for _round in range(max_resample_rounds):
+        deficit = n_edges - len(src)
+        if deficit == 0:
+            break
+        s2, d2 = draw(max(2 * deficit, 64))
+        src = np.concatenate([src, s2[:deficit]])
+        dst = np.concatenate([dst, d2[:deficit]])
+    return src.astype(np.int32), dst.astype(np.int32)
 
 
 def lod_like_graph(

@@ -10,6 +10,17 @@ from __future__ import annotations
 import numpy as np
 
 
+def mid_df_tokens(index: "InvertedIndex", lo: int = 2,
+                  hi: int = 200) -> list:
+    """df-sorted vocabulary slice with ``lo <= df <= hi`` — the pool the
+    CLIs auto-pick query keywords from (paper Sec. 7.1 samples across the
+    df spectrum).  Falls back to the full df-sorted vocabulary when the
+    band is empty, so tiny test graphs still yield queries."""
+    vocab = sorted(index.vocabulary(), key=index.df)
+    mid = [t for t in vocab if lo <= index.df(t) <= hi]
+    return mid or vocab
+
+
 class InvertedIndex:
     def __init__(self) -> None:
         self._post: dict[object, list[int]] = {}
@@ -88,3 +99,42 @@ class InvertedIndex:
 
     def df(self, token) -> int:
         return len(self.lookup(token))
+
+    # ------------------------------------------------------------------
+    # Persistence (repro.store artifact hooks)
+    # ------------------------------------------------------------------
+
+    def to_postings(self) -> tuple[list, np.ndarray, np.ndarray]:
+        """Frozen postings as flat arrays: ``(tokens, offsets, nodes)``.
+
+        ``tokens`` is the vocabulary in deterministic (sorted) order;
+        token ``i``'s posting list is ``nodes[offsets[i]:offsets[i+1]]``
+        (int32 node ids, sorted unique).  This is the layout
+        :mod:`repro.store` persists — and the one :meth:`from_postings`
+        rebuilds from without re-tokenizing anything.
+        """
+        tokens = sorted(self._frozen)
+        offsets = np.zeros(len(tokens) + 1, np.int64)
+        for i, tok in enumerate(tokens):
+            offsets[i + 1] = offsets[i] + len(self._frozen[tok])
+        nodes = (np.concatenate([self._frozen[t] for t in tokens])
+                 if tokens else np.zeros(0, np.int32))
+        return tokens, offsets, nodes.astype(np.int32, copy=False)
+
+    @classmethod
+    def from_postings(cls, tokens: list, offsets: np.ndarray,
+                      nodes: np.ndarray) -> "InvertedIndex":
+        """Rebuild an index from :meth:`to_postings` arrays.
+
+        Posting lists are *views* into ``nodes`` — with a memory-mapped
+        ``nodes`` the postings stay on disk until a token is looked up
+        (zero-copy open; see :mod:`repro.store.artifact`).
+        """
+        if len(offsets) != len(tokens) + 1:
+            raise ValueError(
+                f"offsets length {len(offsets)} != n_tokens+1 "
+                f"({len(tokens) + 1})")
+        idx = cls()
+        for i, tok in enumerate(tokens):
+            idx._frozen[tok] = nodes[offsets[i]:offsets[i + 1]]
+        return idx

@@ -77,6 +77,11 @@ class Graph:
     indices: np.ndarray
     ew: np.ndarray
     labels: list[str] | None = None
+    # Optional dst-sorted symmetric edge list (src, dst, w) — the exact
+    # device layout.  Set by the repro.store artifact loader (mmap views;
+    # to_device then skips the argsort); None on in-memory graphs, where
+    # retaining a second edge-list copy would cost real host memory.
+    sym_sorted: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
 
     @property
     def n_edges_directed(self) -> int:
@@ -90,6 +95,29 @@ class Graph:
         s, e = self.indptr[v], self.indptr[v + 1]
         return self.indices[s:e], self.ew[s:e]
 
+    def sym_sorted_edges(
+        self, cache: bool = False,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Dst-sorted symmetric edge list ``(src, dst, w)`` — the device
+        layout (and the layout :mod:`repro.store` persists).
+
+        ``cache=True`` retains the triple on ``sym_sorted`` — three extra
+        E_sym-length host arrays, so only the artifact writer (which is
+        about to persist them anyway) opts in; ``to_device`` computes
+        transiently unless the loader already populated ``sym_sorted``
+        with mmap views (then it is reused for free)."""
+        if self.sym_sorted is not None:
+            return self.sym_sorted
+        deg = np.diff(self.indptr)
+        src = np.repeat(np.arange(self.n_nodes, dtype=np.int32), deg)
+        dst = self.indices.astype(np.int32)
+        w = self.ew.astype(np.float32)
+        order = np.argsort(dst, kind="stable")
+        triple = (src[order], dst[order], w[order])
+        if cache:
+            self.sym_sorted = triple
+        return triple
+
     def to_device(
         self,
         pad_nodes_to: int | None = None,
@@ -97,13 +125,11 @@ class Graph:
     ) -> DeviceGraph:
         """Build the padded, dst-sorted device edge list."""
         v = self.n_nodes
-        # Symmetrized edge list from CSR: (u -> indices[j]).
         deg = np.diff(self.indptr)
-        src = np.repeat(np.arange(v, dtype=np.int32), deg)
-        dst = self.indices.astype(np.int32)
-        w = self.ew.astype(np.float32)
-        order = np.argsort(dst, kind="stable")
-        src, dst, w = src[order], dst[order], w[order]
+        src, dst, w = self.sym_sorted_edges()
+        src = src.astype(np.int32, copy=False)
+        dst = dst.astype(np.int32, copy=False)
+        w = w.astype(np.float32, copy=False)
 
         e = len(src)
         v_pad = pad_nodes_to or v

@@ -20,7 +20,7 @@ from repro import INF
 from repro.configs import DKS_CONFIGS
 from repro.engine import ExecutionPolicy, QueryEngine
 from repro.graph.generators import lod_like_graph
-from repro.graph.index import InvertedIndex
+from repro.graph.index import InvertedIndex, mid_df_tokens
 
 
 def load_dataset(name: str):
@@ -31,8 +31,19 @@ def load_dataset(name: str):
     return ds, g, index
 
 
-def build_engine(name: str, policy: ExecutionPolicy | None = None):
-    """Dataset name -> (dataset config, ready QueryEngine)."""
+def build_engine(name: str, policy: ExecutionPolicy | None = None,
+                 artifact: str | None = None):
+    """Dataset name (or artifact path) -> (dataset config, ready engine).
+
+    ``artifact``: path to a ``repro.store`` artifact — the graph and the
+    persisted index mmap-load straight into the engine (seconds, no
+    re-generation); ``name`` is then only used for the printed config.
+    """
+    if artifact is not None:
+        from repro.store import open_artifact
+        art = open_artifact(artifact)
+        ds = DKS_CONFIGS.get(name)
+        return ds, QueryEngine.build(artifact=art, policy=policy)
     ds, g, index = load_dataset(name)
     return ds, QueryEngine.build(g, index=index, policy=policy)
 
@@ -41,6 +52,11 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sec-rdfabout-cpu",
                     choices=sorted(DKS_CONFIGS))
+    ap.add_argument("--artifact", default=None,
+                    help="path to a repro.store artifact: mmap-load the "
+                         "graph + persisted index instead of generating "
+                         "--dataset (python -m repro.launch.ingest writes "
+                         "one)")
     ap.add_argument("--query", default=None,
                     help="comma-separated token ids (default: auto-pick)")
     ap.add_argument("--m", type=int, default=3,
@@ -67,16 +83,29 @@ def main() -> int:
         max_supersteps=args.max_supersteps,
         message_budget=args.message_budget,
     )
-    ds, engine = build_engine(args.dataset, policy)
-    print(f"loaded {ds.name}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
+    ds, engine = build_engine(args.dataset, policy,
+                              artifact=args.artifact)
+    source = args.artifact if args.artifact else ds.name
+    print(f"loaded {source}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
           f"({time.time()-t0:.1f}s)")
 
     index = engine.index
     if args.query:
-        query = [int(t) for t in args.query.split(",")]
+        def parse_token(t: str):
+            # Int ids for synthetic token-matrix vocabularies; fall back
+            # to the literal string when only it is in the vocabulary
+            # (ingested dumps index label text — including numeric
+            # strings like SNAP node ids or year literals).
+            if t.lstrip("-").isdigit():
+                ti = int(t)
+                if index.df(ti) == 0 and index.df(t) > 0:
+                    return t
+                return ti
+            return t
+
+        query = [parse_token(t) for t in args.query.split(",")]
     else:
-        vocab = sorted(index.vocabulary(), key=index.df)
-        mid = [t for t in vocab if 3 <= index.df(t) <= 200]
+        mid = mid_df_tokens(index)
         query = mid[:: max(1, len(mid) // args.m)][: args.m]
     print("query tokens:", query, "df:", [index.df(t) for t in query])
 

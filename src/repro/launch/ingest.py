@@ -1,0 +1,191 @@
+"""Ingestion CLI: generate-or-read -> stream-ingest -> write artifact ->
+mmap reopen -> verify roundtrip query parity.
+
+    # synthetic LOD stand-in -> artifact
+    python -m repro.launch.ingest --dataset sec-rdfabout-cpu \
+        --out artifacts/sec-rdfabout-cpu
+
+    # real dumps (N-Triples or TSV edge list, .gz transparently)
+    python -m repro.launch.ingest --input dump.nt.gz \
+        --out artifacts/dump
+
+    # CI smoke: tiny graph, temp dir, hard asserts on parity + checksums
+    python -m repro.launch.ingest --smoke
+
+The verification pass builds TWO engines — one from the reopened mmapped
+artifact, one from the in-memory graph — and asserts bit-identical query
+weights/supersteps on auto-picked queries: the artifact roundtrip must be
+invisible to the engine.  The written artifact is then the input for
+``python -m repro.launch.dks_query --artifact ...`` and
+``python -m repro.launch.serve_dks --artifact ...``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import DKS_CONFIGS
+from repro.engine import ExecutionPolicy, QueryEngine
+from repro.graph.generators import lod_like_graph
+from repro.graph.index import mid_df_tokens
+from repro.store import (
+    from_graph,
+    ingest_ntriples,
+    ingest_tsv,
+    open_artifact,
+    write_artifact,
+)
+
+
+def pick_queries(index, n: int = 3, ms: tuple = (2, 3)) -> list[list]:
+    """Auto-pick verification queries from the shared mid-df pool
+    (:func:`repro.graph.index.mid_df_tokens` — the same pool the query
+    CLI auto-picks from)."""
+    mid = mid_df_tokens(index)
+    queries = []
+    for i in range(n):
+        m = ms[i % len(ms)]
+        step = max(1, len(mid) // (m * (i + 2)))
+        q = mid[i::step][:m]
+        if len(q) == m:
+            queries.append(q)
+    return queries
+
+
+def verify_roundtrip(result, artifact, *, n_queries: int = 3,
+                     max_supersteps: int = 16,
+                     partition: str = "single") -> int:
+    """Assert mmap-loaded artifact queries == in-memory build queries,
+    bit-identical.  Returns the number of queries checked."""
+    policy = ExecutionPolicy(max_supersteps=max_supersteps,
+                             partition=partition,
+                             n_shards=1 if partition == "sharded" else None)
+    e_mem = QueryEngine.build(result.graph, index=result.index,
+                              policy=policy)
+    e_art = QueryEngine.build(artifact=artifact, policy=policy)
+    assert e_art.graph_hash == artifact.content_hash
+    queries = pick_queries(e_mem.index, n=n_queries)
+    assert queries, "no usable verification queries in the vocabulary"
+    for q in queries:
+        r_mem = e_mem.query(q, k=2, extract=False)
+        r_art = e_art.query(q, k=2, extract=False)
+        np.testing.assert_array_equal(
+            r_mem.weights, r_art.weights,
+            err_msg=f"artifact parity broke for query {q!r}")
+        assert r_mem.supersteps == r_art.supersteps, q
+        assert r_mem.spa == r_art.spa and r_mem.spa_ratio == r_art.spa_ratio
+    return len(queries)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--dataset", default=None,
+                     choices=sorted(DKS_CONFIGS),
+                     help="synthetic LOD stand-in to generate+ingest "
+                          "(default: sec-rdfabout-cpu)")
+    src.add_argument("--input", default=None,
+                     help="path to an N-Triples or TSV dump (.gz ok)")
+    ap.add_argument("--format", default="auto",
+                    choices=["auto", "ntriples", "tsv"],
+                    help="--input format; auto sniffs the suffix")
+    ap.add_argument("--out", default=None,
+                    help="artifact directory to write (default: "
+                         "experiments/artifacts/<name>)")
+    ap.add_argument("--tau", type=int, default=1001,
+                    help="hub cutoff for the degree weight model")
+    ap.add_argument("--chunk-edges", type=int, default=1 << 20)
+    ap.add_argument("--overwrite", action="store_true")
+    ap.add_argument("--verify-queries", type=int, default=3,
+                    help="roundtrip parity queries (0 skips verification)")
+    ap.add_argument("--max-supersteps", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: tiny synthetic graph into a temp "
+                         "dir, full-checksum reopen, hard parity asserts")
+    args = ap.parse_args()
+
+    tmp_ctx = None
+    if args.smoke:
+        tmp_ctx = tempfile.TemporaryDirectory(prefix="repro-ingest-smoke-")
+        if args.out is None:
+            args.out = str(Path(tmp_ctx.name) / "artifact")
+
+    # ---- generate-or-read -> ingest ---------------------------------
+    t0 = time.perf_counter()
+    if args.input is not None:
+        fmt = args.format
+        if fmt == "auto":
+            stem = args.input[:-3] if args.input.endswith(".gz") else \
+                args.input
+            fmt = "ntriples" if stem.endswith((".nt", ".ntriples")) else \
+                "tsv"
+        reader = ingest_ntriples if fmt == "ntriples" else ingest_tsv
+        result = reader(args.input, tau=args.tau,
+                        chunk_edges=args.chunk_edges)
+        name = Path(args.input).name.split(".")[0]
+    else:
+        if args.smoke:
+            n_nodes, n_edges, vocab, seed = 1500, 4500, 200, 11
+            name = "smoke"
+        else:
+            ds = DKS_CONFIGS[args.dataset or "sec-rdfabout-cpu"]
+            n_nodes, n_edges, vocab, seed = (ds.n_nodes, ds.n_edges,
+                                             ds.vocab, ds.seed)
+            name = ds.name
+        g, tokens = lod_like_graph(n_nodes, n_edges, seed=seed,
+                                   vocab=vocab, tau=args.tau)
+        result = from_graph(g, tokens=tokens, tau=args.tau,
+                            edges_requested=n_edges,
+                            source=f"synthetic:{name}")
+        result.stats.ingest_s = time.perf_counter() - t0
+    st = result.stats
+    print(f"ingested {st.source}: V={st.n_nodes:,} "
+          f"E={st.edges_directed:,} directed "
+          f"({st.edges_per_s:,.0f} edges/s"
+          f"{f', {st.malformed_lines} malformed' if st.malformed_lines else ''}"
+          f"{f', {st.self_loops_dropped} self-loops dropped' if st.self_loops_dropped else ''})")
+    if st.edges_requested is not None:
+        print(f"  requested {st.edges_requested:,} edges, produced "
+              f"{st.edges_directed:,} (true counts)")
+
+    # ---- write artifact (atomic) -------------------------------------
+    out = Path(args.out or (Path("experiments") / "artifacts" / name))
+    t0 = time.perf_counter()
+    artifact = write_artifact(out, result.graph, result.index,
+                              tau=result.tau, stats=st.as_dict(),
+                              overwrite=args.overwrite or args.smoke)
+    t_write = time.perf_counter() - t0
+    print(f"wrote {artifact} ({artifact.nbytes()/1e6:.1f} MB buffers, "
+          f"{t_write:.2f}s)")
+
+    # ---- reopen (mmap) + verify --------------------------------------
+    t0 = time.perf_counter()
+    reopened = open_artifact(out, verify="full" if args.smoke else "meta")
+    t_open = time.perf_counter() - t0
+    print(f"reopened with mmap in {t_open*1e3:.0f} ms "
+          f"(content hash {reopened.content_hash[:12]}…)")
+
+    if args.verify_queries > 0:
+        n = verify_roundtrip(result, reopened,
+                             n_queries=args.verify_queries,
+                             max_supersteps=args.max_supersteps)
+        print(f"verified: {n} queries bit-identical between the mmapped "
+              f"artifact engine and the in-memory build")
+
+    if args.smoke:
+        assert st.edges_requested is None or st.edges_directed == \
+            st.edges_requested, "generator undershot the requested edges"
+        assert reopened.content_hash == artifact.content_hash
+        print("ingest smoke invariants hold: checksum-verified reopen, "
+              "query parity, true edge counts")
+        tmp_ctx.cleanup()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

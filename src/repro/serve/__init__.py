@@ -13,8 +13,10 @@ the ROADMAP's heavy-traffic north star):
 Public API:
   DKSService    — admission + dynamic micro-batching (shape-bucketed
                   through the engine's vmapped executors), LRU result
-                  cache, and deadline-bounded best-so-far answers with
-                  SPA lower bounds (paper Sec. 5.4 as a serving feature).
+                  cache, cross-request single-flight (concurrent
+                  identical misses execute once), and deadline-bounded
+                  best-so-far answers with SPA lower bounds (paper
+                  Sec. 5.4 as a serving feature).
   ServeConfig   — max_batch / max_wait_ms / cache_size / padding knobs.
   ServedResult  — QueryResult + cache_hit / approximate / opt_lower_bound
                   / batch_size / latency_ms.

@@ -12,6 +12,10 @@ the engine into that service:
 - **a result cache** — LRU keyed on the engine's normalized cache token
   (keyword multiset + ``(k, policy)`` + engine build version), with
   hit/miss/eviction stats and explicit invalidation on graph rebuild;
+- **cross-request single-flight** — a cache miss identical to a request
+  already executing (same cache token) attaches to the in-flight future
+  instead of dispatching again: N concurrent identical misses cost one
+  device execution (``ServedResult.coalesced`` marks the attached ones);
 - **deadline-bounded answers** — a per-request latency budget routes the
   query through the streaming executor and returns the best-so-far
   answers *with* their SPA lower bound and ``approximate=True`` when the
@@ -33,9 +37,10 @@ threads only touch the cache, the admission queue, and their futures.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from concurrent.futures import Future
-from typing import Sequence
+from concurrent.futures import CancelledError, Future
+from typing import Hashable, Sequence
 
 from repro.engine import QueryEngine, QueryResult
 from repro.serve.batcher import MicroBatcher, Request
@@ -102,6 +107,9 @@ class ServedResult:
                    best-so-far weights/answers, ``done=False``, and the
                    forced-stop SPA bound on ``result.spa``).
       cache_hit:   served from the result cache (no device work).
+      coalesced:   served by attaching to an identical request already in
+                   flight (cross-request single-flight — no device work;
+                   ``batch_size`` is the leader dispatch's).
       approximate: the deadline expired before the run's exit criterion —
                    the answer is best-so-far, bounded below by
                    ``opt_lower_bound`` (the paper's early-termination
@@ -127,6 +135,7 @@ class ServedResult:
     latency_ms: float
     opt_lower_bound: float | None = None
     sound_opt_lower_bound: float | None = None
+    coalesced: bool = False
 
     @property
     def weights(self):
@@ -158,6 +167,15 @@ class DKSService:
         self._batcher = MicroBatcher(
             self._dispatch, max_batch=self.config.max_batch,
             max_wait_ms=self.config.max_wait_ms)
+        # Cross-request single-flight: cache_token -> follower list of an
+        # identical request currently in flight.  A second identical miss
+        # attaches here instead of executing again; the leader's done
+        # callback fans its result out (and by then the leader's result
+        # is already in the ResultCache, so there is no window where an
+        # identical request re-executes).  Deadline requests never
+        # participate — a best-so-far answer is budget-specific.
+        self._inflight: dict[Hashable, list[tuple[Future, float]]] = {}
+        self._inflight_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -192,6 +210,12 @@ class DKSService:
         Deadline-less requests run to their exit criterion.
         ``overrides``: per-call policy overrides, forwarded to the engine
         (they key both the result cache and the shape bucket).
+
+        Identical concurrent misses are single-flighted: the first one
+        executes, later ones attach to its in-flight future and resolve
+        from its result (``coalesced=True``) — including its failure, if
+        it fails.  Deadline-bounded requests are exempt (their best-so-far
+        answers are budget-specific, like the cache exemption).
         """
         t_submit = time.perf_counter()
         keywords = tuple(keywords)
@@ -240,19 +264,57 @@ class DKSService:
             return future
         hit = self._cache.get(cache_key, count_miss=False)
         if hit is not None:
-            t_done = time.perf_counter()
-            self._stats.record_request(t_submit, t_done)
-            future.set_result(ServedResult(
-                result=hit, cache_hit=True, approximate=False,
-                batch_size=0, latency_ms=(t_done - t_submit) * 1e3))
+            self._resolve_cache_hit(future, hit, t_submit)
             return future
-        self._batcher.submit(Request(
-            keywords=keywords, k=k,
-            overrides=tuple(sorted(overrides.items())),
-            future=future, t_submit=t_submit, engine=engine,
-            deadline_t=(t_submit + deadline_ms / 1e3
-                        if deadline_ms is not None else None),
-            cache_key=cache_key))
+        single_flight = deadline_ms is None
+        if single_flight:
+            # Cross-request single-flight: an identical request is already
+            # executing (same cache_token, so same engine build / k /
+            # effective policy) — attach to its result instead of
+            # dispatching a second run.  The follower resolves from the
+            # leader's ServedResult with ``coalesced=True``; if the leader
+            # fails or is cancelled, followers inherit that outcome.
+            with self._inflight_lock:
+                followers = self._inflight.get(cache_key)
+                if followers is not None:
+                    followers.append((future, t_submit))
+                    return future
+                self._inflight[cache_key] = []
+            # Leadership won — but the PREVIOUS leader may have resolved
+            # between our cache check and the registration above (its
+            # result cached, its inflight entry popped).  Re-check the
+            # cache so a just-finished run is served instead of
+            # re-executed; any follower that raced onto our short-lived
+            # entry is served from the same hit.
+            hit = self._cache.get(cache_key, count_miss=False)
+            if hit is not None:
+                with self._inflight_lock:
+                    followers = self._inflight.pop(cache_key, [])
+                self._resolve_cache_hit(future, hit, t_submit)
+                for fut, t_sub in followers:
+                    if fut.set_running_or_notify_cancel():
+                        self._resolve_cache_hit(fut, hit, t_sub)
+                return future
+        try:
+            self._batcher.submit(Request(
+                keywords=keywords, k=k,
+                overrides=tuple(sorted(overrides.items())),
+                future=future, t_submit=t_submit, engine=engine,
+                deadline_t=(t_submit + deadline_ms / 1e3
+                            if deadline_ms is not None else None),
+                cache_key=cache_key))
+        except BaseException as exc:
+            if single_flight:
+                self._abort_single_flight(cache_key, exc)
+            raise
+        if single_flight:
+            # The callback runs when the dispatcher resolves the leader —
+            # by then the result already sits in the ResultCache (put
+            # happens before set_result), so an identical submit landing
+            # after the pop is caught by the cache (the leadership
+            # re-check above closes the remaining pre-put window).
+            future.add_done_callback(
+                lambda fut: self._finish_single_flight(cache_key, fut))
         self._cache.count_miss()
         return future
 
@@ -263,6 +325,55 @@ class DKSService:
         return self.submit(keywords, k,
                            deadline_ms=deadline_ms, **overrides
                            ).result(timeout)
+
+    def _resolve_cache_hit(self, future: Future, hit: QueryResult,
+                           t_submit: float) -> None:
+        """Resolve one future from a cached result (stats recorded)."""
+        t_done = time.perf_counter()
+        self._stats.record_request(t_submit, t_done)
+        future.set_result(ServedResult(
+            result=hit, cache_hit=True, approximate=False,
+            batch_size=0, latency_ms=(t_done - t_submit) * 1e3))
+
+    # ------------------------------------------------------------------
+    # Single-flight bookkeeping
+    # ------------------------------------------------------------------
+
+    def _finish_single_flight(self, cache_key: Hashable,
+                              leader: "Future[ServedResult]") -> None:
+        """Leader resolved: fan its outcome out to attached followers."""
+        with self._inflight_lock:
+            followers = self._inflight.pop(cache_key, None)
+        if not followers:
+            return
+        exc: BaseException | None
+        if leader.cancelled():
+            exc = CancelledError()
+        else:
+            exc = leader.exception()
+        for fut, t_sub in followers:
+            if not fut.set_running_or_notify_cancel():
+                continue
+            if exc is not None:
+                self._stats.record_failure(1)
+                fut.set_exception(exc)
+                continue
+            t_done = time.perf_counter()
+            self._stats.record_request(t_sub, t_done)
+            self._stats.record_single_flight()
+            fut.set_result(dataclasses.replace(
+                leader.result(), coalesced=True,
+                latency_ms=(t_done - t_sub) * 1e3))
+
+    def _abort_single_flight(self, cache_key: Hashable,
+                             exc: BaseException) -> None:
+        """Leader never reached the batcher: fail any follower that raced
+        in and free the key."""
+        with self._inflight_lock:
+            followers = self._inflight.pop(cache_key, None)
+        for fut, _t_sub in followers or ():
+            if fut.set_running_or_notify_cancel():
+                fut.set_exception(exc)
 
     # ------------------------------------------------------------------
     # Cache control / introspection

@@ -42,6 +42,10 @@ class ServeStats:
                        batcher is amortizing dispatch across clients).
       cache_hits / cache_misses / cache_evictions / cache_hit_rate:
                        result-cache counters (hit rate over hits+misses).
+      single_flight_hits: requests that attached to an identical request
+                       already in flight (cross-request single-flight) —
+                       served from the leader's result, no device work,
+                       not counted in the cache counters.
       approximate:     requests answered best-so-far under a deadline.
       p50_ms / p95_ms / mean_ms / max_ms: end-to-end latency percentiles
                        over the last ``LATENCY_WINDOW`` requests (exact
@@ -60,6 +64,7 @@ class ServeStats:
     cache_misses: int
     cache_evictions: int
     cache_hit_rate: float
+    single_flight_hits: int
     approximate: int
     p50_ms: float
     p95_ms: float
@@ -85,6 +90,7 @@ class ServeStats:
             f" misses={self.cache_misses}"
             f" evictions={self.cache_evictions}"
             f" hit-rate={self.cache_hit_rate:.2f}"
+            f" single-flight={self.single_flight_hits}"
         )
 
 
@@ -107,6 +113,7 @@ class StatsCollector:
         self._batch_dispatches = 0
         self._deadline_dispatches = 0
         self._batched_requests = 0
+        self._single_flight = 0
 
     def record_request(self, t_submit: float, t_done: float,
                        approximate: bool = False) -> None:
@@ -126,6 +133,12 @@ class StatsCollector:
     def record_failure(self, n_requests: int) -> None:
         with self._lock:
             self._failures += n_requests
+
+    def record_single_flight(self) -> None:
+        """One request served by attaching to an in-flight identical
+        request (call alongside record_request for that request)."""
+        with self._lock:
+            self._single_flight += 1
 
     def record_dispatch(self, n_requests: int, deadline: bool) -> None:
         with self._lock:
@@ -157,6 +170,7 @@ class StatsCollector:
                 cache_misses=misses,
                 cache_evictions=cache_stats.get("evictions", 0),
                 cache_hit_rate=hits / looked if looked else 0.0,
+                single_flight_hits=self._single_flight,
                 approximate=self._approximate,
                 p50_ms=float(np.percentile(lat, 50)) if n else 0.0,
                 p95_ms=float(np.percentile(lat, 95)) if n else 0.0,

@@ -1,0 +1,54 @@
+"""repro.store — graph store & ingestion: stream LOD dumps into versioned
+on-disk artifacts, mmap-load them into the engine.
+
+The paper's workloads are real RDF dumps; an engine that re-generates and
+re-packs its graph on every process start cannot serve them.  This
+subsystem splits the lifecycle:
+
+    ingest (once, streaming, bounded memory)
+        result = ingest_ntriples("dump.nt.gz")          # or ingest_tsv,
+        # or from_graph(g, tokens=...) for synthetic graphs
+        art = write_artifact("artifacts/dump", result.graph, result.index,
+                             tau=result.tau, stats=result.stats.as_dict())
+
+    open (every serve start, milliseconds)
+        art = open_artifact("artifacts/dump")           # mmap, zero-copy
+        engine = QueryEngine.build(artifact=art)        # no re-tokenizing
+
+Artifacts are versioned (format_version + magic), checksummed (sha256 per
+buffer, ``verify="full"`` re-checks), written atomically, and carry a
+``content_hash`` that :class:`~repro.engine.QueryEngine` folds into its
+``version``/``cache_token`` — a serving result cache can never cross two
+different graph builds.
+
+Public API:
+  ingest_ntriples / ingest_tsv — streaming readers (dictionary-encoded
+                  entities, chunked edge accumulation, degree weights at
+                  finalization).
+  from_graph    — the synthetic-graph path into the same envelope.
+  StreamIngestor / IngestResult / IngestStats — the pieces behind them.
+  write_artifact / open_artifact / GraphArtifact — the on-disk format.
+  ArtifactError / FormatVersionError / ChecksumError — validation errors.
+
+CLI: ``python -m repro.launch.ingest`` (generate-or-read -> ingest ->
+write -> reopen -> verify query parity; ``--smoke`` for CI).
+"""
+
+from repro.store.artifact import (  # noqa: F401
+    FORMAT_VERSION,
+    ArtifactError,
+    ChecksumError,
+    FormatVersionError,
+    GraphArtifact,
+    open_artifact,
+    write_artifact,
+)
+from repro.store.ingest import (  # noqa: F401
+    IngestResult,
+    IngestStats,
+    StreamIngestor,
+    from_graph,
+    ingest_ntriples,
+    ingest_tsv,
+    write_tsv,
+)

@@ -1,0 +1,414 @@
+"""Versioned on-disk graph artifacts: write once, mmap-open in milliseconds.
+
+A :class:`GraphArtifact` is a directory of raw ``.npy`` buffers plus a
+``manifest.json``:
+
+    artifact/
+      manifest.json            magic, format version, counts, tau,
+                               per-buffer {dtype, shape, sha256},
+                               ingest stats, content_hash
+      src.npy dst.npy w.npy    directed raw edges (int32/int32/float32)
+      indptr.npy indices.npy   symmetrized CSR (int64 / int32 / float32)
+      ew.npy
+      sym_src.npy sym_dst.npy  dst-sorted symmetric edge list — the exact
+      sym_w.npy                DeviceGraph layout, so loading skips the sort
+      post_offsets.npy         InvertedIndex frozen postings (int64[T+1] /
+      post_nodes.npy           int32[sum df]) + the vocabulary keys
+      token_keys.npy           (int tokens)  — or token_offsets.npy +
+                               token_bytes.npy (utf-8 str tokens)
+      label_offsets.npy        optional node label text (utf-8 blob +
+      label_bytes.npy          int64[V+1] offsets)
+
+Buffers are opened with ``np.load(mmap_mode="r")`` — nothing is read until
+touched, so opening a multi-GB artifact costs a manifest parse and V+1
+offsets, not a graph rebuild.  Writes are atomic: everything lands in a
+``<path>.tmp-<pid>`` sibling first and is renamed into place, so a crashed
+ingest can never leave a half-written artifact at the target path.
+
+Validation is layered: :func:`open_artifact` always checks the magic and
+format version (``FormatVersionError`` on mismatch) and that every buffer's
+on-disk dtype/shape matches its manifest entry (``ArtifactError``);
+``verify="full"`` additionally re-hashes every buffer file against the
+recorded sha256 (``ChecksumError`` — use for freshly copied artifacts).
+``content_hash`` — a sha256 over the manifest's scalar metadata and buffer
+hashes — identifies the graph *content*: engines built from an artifact
+fold it into ``QueryEngine.version`` / ``cache_token``, so a result cache
+can never serve answers computed against a different graph build.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from repro.graph.index import InvertedIndex
+from repro.graph.structure import Graph
+
+MAGIC = "repro-graph-artifact"
+FORMAT_VERSION = 1
+_MANIFEST = "manifest.json"
+
+
+class ArtifactError(RuntimeError):
+    """Malformed, incomplete, or mismatched artifact."""
+
+
+class FormatVersionError(ArtifactError):
+    """The artifact's magic/format version doesn't match this reader."""
+
+
+class ChecksumError(ArtifactError):
+    """A buffer's bytes don't hash to the manifest's recorded sha256."""
+
+
+def _sha256_file(path: Path, chunk: int = 1 << 22) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                return h.hexdigest()
+            h.update(block)
+
+
+def _encode_strings(strings: list[str]) -> tuple[np.ndarray, np.ndarray]:
+    """utf-8 blob + int64[n+1] offsets (the persisted string-list layout)."""
+    encoded = [s.encode("utf-8") for s in strings]
+    offsets = np.zeros(len(encoded) + 1, np.int64)
+    np.cumsum([len(b) for b in encoded], out=offsets[1:])
+    blob = np.frombuffer(b"".join(encoded), dtype=np.uint8).copy()
+    return offsets, blob
+
+
+def _decode_strings(offsets: np.ndarray, blob: np.ndarray) -> list[str]:
+    data = blob.tobytes()
+    return [data[offsets[i]:offsets[i + 1]].decode("utf-8")
+            for i in range(len(offsets) - 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class _BufferSpec:
+    file: str
+    dtype: str
+    shape: tuple[int, ...]
+    sha256: str
+
+
+class GraphArtifact:
+    """An opened artifact: manifest metadata + lazily mmapped buffers.
+
+    Use :func:`open_artifact` (or :func:`write_artifact`, which returns the
+    reopened artifact) rather than constructing directly.  ``graph()`` and
+    ``index()`` build the engine-facing objects on top of the mmapped
+    buffers without re-tokenizing or re-sorting anything.
+    """
+
+    def __init__(self, path: Path, manifest: dict[str, Any]) -> None:
+        self.path = Path(path)
+        self.manifest = manifest
+        self._buffers: dict[str, _BufferSpec] = {
+            name: _BufferSpec(file=spec["file"], dtype=spec["dtype"],
+                              shape=tuple(spec["shape"]),
+                              sha256=spec["sha256"])
+            for name, spec in manifest["buffers"].items()}
+        self._arrays: dict[str, np.ndarray] = {}
+        self._graph: Graph | None = None
+        self._index: InvertedIndex | None = None
+
+    # -- manifest metadata ---------------------------------------------
+
+    @property
+    def format_version(self) -> int:
+        return int(self.manifest["format_version"])
+
+    @property
+    def content_hash(self) -> str:
+        return self.manifest["content_hash"]
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.manifest["n_nodes"])
+
+    @property
+    def n_edges_directed(self) -> int:
+        return int(self.manifest["n_edges_directed"])
+
+    @property
+    def n_edges_sym(self) -> int:
+        return int(self.manifest["n_edges_sym"])
+
+    @property
+    def tau(self) -> int:
+        return int(self.manifest["tau"])
+
+    @property
+    def token_kind(self) -> str:
+        return self.manifest["token_kind"]  # "int" | "str"
+
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Ingestion stats recorded at write time (true counts etc.)."""
+        return self.manifest.get("stats", {})
+
+    @property
+    def has_labels(self) -> bool:
+        return "label_offsets" in self._buffers
+
+    def nbytes(self) -> int:
+        """Total on-disk buffer bytes (payload, excluding npy headers)."""
+        return sum(int(np.prod(spec.shape)) * np.dtype(spec.dtype).itemsize
+                   for spec in self._buffers.values())
+
+    # -- buffers --------------------------------------------------------
+
+    def buffer(self, name: str) -> np.ndarray:
+        """Memory-mapped view of one buffer (cached, read-only)."""
+        arr = self._arrays.get(name)
+        if arr is None:
+            spec = self._buffers.get(name)
+            if spec is None:
+                raise ArtifactError(f"artifact has no buffer {name!r} "
+                                    f"({self.path})")
+            arr = np.load(self.path / spec.file, mmap_mode="r")
+            if str(arr.dtype) != spec.dtype or arr.shape != spec.shape:
+                raise ArtifactError(
+                    f"buffer {name!r} on disk is {arr.dtype}{arr.shape}, "
+                    f"manifest says {spec.dtype}{spec.shape} ({self.path})")
+            self._arrays[name] = arr
+        return arr
+
+    def validate(self) -> None:
+        """Cheap structural check: every buffer opens and matches its
+        manifest dtype/shape (reads npy headers only, not the data)."""
+        for name in self._buffers:
+            self.buffer(name)
+
+    def verify_checksums(self) -> None:
+        """Re-hash every buffer file against the manifest (full read)."""
+        for name, spec in self._buffers.items():
+            digest = _sha256_file(self.path / spec.file)
+            if digest != spec.sha256:
+                raise ChecksumError(
+                    f"buffer {name!r} hash mismatch in {self.path}: "
+                    f"{digest[:16]}… != recorded {spec.sha256[:16]}… "
+                    "(artifact corrupted or truncated)")
+
+    # -- engine-facing objects -----------------------------------------
+
+    def graph(self) -> Graph:
+        """Host :class:`Graph` over the mmapped buffers (zero-copy: CSR,
+        raw edges, and the dst-sorted symmetric list are all views).
+
+        ``labels`` stays ``None`` here — the engine takes the persisted
+        index instead of re-tokenizing; call :meth:`labels` when the text
+        itself is needed."""
+        if self._graph is None:
+            self._graph = Graph(
+                n_nodes=self.n_nodes,
+                src=self.buffer("src"), dst=self.buffer("dst"),
+                w=self.buffer("w"),
+                indptr=self.buffer("indptr"),
+                indices=self.buffer("indices"), ew=self.buffer("ew"),
+                labels=None,
+                sym_sorted=(self.buffer("sym_src"),
+                            self.buffer("sym_dst"),
+                            self.buffer("sym_w")),
+            )
+        return self._graph
+
+    def index(self) -> InvertedIndex:
+        """The persisted :class:`InvertedIndex`: frozen postings rebuilt
+        as views into the mmapped ``post_nodes`` buffer — no tokenizing,
+        and no posting bytes read until a token is looked up."""
+        if self._index is None:
+            offsets = np.asarray(self.buffer("post_offsets"))
+            if self.token_kind == "int":
+                tokens = [int(t) for t in self.buffer("token_keys")]
+            else:
+                tokens = _decode_strings(
+                    np.asarray(self.buffer("token_offsets")),
+                    self.buffer("token_bytes"))
+            self._index = InvertedIndex.from_postings(
+                tokens, offsets, self.buffer("post_nodes"))
+        return self._index
+
+    def labels(self) -> list[str] | None:
+        """Decode the node label text (materializes V strings)."""
+        if not self.has_labels:
+            return None
+        return _decode_strings(np.asarray(self.buffer("label_offsets")),
+                               self.buffer("label_bytes"))
+
+    def __repr__(self) -> str:
+        return (f"GraphArtifact({str(self.path)!r}, V={self.n_nodes:,}, "
+                f"E_sym={self.n_edges_sym:,}, "
+                f"hash={self.content_hash[:12]}…)")
+
+
+def _content_hash(meta: dict[str, Any],
+                  buffers: dict[str, dict[str, Any]]) -> str:
+    """Deterministic digest of the graph *content*: scalar metadata plus
+    every buffer's recorded hash (canonical JSON, sorted keys)."""
+    payload = {"meta": meta,
+               "buffers": {k: v["sha256"] for k, v in sorted(
+                   buffers.items())}}
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+def write_artifact(
+    path: str | Path,
+    graph: Graph,
+    index: InvertedIndex,
+    *,
+    tau: int = 1001,
+    stats: dict[str, Any] | None = None,
+    labels: list[str] | None = None,
+    overwrite: bool = False,
+) -> GraphArtifact:
+    """Write ``(graph, index)`` as a versioned artifact and reopen it.
+
+    Atomic: buffers and manifest land in a temp sibling directory which is
+    renamed onto ``path`` last — readers never observe a partial write.
+    ``stats`` (e.g. ``IngestStats.as_dict()``) is recorded verbatim in the
+    manifest.  ``labels`` defaults to ``graph.labels``.  Returns the
+    artifact *reopened from disk*, so the caller's engine build exercises
+    the same mmap path a later process will.
+    """
+    path = Path(path)
+    if path.exists() and not overwrite:
+        raise ArtifactError(
+            f"artifact path exists: {path} (pass overwrite=True)")
+    tmp = path.parent / f"{path.name}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    try:
+        _write_buffers(tmp, graph, index, tau=tau, stats=stats,
+                       labels=labels)
+    except BaseException:
+        # Never leave half-written debris behind: only the atomic rename
+        # below publishes state.
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+    if path.exists():  # overwrite=True: checked above
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    return open_artifact(path)
+
+
+def _write_buffers(
+    tmp: Path,
+    graph: Graph,
+    index: InvertedIndex,
+    *,
+    tau: int,
+    stats: dict[str, Any] | None,
+    labels: list[str] | None,
+) -> None:
+    labels = graph.labels if labels is None else labels
+    tokens, post_offsets, post_nodes = index.to_postings()
+    token_kind = ("int" if not tokens or isinstance(tokens[0], (int,
+                  np.integer)) else "str")
+
+    arrays: dict[str, np.ndarray] = {
+        "src": np.ascontiguousarray(graph.src, np.int32),
+        "dst": np.ascontiguousarray(graph.dst, np.int32),
+        "w": np.ascontiguousarray(graph.w, np.float32),
+        "indptr": np.ascontiguousarray(graph.indptr, np.int64),
+        "indices": np.ascontiguousarray(graph.indices, np.int32),
+        "ew": np.ascontiguousarray(graph.ew, np.float32),
+        "post_offsets": post_offsets,
+        "post_nodes": np.ascontiguousarray(post_nodes, np.int32),
+    }
+    sym_src, sym_dst, sym_w = graph.sym_sorted_edges(cache=True)
+    arrays["sym_src"] = np.ascontiguousarray(sym_src, np.int32)
+    arrays["sym_dst"] = np.ascontiguousarray(sym_dst, np.int32)
+    arrays["sym_w"] = np.ascontiguousarray(sym_w, np.float32)
+    if token_kind == "int":
+        arrays["token_keys"] = np.asarray([int(t) for t in tokens],
+                                          np.int64)
+    else:
+        tok_off, tok_blob = _encode_strings([str(t) for t in tokens])
+        arrays["token_offsets"] = tok_off
+        arrays["token_bytes"] = tok_blob
+    if labels is not None:
+        lab_off, lab_blob = _encode_strings(labels)
+        arrays["label_offsets"] = lab_off
+        arrays["label_bytes"] = lab_blob
+
+    buffers: dict[str, dict[str, Any]] = {}
+    for name, arr in arrays.items():
+        fname = f"{name}.npy"
+        np.save(tmp / fname, arr)
+        buffers[name] = {
+            "file": fname,
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "sha256": _sha256_file(tmp / fname),
+        }
+
+    meta = {
+        "magic": MAGIC,
+        "format_version": FORMAT_VERSION,
+        "n_nodes": int(graph.n_nodes),
+        "n_edges_directed": int(graph.n_edges_directed),
+        "n_edges_sym": int(graph.n_edges_sym),
+        "tau": int(tau),
+        "token_kind": token_kind,
+        "n_tokens": len(tokens),
+    }
+    manifest = dict(meta)
+    manifest["stats"] = stats or {}
+    manifest["buffers"] = buffers
+    manifest["content_hash"] = _content_hash(meta, buffers)
+    (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=1))
+
+
+def open_artifact(path: str | Path,
+                  verify: str = "meta") -> GraphArtifact:
+    """Open an artifact for reading (mmap; nothing large is touched).
+
+    ``verify``: ``"meta"`` (default) checks magic/format version and that
+    every buffer's on-disk dtype/shape matches the manifest; ``"full"``
+    additionally re-hashes every buffer against its recorded sha256.
+    Raises :class:`FormatVersionError` on a version mismatch,
+    :class:`ChecksumError` on corruption, :class:`ArtifactError` on
+    anything structurally wrong.
+    """
+    if verify not in ("meta", "full"):
+        raise ValueError(f"unknown verify={verify!r} "
+                         "(expected 'meta' or 'full')")
+    path = Path(path)
+    mpath = path / _MANIFEST
+    if not mpath.is_file():
+        raise ArtifactError(f"no graph artifact at {path} "
+                            f"(missing {_MANIFEST})")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except json.JSONDecodeError as exc:
+        raise ArtifactError(f"unreadable manifest in {path}: {exc}") from exc
+    if manifest.get("magic") != MAGIC:
+        raise FormatVersionError(
+            f"{path} is not a {MAGIC} (magic={manifest.get('magic')!r})")
+    version = manifest.get("format_version")
+    if version != FORMAT_VERSION:
+        raise FormatVersionError(
+            f"artifact format v{version} at {path}; this reader supports "
+            f"v{FORMAT_VERSION} — re-ingest the source with this version")
+    for key in ("content_hash", "buffers", "n_nodes"):
+        if key not in manifest:
+            raise ArtifactError(f"manifest missing {key!r} in {path}")
+    art = GraphArtifact(path, manifest)
+    art.validate()
+    if verify == "full":
+        art.verify_checksums()
+    return art

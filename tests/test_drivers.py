@@ -63,6 +63,26 @@ def test_dks_query_cli():
     assert "top answers" in out
 
 
+def test_ingest_cli_smoke():
+    """The store acceptance run: generate -> stream-ingest -> write
+    artifact (atomic) -> checksum-verified mmap reopen -> bit-identical
+    query parity vs the in-memory build — asserted by the CLI itself."""
+    out = run_cli(["-m", "repro.launch.ingest", "--smoke"])
+    assert "reopened with mmap" in out
+    assert "bit-identical" in out
+    assert "ingest smoke invariants hold" in out
+
+
+def test_ingest_then_query_artifact(tmp_path):
+    """An artifact written by the ingest CLI serves the query CLI."""
+    art = tmp_path / "artifact"
+    run_cli(["-m", "repro.launch.ingest", "--smoke", "--out", str(art)])
+    out = run_cli(["-m", "repro.launch.dks_query", "--artifact", str(art),
+                   "--m", "2", "--k", "1", "--max-supersteps", "12"])
+    assert "DKS finished" in out
+    assert "top answers" in out
+
+
 def test_serve_dks_cli_smoke():
     """The serving acceptance run: >= 8 concurrent clients, batch
     coalescing (mean fill > 1), warm cache hits, and parity with the

@@ -40,9 +40,10 @@ def test_concurrent_clients_match_direct_engine(engine):
         stats = svc.stats()
     assert stats.requests == len(trace)
     assert stats.batch_dispatches > 0
-    # The trace repeats each query 3x; once the first wave resolves, the
-    # warm cache must catch at least one repeat.
-    assert stats.cache_hits > 0
+    # The trace repeats each query 3x; a repeat is reused either from the
+    # warm cache (the earlier run resolved) or by single-flight attach
+    # (it was still in flight) — never re-executed.
+    assert stats.cache_hits + stats.single_flight_hits > 0
     refs = {q: engine.query(list(q), k=1) for q in pool}
     for req, srv in zip(trace, served):
         assert not srv.approximate
@@ -102,6 +103,35 @@ def test_cache_hit_skips_execution_and_normalizes(engine):
         # Explicit invalidation (graph rebuild): the entry is gone.
         assert svc.invalidate_cache() > 0
         assert not svc.query(q, k=1).cache_hit
+
+
+def test_single_flight_coalesces_identical_misses(engine):
+    """Two (here: five) concurrent identical cache misses execute once —
+    the first leads, the rest attach to its in-flight future and resolve
+    from the leader's result with ``coalesced=True``."""
+    q = mid_df_tokens(engine.index, 2)
+    ref = engine.query(q, k=1)
+    executes = engine.execute_count
+    with DKSService(engine, ServeConfig(max_batch=8, max_wait_ms=300.0,
+                                        cache_size=8)) as svc:
+        futures = [svc.submit(q, k=1) for _ in range(5)]
+        served = [f.result(timeout=300) for f in futures]
+        stats = svc.stats()
+    # One device dispatch total for the five identical requests.
+    assert engine.execute_count == executes + 1
+    leaders = [s for s in served if not s.coalesced and not s.cache_hit]
+    followers = [s for s in served if s.coalesced]
+    assert len(leaders) == 1 and len(followers) == 4
+    assert stats.requests == 5
+    assert stats.single_flight_hits == 4
+    assert stats.cache_misses == 1   # one durable miss, not five
+    for srv in served:
+        np.testing.assert_array_equal(srv.result.weights, ref.weights)
+    # A later identical request is a plain cache hit, not single-flight.
+    with DKSService(engine, ServeConfig(cache_size=8)) as svc:
+        first = svc.query(q, k=1)
+        again = svc.query(q, k=1)
+    assert not first.cache_hit and again.cache_hit and not again.coalesced
 
 
 def test_cache_lru_eviction_and_disable():

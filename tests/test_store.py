@@ -1,0 +1,291 @@
+"""Graph store & ingestion tests: artifact roundtrip query parity (dense
+and 1-shard sharded, bit-identical), InvertedIndex persistence contracts,
+checksum / format-version validation, cache-token safety across artifact
+builds, streaming readers, and the rmat_edges true-count fix."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.engine import ExecutionPolicy, QueryEngine
+from repro.graph.generators import lod_like_graph, rmat_edges
+from repro.graph.index import InvertedIndex
+from repro.serve import ResultCache
+from repro.store import (
+    ArtifactError,
+    ChecksumError,
+    FormatVersionError,
+    StreamIngestor,
+    from_graph,
+    ingest_ntriples,
+    ingest_tsv,
+    open_artifact,
+    write_artifact,
+    write_tsv,
+)
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    g, tokens = lod_like_graph(600, 1800, seed=11, vocab=120)
+    result = from_graph(g, tokens=tokens, edges_requested=1800)
+    path = tmp_path_factory.mktemp("store") / "artifact"
+    artifact = write_artifact(path, result.graph, result.index,
+                              tau=result.tau,
+                              stats=result.stats.as_dict())
+    return g, tokens, result, artifact
+
+
+def mid_df_queries(index, n=4, ms=(2, 3)):
+    toks = [t for t in sorted(index.vocabulary(), key=index.df)
+            if 2 <= index.df(t) <= 60]
+    queries = []
+    for i in range(n):
+        m = ms[i % len(ms)]
+        q = toks[i * 2: i * 2 + m]
+        assert len(q) == m
+        queries.append(q)
+    return queries
+
+
+def assert_results_identical(ra, rb, query):
+    np.testing.assert_array_equal(
+        ra.weights, rb.weights,
+        err_msg=f"weights diverged for {query!r}")
+    np.testing.assert_array_equal(ra.roots, rb.roots)
+    assert ra.supersteps == rb.supersteps
+    assert ra.spa == rb.spa and ra.spa_ratio == rb.spa_ratio
+    assert (ra.done, ra.budget_hit, ra.capped) == \
+        (rb.done, rb.budget_hit, rb.capped)
+    assert ra.msgs_bfs == rb.msgs_bfs and ra.msgs_deep == rb.msgs_deep
+
+
+@pytest.mark.parametrize("partition", ["single", "sharded"])
+def test_artifact_roundtrip_bit_identical(setup, partition):
+    """graph -> artifact -> mmap-load -> engine gives bit-identical
+    QueryResults vs the in-memory build, dense and 1-shard sharded."""
+    g, tokens, result, artifact = setup
+    policy = ExecutionPolicy(
+        max_supersteps=32, partition=partition,
+        n_shards=1 if partition == "sharded" else None,
+        frontier_frac=1.0 if partition == "sharded" else 0.25)
+    e_mem = QueryEngine.build(g, index=result.index, policy=policy)
+    e_art = QueryEngine.build(artifact=open_artifact(artifact.path),
+                              policy=policy)
+    assert e_art.n_nodes == e_mem.n_nodes
+    assert e_art.n_edges == e_mem.n_edges
+    for q in mid_df_queries(result.index):
+        ra = e_mem.query(q, k=2, extract=False)
+        rb = e_art.query(q, k=2, extract=False)
+        assert_results_identical(ra, rb, q)
+    # Forced-stop bounds survive the roundtrip too (superstep cap).
+    q = mid_df_queries(result.index)[0]
+    ra = e_mem.query(q, k=1, extract=False, max_supersteps=2)
+    rb = e_art.query(q, k=1, extract=False, max_supersteps=2)
+    assert_results_identical(ra, rb, q)
+    # Answer-tree extraction reads the host graph (CSR) — the mmapped
+    # arrays must serve it identically.
+    ra = e_mem.query(q, k=2)
+    rb = e_art.query(q, k=2)
+    assert [a.weight for a in ra.answers] == [a.weight for a in rb.answers]
+    assert [a.root for a in ra.answers] == [a.root for a in rb.answers]
+
+
+def test_index_persistence_token_matrix(setup):
+    """from_token_matrix indexes survive save/load: identical lookup /
+    df / missing_tokens, and the on_missing='raise' KeyError contract."""
+    _, tokens, result, artifact = setup
+    orig = result.index
+    loaded = open_artifact(artifact.path).index()
+    assert sorted(loaded.vocabulary()) == sorted(orig.vocabulary())
+    for tok in orig.vocabulary():
+        np.testing.assert_array_equal(loaded.lookup(tok), orig.lookup(tok))
+        assert loaded.df(tok) == orig.df(tok)
+    missing = 10_000  # out of vocab
+    assert loaded.missing_tokens([missing]) == [missing]
+    assert len(loaded.lookup(missing)) == 0
+    q = [orig.vocabulary()[0], missing]
+    with pytest.raises(KeyError):
+        loaded.keyword_masks(q, 600)
+    masks = loaded.keyword_masks(q, 600, v_pad=640, on_missing="ignore")
+    np.testing.assert_array_equal(
+        masks, orig.keyword_masks(q, 600, v_pad=640, on_missing="ignore"))
+
+
+def test_index_persistence_labels(tmp_path):
+    """from_labels (string-token) indexes survive save/load."""
+    labels = ["paris piano", "piano bar", "tour eiffel paris", "", "bar"]
+    src, dst = [0, 1, 2, 3], [1, 2, 3, 4]
+    from repro.graph.structure import build_graph
+    g = build_graph(src, dst, 5, labels=labels)
+    orig = InvertedIndex.from_labels(labels)
+    art = write_artifact(tmp_path / "a", g, orig)
+    loaded = open_artifact(art.path, verify="full").index()
+    assert sorted(loaded.vocabulary()) == sorted(orig.vocabulary())
+    for tok in orig.vocabulary():
+        np.testing.assert_array_equal(loaded.lookup(tok), orig.lookup(tok))
+    assert loaded.missing_tokens(["paris", "nope"]) == ["nope"]
+    with pytest.raises(KeyError):
+        loaded.keyword_masks(["nope"], 5)
+    # Labels text itself roundtrips (offsets + utf-8 blob).
+    assert open_artifact(art.path).labels() == labels
+
+
+def test_artifact_validation_errors(tmp_path, setup):
+    g, tokens, result, _ = setup
+    art = write_artifact(tmp_path / "a", result.graph, result.index)
+    # Overwrite protection.
+    with pytest.raises(ArtifactError):
+        write_artifact(tmp_path / "a", result.graph, result.index)
+    # Missing artifact.
+    with pytest.raises(ArtifactError):
+        open_artifact(tmp_path / "nope")
+    # Corrupted buffer: meta open succeeds, full verify raises.
+    buf = art.path / "post_nodes.npy"
+    raw = bytearray(buf.read_bytes())
+    raw[-1] ^= 0xFF
+    buf.write_bytes(bytes(raw))
+    open_artifact(art.path)  # header/shape still fine
+    with pytest.raises(ChecksumError):
+        open_artifact(art.path, verify="full")
+    # Format-version mismatch is its own clear error.
+    manifest = json.loads((art.path / "manifest.json").read_text())
+    manifest["format_version"] = 99
+    (art.path / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(FormatVersionError):
+        open_artifact(art.path)
+    # Not an artifact manifest at all.
+    manifest["format_version"] = 1
+    manifest["magic"] = "something-else"
+    (art.path / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(FormatVersionError):
+        open_artifact(art.path)
+
+
+def test_cache_token_keyed_on_artifact_hash(tmp_path, setup):
+    """ISSUE acceptance: a ResultCache keyed through cache_token MISSES
+    when the engine is rebuilt from a different artifact (content hash in
+    the token) — and HITS across rebuilds from the same artifact."""
+    g, tokens, result, artifact = setup
+    g2, tokens2 = lod_like_graph(600, 1800, seed=12, vocab=120)
+    res2 = from_graph(g2, tokens=tokens2)
+    art2 = write_artifact(tmp_path / "other", res2.graph, res2.index)
+    assert art2.content_hash != artifact.content_hash
+
+    e_a = QueryEngine.build(artifact=open_artifact(artifact.path))
+    e_a2 = QueryEngine.build(artifact=open_artifact(artifact.path))
+    e_b = QueryEngine.build(artifact=art2)
+    q = mid_df_queries(result.index, n=1)[0]
+    assert e_a.version == f"artifact:{artifact.content_hash}"
+    assert e_a.graph_hash == artifact.content_hash
+
+    cache = ResultCache(capacity=8)
+    cache.put(e_a.cache_token(q, 1), "answer-from-artifact-A")
+    # Same artifact, fresh build (e.g. serve restart): the token is
+    # stable, the cached answer is still valid and served.
+    assert cache.get(e_a2.cache_token(q, 1)) == "answer-from-artifact-A"
+    # Different artifact: token differs, the cache must miss.
+    assert cache.get(e_b.cache_token(q, 1)) is None
+    # In-memory builds keep monotone versions: always a fresh token.
+    e_mem = QueryEngine.build(g, index=result.index)
+    assert cache.get(e_mem.cache_token(q, 1)) is None
+
+
+def test_ntriples_reader(tmp_path):
+    nt = tmp_path / "d.nt"
+    nt.write_text(
+        '<http://ex.org/Alice_Smith> <http://ex.org/p#knows> '
+        '<http://ex.org/Bob> .\n'
+        '<http://ex.org/Bob> <http://ex.org/p#likes> "piano \\"jazz\\""'
+        '@en .\n'
+        '# a comment line\n'
+        '\n'
+        '<http://ex.org/Bob> <http://ex.org/p#knows> '
+        '<http://ex.org/Carol> .\n'
+        'this line is malformed\n'
+        '<http://ex.org/Loop> <http://ex.org/p#self> '
+        '<http://ex.org/Loop> .\n')
+    res = ingest_ntriples(nt)
+    st = res.stats
+    assert st.lines_read == 7
+    assert st.statements == 4
+    assert st.malformed_lines == 1
+    assert st.self_loops_dropped == 1
+    assert st.edges_directed == 3
+    assert st.n_predicates == 3
+    assert res.graph.n_nodes == 5  # Alice, Bob, literal, Carol, Loop
+    # URI local names tokenize into keywords; literals keep their text.
+    assert res.index.df("alice") == 1
+    assert res.index.df("piano") == 1
+    engine = QueryEngine.build(res.graph, index=res.index)
+    r = engine.query(["alice", "carol"], k=1, extract=False)
+    assert r.weights[0] == 2.0  # alice -(1)- bob -(1)- carol
+    with pytest.raises(ValueError):
+        ingest_ntriples(nt, on_error="raise")
+
+
+def test_tsv_reader_and_chunking(tmp_path):
+    src, dst = rmat_edges(300, 900, seed=5)
+    tsv = tmp_path / "e.tsv"
+    assert write_tsv(tsv, src, dst) == 900
+    # Tiny chunks + spilling: identical result, bounded resident memory.
+    res = ingest_tsv(tsv, chunk_edges=128,
+                     spill_dir=tmp_path / "spill")
+    assert res.stats.edges_directed == 900
+    assert res.stats.chunks >= 7
+    assert res.stats.spilled_chunks > 0
+    res_big = ingest_tsv(tsv)
+    assert res_big.stats.spilled_chunks == 0
+    np.testing.assert_array_equal(res.graph.indptr, res_big.graph.indptr)
+    np.testing.assert_array_equal(res.graph.indices,
+                                  res_big.graph.indices)
+    np.testing.assert_array_equal(res.graph.ew, res_big.graph.ew)
+
+
+def test_ingestor_bad_args():
+    with pytest.raises(ValueError):
+        StreamIngestor(chunk_edges=0)
+    ing = StreamIngestor()
+    with pytest.raises(ValueError):
+        # No labels, no tokens, no index, but nodes exist.
+        ing.add_edge("a", "b")
+        ing._labels.clear()
+        from repro.store.ingest import IngestStats
+        ing.finalize(IngestStats(source="x"))
+
+
+def test_rmat_edges_full_count_and_deterministic():
+    """ISSUE satellite: the self-loop filter used to silently undershoot
+    n_edges; slots are now resampled (bounded) to the requested count."""
+    for n_nodes, n_edges, seed in [(100, 400, 0), (1000, 5000, 3),
+                                   (17, 123, 9)]:
+        s, d = rmat_edges(n_nodes, n_edges, seed=seed)
+        assert len(s) == n_edges and len(d) == n_edges
+        assert (s != d).all()
+        assert s.max() < n_nodes and d.max() < n_nodes
+        s2, d2 = rmat_edges(n_nodes, n_edges, seed=seed)
+        np.testing.assert_array_equal(s, s2)
+        np.testing.assert_array_equal(d, d2)
+    # Degenerate single-node graph: bounded retries, graceful undershoot.
+    s, d = rmat_edges(1, 10, seed=0)
+    assert len(s) == 0
+
+
+def test_from_graph_records_true_counts(setup):
+    _, _, result, artifact = setup
+    assert result.stats.edges_requested == 1800
+    assert result.stats.edges_directed == 1800  # rmat no longer undershoots
+    # The artifact manifest carries the stats for provenance.
+    assert artifact.stats["edges_requested"] == 1800
+    assert artifact.stats["edges_directed"] == 1800
+
+
+def test_artifact_atomic_overwrite(tmp_path, setup):
+    _, _, result, _ = setup
+    art1 = write_artifact(tmp_path / "a", result.graph, result.index)
+    h1 = art1.content_hash
+    art2 = write_artifact(tmp_path / "a", result.graph, result.index,
+                          overwrite=True)
+    assert art2.content_hash == h1  # same content, same identity
+    assert not list(tmp_path.glob("*.tmp-*"))  # no temp debris
