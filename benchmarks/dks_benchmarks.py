@@ -190,3 +190,68 @@ def fig15_sharded_vs_single(dataset="sec-rdfabout-cpu", k=1, n_queries=4):
             "supersteps": rh.supersteps,
         })
     return rows
+
+
+def fig_sharded_batch(n_nodes=4000, n_edges=12000, k=1, batch=16,
+                      repeats=5):
+    """The restored sharded batch win, measured: a bucket of same-m
+    queries rides the lane-batched driver as ONE device program (the
+    lane axis lives inside the shard_map body) versus serving the same
+    bucket as sequential single-query runs — which is exactly what the
+    pre-driver engine was forced to do (shard_map under vmap is
+    unsupported).  Dispatch count is asserted via ``execute_count`` (one
+    per bucket, the acceptance criterion) and the wall-time speedup is
+    asserted >= 1 even at 1 shard on a single core, where the batch can
+    only win by amortizing per-query dispatch + host overhead (compute
+    is serialized either way); on a real mesh the lanes share every
+    collective too.  A dedicated mid-size synthetic graph and a wide
+    bucket keep that overhead fraction — and so the measured margin —
+    well clear of timer noise (~1.2x here vs ~1.1x at sec-rdfabout
+    scale).  Best-of-``repeats`` timings, warmed."""
+    from repro.graph.generators import lod_like_graph
+    from repro.graph.index import InvertedIndex, mid_df_tokens
+
+    g, tokens = lod_like_graph(n_nodes, n_edges, seed=7, vocab=200)
+    index = InvertedIndex.from_token_matrix(tokens)
+    sharded = QueryEngine.build(
+        g, index=index,
+        policy=ExecutionPolicy(partition="sharded", max_supersteps=32,
+                               frontier_frac=1.0))
+    q = mid_df_tokens(index)[:2]
+    queries = [q] * batch  # same-m (and same-length lanes: a pure
+    # dispatch-amortization measurement, robust on one core)
+    sharded.query(q, k=k, extract=False)          # warm the 1-lane fused
+    sharded.query_batch(queries, k=k, extract=False)  # warm the bucket
+    before = sharded.execute_count
+    t_batched = min(_timed(lambda: sharded.query_batch(
+        queries, k=k, extract=False)) for _ in range(repeats))
+    n_exec = sharded.execute_count - before
+    assert n_exec == repeats, (
+        f"sharded bucket took {n_exec} device executions for {repeats} "
+        f"batch calls — expected exactly one per bucket")
+
+    def sequential():
+        for qq in queries:
+            sharded.query(qq, k=k, extract=False)
+
+    t_sequential = min(_timed(sequential) for _ in range(repeats))
+    speedup = t_sequential / max(t_batched, 1e-9)
+    assert speedup >= 1.0, (
+        f"sharded lane-batched bucket slower than sequential serving "
+        f"({t_batched:.3f}s vs {t_sequential:.3f}s) — the restored "
+        f"batch path lost its reason to exist")
+    return {
+        "m": len(q),
+        "batch": batch,
+        "n_shards": sharded.device_graph.n_shards,
+        "batched_bucket_s": round(t_batched, 4),
+        "sequential_bucket_s": round(t_sequential, 4),
+        "speedup": round(speedup, 3),
+        "executions_per_bucket": 1,
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

@@ -16,10 +16,45 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import time
 from pathlib import Path
 
 OUT = Path(__file__).resolve().parent.parent / "experiments"
+
+
+def provenance() -> dict:
+    """Stamp for every BENCH_*.json record: git commit, jax version, and
+    device kind — so cross-commit trajectories are self-describing (a
+    regression can be attributed to a commit / jax bump / hardware swap
+    without consulting external logs)."""
+    import jax
+
+    try:
+        repo = Path(__file__).resolve().parent
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=repo, timeout=10,
+        ).stdout.strip() or None
+        if commit:
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], capture_output=True,
+                text=True, cwd=repo, timeout=10,
+            ).stdout.strip()
+            if dirty:
+                # Uncommitted changes produced these numbers: say so, or
+                # the trajectory attributes them to the parent commit.
+                commit += "-dirty"
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    dev = jax.devices()[0]
+    return {
+        "commit": commit,
+        "jax": jax.__version__,
+        "n_devices": len(jax.devices()),
+        "device_kind": getattr(dev, "device_kind", dev.platform),
+        "platform": dev.platform,
+    }
 
 
 def main() -> None:
@@ -63,6 +98,7 @@ def main() -> None:
     record("fig15_parallel_efficiency", dks.fig15_parallel_efficiency)
     record("fig15_sharded_vs_single", dks.fig15_sharded_vs_single,
            n_queries=2 if not args.full else 8)
+    record("fig_sharded_batch", dks.fig_sharded_batch)
     record("fig_serve_throughput", sv.fig_serve_throughput,
            batch_sizes=(1, 4) if not args.full else (1, 2, 4, 8),
            n_requests=12 if not args.full else 32,
@@ -80,7 +116,7 @@ def main() -> None:
     OUT.mkdir(exist_ok=True)
     (OUT / "bench_results.json").write_text(json.dumps(results, indent=1))
     print(f"\nwrote {OUT / 'bench_results.json'}")
-    import jax
+    stamp = provenance()
 
     # The trajectory files are committed and compared across commits, so
     # a filtered run (--only) must not clobber them with partial or
@@ -91,18 +127,17 @@ def main() -> None:
                 if k not in ("fig_serve_throughput", "fig_ingest")}
     if dks_figs and args.only is None:
         bench_dks = {
-            "jax": jax.__version__,
-            "n_devices": len(jax.devices()),
+            **stamp,
             "full": bool(args.full),
             "per_figure_wall_s": dks_figs,
             "sharded_vs_single": results.get("fig15_sharded_vs_single"),
+            "sharded_batch": results.get("fig_sharded_batch"),
         }
         (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))
         print(f"wrote {OUT / 'BENCH_dks.json'}")
     if "fig_serve_throughput" in results:
         bench_serve = {
-            "jax": jax.__version__,
-            "n_devices": len(jax.devices()),
+            **stamp,
             "full": bool(args.full),
             "wall_s": fig_wall_s.get("fig_serve_throughput"),
             "throughput_vs_batch": results["fig_serve_throughput"],
@@ -112,8 +147,7 @@ def main() -> None:
         print(f"wrote {OUT / 'BENCH_serve.json'}")
     if "fig_ingest" in results:
         bench_ingest = {
-            "jax": jax.__version__,
-            "n_devices": len(jax.devices()),
+            **stamp,
             "full": bool(args.full),
             "wall_s": fig_wall_s.get("fig_ingest"),
             "ingest": results["fig_ingest"],

@@ -4,9 +4,14 @@
 Public API:
   DKSConfig, DKSState                       — static config / superstep state
   run_dks                                   — jitted while-loop, one query
-  run_dks_batched                           — vmapped multi-query serving
+  run_lanes, lane_init, lane_superstep      — the lane-batched driver (one
+                                              step kernel, L concurrent
+                                              queries, both partitionings)
+  run_dks_batched                           — lane-driver alias (query axis
+                                              = lane axis)
   run_dks_instrumented                      — host loop w/ per-phase timings
   init_state, superstep, freeze_finished    — the loop's building blocks
+  lane_view, freeze_lanes                   — lane-batch helpers
   extract_answers, AnswerTree               — aggregator-side answer trees
   extract_answer_weights                    — top-K weights only (no trees)
   dreyfus_wagner, brute_force_topk          — exact oracles (tests)
@@ -27,6 +32,13 @@ from repro.core.dks import (  # noqa: F401
     run_dks_batched,
     run_dks_instrumented,
     superstep,
+)
+from repro.core.driver import (  # noqa: F401
+    freeze_lanes,
+    lane_init,
+    lane_superstep,
+    lane_view,
+    run_lanes,
 )
 from repro.core.reconstruct import AnswerTree, extract_answers  # noqa: F401
 from repro.core.steiner_ref import brute_force_topk, dreyfus_wagner  # noqa: F401

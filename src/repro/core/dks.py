@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Any, Callable
 
 import jax
@@ -77,7 +76,14 @@ class DKSConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class DKSState:
-    """Per-superstep state (a pytree; node axis shards over the mesh)."""
+    """Per-superstep state (a pytree; node axis shards over the mesh).
+
+    Shapes below are the un-batched single-query layout.  The lane-batched
+    driver (:mod:`repro.core.driver`) runs the same pytree with an explicit
+    leading **lane** axis on every field (``S[L, V, 2^m, K]``,
+    ``done[L]``, ...): one lane per concurrent query, with per-lane
+    freeze/exit flags (``done`` / ``budget_hit`` / ``capped``) so lanes
+    stop individually while the driver keeps stepping the rest."""
 
     S: jax.Array            # f32[V, 2^m, K] top-K distinct partial weights
     changed: jax.Array      # bool[V] — Pregel "active" vertices
@@ -236,18 +242,24 @@ def exit_check(graph: DeviceGraph, state: DKSState, cfg: DKSConfig) -> DKSState:
 def freeze_finished(old: DKSState, new: DKSState) -> DKSState:
     """Keep ``old`` wherever its exit criterion has already fired.
 
-    Under ``vmap`` (:func:`run_dks_batched`, the engine's batch executors)
-    the while-loop keeps stepping every query until the whole batch
-    finishes.  The lattice makes the extra steps idempotent on ``S``, but
+    Batched loops (the lane driver, :mod:`repro.core.driver`) keep
+    stepping every lane until the whole batch finishes.  The lattice makes
+    the extra steps idempotent on ``S``, but
     ``msgs_bfs``/``msgs_deep``/``step`` are counters, not lattice values —
-    without this select, finished queries keep accumulating them (and could
-    even flip ``budget_hit``).  Apply it around the superstep of *batched*
-    loops only: a single query's while-loop never runs the body once done,
-    so there the select would be pure overhead (an extra full-table select
-    per superstep that XLA cannot fold, ``done`` being dynamic).
+    without this select, finished lanes keep accumulating them (and could
+    even flip ``budget_hit``).  ``old.done`` may be any rank: a scalar
+    under a per-lane vmap, or ``[L]`` on a state with an explicit lane
+    axis — it broadcasts against each field from the left.  A single
+    query's while-loop never runs the body once done, so the select only
+    ever fires when some lanes finish before others.
     """
-    return jax.tree_util.tree_map(
-        lambda o, n: jnp.where(old.done, o, n), old, new)
+    done = old.done
+
+    def sel(o, n):
+        d = done.reshape(done.shape + (1,) * (o.ndim - done.ndim))
+        return jnp.where(d, o, n)
+
+    return jax.tree_util.tree_map(sel, old, new)
 
 
 def finish_superstep(graph: Any, S0: jax.Array, state: DKSState,
@@ -320,92 +332,21 @@ def run_dks(graph: DeviceGraph, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState
     return jax.lax.while_loop(cond, body, state)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
 def run_dks_batched(graph: DeviceGraph, kw_masks_batch: jax.Array,
                     cfg: DKSConfig) -> DKSState:
     """Serve a BATCH of queries in one device program.
 
-    kw_masks_batch: bool[Q, m, V].  vmap folds the query axis into every
-    tensor of the superstep; ``lax.while_loop`` under vmap runs until every
-    query's exit criterion fires.  Finished queries are frozen
+    kw_masks_batch: bool[Q, m, V].  A thin alias for the lane-batched
+    driver (:func:`repro.core.driver.run_lanes`): the query axis is the
+    driver's lane axis, the fused while-loop steps until every lane's exit
+    criterion fires, and finished lanes are frozen
     (:func:`freeze_finished`) so their counters stop with them.  Amortizes
     graph residency and kernel launches across the paper's 100-query
     workloads.
     """
+    from repro.core.driver import run_lanes
 
-    def one(masks: jax.Array) -> DKSState:
-        state = init_state(graph, masks, cfg)
-        return jax.lax.while_loop(
-            lambda st: ~st.done,
-            lambda st: freeze_finished(st, superstep(graph, st, cfg)),
-            state)
-
-    return jax.vmap(one)(kw_masks_batch)
-
-
-def host_instrumented_loop(
-    graph: Any,
-    kw_masks: jax.Array,
-    cfg: DKSConfig,
-    exit_hook: Callable[[DKSState], bool] | None,
-    phase_relax: Callable,
-    phase_receive: Callable,
-    phase_combine: Callable,
-    phase_agg: Callable,
-) -> tuple[DKSState, dict[str, Any]]:
-    """The host-driven per-phase superstep loop shared by the dense and
-    sharded instrumented runners — one copy of the timing buckets, message
-    accounting, history rows, and ``exit_hook`` contract.
-
-    Phase signatures (each jitted by the caller, timed here):
-      phase_relax(S, changed) -> aux           "send_bfs"
-      phase_receive(S, aux) -> S1              "receive"
-      phase_combine(S1) -> S1                  "evaluate"
-      phase_agg(S0, state, aux) -> state       "send_agg"
-    ``aux`` is whatever relax must hand forward (per-edge candidates on the
-    dense path; (R, overflow) on the sharded path).
-    """
-    timings = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0,
-               "send_agg": 0.0}
-    state = jax.block_until_ready(init_state(graph, kw_masks, cfg))
-    history = []
-    while not bool(state.done):
-        deg = graph.out_degree.astype(jnp.float32)
-        n_bfs = float(jnp.sum(jnp.where(state.first_fire, deg, 0.0)))
-        n_deep = float(jnp.sum(
-            jnp.where(state.changed & ~state.first_fire, deg, 0.0)))
-
-        t0 = time.perf_counter()
-        aux = jax.block_until_ready(phase_relax(state.S, state.changed))
-        t1 = time.perf_counter()
-        S1 = jax.block_until_ready(phase_receive(state.S, aux))
-        t2 = time.perf_counter()
-        S1 = jax.block_until_ready(phase_combine(S1))
-        t3 = time.perf_counter()
-        S0 = state.S
-        state = dataclasses.replace(
-            state,
-            S=S1,
-            msgs_bfs=state.msgs_bfs + n_bfs,
-            msgs_deep=state.msgs_deep + n_deep,
-            step=state.step + 1,
-        )
-        state = jax.block_until_ready(phase_agg(S0, state, aux))
-        t4 = time.perf_counter()
-
-        timings["send_bfs"] += t1 - t0
-        timings["receive"] += t2 - t1
-        timings["evaluate"] += t3 - t2
-        timings["send_agg"] += t4 - t3
-        history.append(
-            dict(step=int(state.step), frontier=int(jnp.sum(state.changed)),
-                 msgs_bfs=float(state.msgs_bfs), msgs_deep=float(state.msgs_deep),
-                 best=float(state.topk_w[0]))
-        )
-        if exit_hook is not None and exit_hook(state):
-            state = dataclasses.replace(state, done=jnp.bool_(True))
-    info = dict(timings=timings, history=history)
-    return state, info
+    return run_lanes(graph, kw_masks_batch, cfg)
 
 
 def run_dks_instrumented(
@@ -416,24 +357,26 @@ def run_dks_instrumented(
 ) -> tuple[DKSState, dict[str, Any]]:
     """Host-driven superstep loop with per-phase wall times (paper Table 1).
 
-    Phases timed: send_bfs (gather+add candidates), receive (segment top-K +
-    merge), evaluate (subset combine = local-tree S_K computation),
-    send_agg (aggregators + exit).  Deep messages share the relax kernel
-    (DESIGN.md §2), so their share is attributed by message counts.
+    A 1-lane instance of the driver's instrumented host loop
+    (:func:`repro.core.driver.host_instrumented_loop`) over lane-batched
+    phase kernels.  Phases timed: send_bfs (gather+add candidates),
+    receive (segment top-K + merge), evaluate (subset combine = local-tree
+    S_K computation), send_agg (aggregators + exit).  Deep messages share
+    the relax kernel (DESIGN.md §2), so their share is attributed by
+    message counts.
 
     ``exit_hook``: optional host-side exit criterion (e.g. the literal paper
     Eq. 2 check, fagin.paper_exit_hook) evaluated between supersteps.
     """
+    from repro.core.driver import host_instrumented_loop
 
-    @jax.jit
-    def _phase_relax(S, changed):
+    def _relax_one(S, changed):
         send = changed[graph.src] & graph.valid
         cand = S[graph.src] + graph.w[:, None, None]
         cand = jnp.where(send[:, None, None], cand, INF)
         return semiring.bump_to_inf(cand)
 
-    @jax.jit
-    def _phase_receive(S, cand):
+    def _receive_one(S, cand):
         e_pad, n, k = cand.shape
         vals = cand.transpose(0, 2, 1).reshape(e_pad * k, n)
         seg = jnp.repeat(graph.dst, k)
@@ -441,12 +384,21 @@ def run_dks_instrumented(
         return semiring.topk_merge(S, r)
 
     @jax.jit
+    def _phase_relax(S, changed):
+        return jax.vmap(_relax_one)(S, changed)
+
+    @jax.jit
+    def _phase_receive(S, cand):
+        return jax.vmap(_receive_one)(S, cand)
+
+    @jax.jit
     def _phase_combine(S):
-        return combine(S, cfg)
+        return jax.vmap(lambda s: combine(s, cfg))(S)
 
     @jax.jit
     def _phase_agg(S0, state, _aux):
-        return finish_superstep(graph, S0, state, cfg)
+        return jax.vmap(
+            lambda s0, st: finish_superstep(graph, s0, st, cfg))(S0, state)
 
     return host_instrumented_loop(
         graph, kw_masks, cfg, exit_hook,

@@ -17,6 +17,12 @@ Frontier overflow (> f_cap active nodes on some shard) raises the
 ``budget_hit`` flag — precisely the paper's Sec. 5.4 forced stop: the run
 finishes with the SPA bound instead of silently dropping messages.
 
+The relax kernel is **lane-batched** (:func:`relax_frontier_lanes`): the
+lane axis of the driver (:mod:`repro.core.driver`) lives *inside* the
+shard_map body, so a whole bucket of concurrent queries shares one
+frontier all-gather per superstep — shard_map under vmap (unsupported in
+jax) is never needed.  The single-query entry points are its 1-lane case.
+
 Combine stays node-local (node axis sharded over ALL mesh axes, keyword-set
 axis replicated), so it needs no collectives at all.
 
@@ -40,7 +46,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import INF, shardmap
-from repro.core import semiring, spa
+from repro.core import semiring
 from repro.core.dks import (
     DKSConfig,
     DKSState,
@@ -147,60 +153,79 @@ def _graph_mesh(graph: FrontierGraph):
     return mesh
 
 
-def relax_frontier(graph: FrontierGraph, S: jax.Array, changed: jax.Array,
-                   cfg: DKSConfig) -> tuple[jax.Array, jax.Array]:
-    """Frontier-compressed relax.  Returns (R[V, 2^m, K], overflow bool)."""
+def relax_frontier_lanes(graph: FrontierGraph, S: jax.Array,
+                         changed: jax.Array, cfg: DKSConfig,
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Lane-batched frontier-compressed relax — THE sharded relax kernel.
+
+    ``S``: f32[L, V, 2^m, K]; ``changed``: bool[L, V].  The lane axis
+    lives *inside* the ``shard_map`` body (lanes-per-shard): every lane's
+    frontier is packed per shard and exchanged in ONE all-gather, so a
+    batch of queries costs one device program and one collective per
+    superstep instead of vmap-over-shard_map (which jax does not
+    support).  Returns ``(R[L, V, 2^m, K], overflow bool[L])``.
+    """
     am = _graph_mesh(graph)
     axes = _mesh_axes(am)
     n_shards = graph.n_shards
     n_loc = graph.n_loc
     f_cap = min(n_loc, max(1, int(n_loc * cfg.frontier_frac)))
-    n_sets, k = S.shape[1], S.shape[2]
+    n_sets, k = S.shape[2], S.shape[3]
     f_tot = n_shards * f_cap
 
     def block(S_loc, changed_loc, src_g, dst_l, w, shard_arange):
-        S_loc = S_loc  # [n_loc, n_sets, k]
+        # S_loc: [L, n_loc, n_sets, k]; changed_loc: [L, n_loc]
         src_g = src_g[0]
         dst_l = dst_l[0]
         w = w[0]
         shard_id = shard_arange[0]
         offset = shard_id * n_loc
-        # Pack the local frontier (ids ascending; invalid slots OOB-marked).
-        idx = jnp.nonzero(changed_loc, size=f_cap, fill_value=n_loc)[0]
+        # Pack each lane's local frontier (ids ascending; invalid slots
+        # OOB-marked).  sort-of-keyed-arange == nonzero(size=f_cap,
+        # fill_value=n_loc), but lane-batched without a vmapped nonzero.
+        arange = jnp.arange(n_loc, dtype=jnp.int32)
+        key = jnp.where(changed_loc, arange[None, :], jnp.int32(n_loc))
+        idx = jnp.sort(key, axis=1)[:, :f_cap]              # [L, f_cap]
         fvalid = idx < n_loc
-        tab = jnp.where(fvalid[:, None, None],
-                        S_loc[jnp.minimum(idx, n_loc - 1)], INF)
+        tab = jnp.take_along_axis(
+            S_loc, jnp.minimum(idx, n_loc - 1)[:, :, None, None], axis=1)
+        tab = jnp.where(fvalid[:, :, None, None], tab, INF)
         gids = jnp.where(fvalid, idx + offset, jnp.int32(2**30) + idx)
-        overflow = jnp.sum(changed_loc) > f_cap
-        # Exchange only the frontier.
-        all_gids = jax.lax.all_gather(gids, axes, tiled=True)   # [F_tot]
-        all_tab = jax.lax.all_gather(tab, axes, tiled=True)     # [F_tot,S,K]
-        order = jnp.argsort(all_gids)
-        sg = all_gids[order]
-        st = all_tab[order]
-        # Relax local edges against the gathered frontier.
-        pos = jnp.searchsorted(sg, src_g)
-        pos = jnp.clip(pos, 0, f_tot - 1)
-        hit = (sg[pos] == src_g) & (src_g >= 0)
-        cand = st[pos] + w[:, None, None]
-        cand = jnp.where(hit[:, None, None], cand, INF)
-        cand = semiring.bump_to_inf(cand)
-        e_cap = cand.shape[0]
-        vals = cand.transpose(0, 2, 1).reshape(e_cap * k, n_sets)
-        seg = jnp.repeat(dst_l, k)
-        r_loc = semiring.segment_topk_min(vals, seg, n_loc, k)
+        overflow = jnp.sum(changed_loc, axis=1) > f_cap     # [L]
+        # Exchange only the frontiers — one collective for all lanes.
+        all_gids = jax.lax.all_gather(
+            gids, axes, tiled=True, axis=1)                 # [L, F_tot]
+        all_tab = jax.lax.all_gather(
+            tab, axes, tiled=True, axis=1)                  # [L,F_tot,S,K]
+
+        def relax_lane(gids_l, tab_l):
+            # Relax local edges against one lane's gathered frontier.
+            order = jnp.argsort(gids_l)
+            sg = gids_l[order]
+            st = tab_l[order]
+            pos = jnp.clip(jnp.searchsorted(sg, src_g), 0, f_tot - 1)
+            hit = (sg[pos] == src_g) & (src_g >= 0)
+            cand = st[pos] + w[:, None, None]
+            cand = jnp.where(hit[:, None, None], cand, INF)
+            cand = semiring.bump_to_inf(cand)
+            e_cap = cand.shape[0]
+            vals = cand.transpose(0, 2, 1).reshape(e_cap * k, n_sets)
+            seg = jnp.repeat(dst_l, k)
+            return semiring.segment_topk_min(vals, seg, n_loc, k)
+
+        r_loc = jax.vmap(relax_lane)(all_gids, all_tab)  # [L,n_loc,S,K]
         ov = jax.lax.pmax(overflow.astype(jnp.int32), axes)
         return r_loc, ov
 
     in_specs = (
-        P(axes, None, None),    # S (node axis over all mesh axes)
-        P(axes),                # changed
-        P(axes, None),          # edge_src [n_shards, e_cap]
-        P(axes, None),          # edge_dst_l
-        P(axes, None),          # edge_w
-        P(axes),                # shard ids
+        P(None, axes, None, None),  # S (node axis over all mesh axes)
+        P(None, axes),              # changed
+        P(axes, None),              # edge_src [n_shards, e_cap]
+        P(axes, None),              # edge_dst_l
+        P(axes, None),              # edge_w
+        P(axes),                    # shard ids
     )
-    out_specs = (P(axes, None, None), P())
+    out_specs = (P(None, axes, None, None), P(None))
     shard_arange = jnp.arange(n_shards, dtype=jnp.int32)
     r, ov = shardmap.shard_map(
         block, mesh=am, in_specs=in_specs, out_specs=out_specs,
@@ -210,15 +235,25 @@ def relax_frontier(graph: FrontierGraph, S: jax.Array, changed: jax.Array,
     return r, ov > 0
 
 
-def superstep_frontier(graph: FrontierGraph, state: DKSState,
-                       cfg: DKSConfig) -> DKSState:
-    """One superstep with frontier-compressed communication."""
+def relax_frontier(graph: FrontierGraph, S: jax.Array, changed: jax.Array,
+                   cfg: DKSConfig) -> tuple[jax.Array, jax.Array]:
+    """Frontier-compressed relax, single-query: the 1-lane case of
+    :func:`relax_frontier_lanes`.  Returns (R[V, 2^m, K], overflow bool)."""
+    r, ov = relax_frontier_lanes(graph, S[None], changed[None], cfg)
+    return r[0], ov[0]
+
+
+def frontier_tail(graph: FrontierGraph, state: DKSState, R: jax.Array,
+                  overflow: jax.Array, cfg: DKSConfig) -> DKSState:
+    """Everything after the frontier relax, per lane: message accounting,
+    top-K merge, subset combine, and the shared superstep finish (node
+    axis sharded over the mesh, keyword-set axis replicated — no
+    collectives).  The lane driver vmaps this over its lane axis."""
     S0 = state.S
     deg = graph.out_degree.astype(jnp.float32)
     n_bfs = jnp.sum(jnp.where(state.first_fire, deg, 0.0))
     n_deep = jnp.sum(jnp.where(state.changed & ~state.first_fire, deg, 0.0))
 
-    R, overflow = relax_frontier(graph, S0, state.changed, cfg)
     S1 = semiring.topk_merge(S0, R)
     S1 = combine(S1, cfg)
     nxt = dataclasses.replace(
@@ -227,6 +262,13 @@ def superstep_frontier(graph: FrontierGraph, state: DKSState,
         step=state.step + 1,
     )
     return finish_superstep(graph, S0, nxt, cfg, overflow=overflow)
+
+
+def superstep_frontier(graph: FrontierGraph, state: DKSState,
+                       cfg: DKSConfig) -> DKSState:
+    """One superstep with frontier-compressed communication (1 lane)."""
+    R, overflow = relax_frontier(graph, state.S, state.changed, cfg)
+    return frontier_tail(graph, state, R, overflow, cfg)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -256,16 +298,18 @@ def run_dks_frontier_instrumented(
 
     Phase attribution differs from the dense path where the sharded
     dataflow forces it to: the frontier pack + all-gather + edge relax are
-    fused inside one shard_map (:func:`relax_frontier`) and cannot be
-    timed apart, so that whole exchange lands in "send_bfs"; "receive" is
-    the per-node top-K merge of what arrived; "evaluate" (subset combine)
-    and "send_agg" (aggregators + exit check) match the dense buckets.
+    fused inside one shard_map (:func:`relax_frontier_lanes`) and cannot
+    be timed apart, so that whole exchange lands in "send_bfs"; "receive"
+    is the per-node top-K merge of what arrived; "evaluate" (subset
+    combine) and "send_agg" (aggregators + exit check) match the dense
+    buckets.  Like the dense runner this is a 1-lane instance of the
+    driver's instrumented host loop over the lane-batched phase kernels.
     """
-    from repro.core.dks import host_instrumented_loop
+    from repro.core.driver import host_instrumented_loop
 
     @jax.jit
     def _phase_relax(S, changed):
-        return relax_frontier(graph, S, changed, cfg)
+        return relax_frontier_lanes(graph, S, changed, cfg)
 
     @jax.jit
     def _phase_receive(S, aux):
@@ -274,12 +318,15 @@ def run_dks_frontier_instrumented(
 
     @jax.jit
     def _phase_combine(S):
-        return combine(S, cfg)
+        return jax.vmap(lambda s: combine(s, cfg))(S)
 
     @jax.jit
     def _phase_agg(S0, state, aux):
         _R, overflow = aux
-        return finish_superstep(graph, S0, state, cfg, overflow=overflow)
+        return jax.vmap(
+            lambda s0, st, ov: finish_superstep(graph, s0, st, cfg,
+                                                overflow=ov)
+        )(S0, state, overflow)
 
     return host_instrumented_loop(
         graph, kw_masks, cfg, exit_hook,

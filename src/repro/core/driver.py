@@ -1,0 +1,184 @@
+"""The lane-batched superstep driver — ONE step kernel for every executor.
+
+The paper's DKS algorithm is one Pregel superstep loop, and Pregel-style
+systems win by running many concurrent computations through a single
+synchronized step loop (Malewicz et al.; Giraph in the paper's own
+experiments).  This module is that structure: a :class:`DKSState` whose
+every field carries an explicit leading **lane** axis (``L`` concurrent
+queries), and one ``lane_superstep(graph, state, cfg) -> state`` kernel
+that advances all lanes together and is correct for both partitionings:
+
+- **dense** (:class:`~repro.graph.structure.DeviceGraph`): the dense
+  :func:`~repro.core.dks.superstep` vmapped over the lane axis;
+- **sharded** (:class:`~repro.core.dks_sharded.FrontierGraph`): the lane
+  axis lives *inside* the ``shard_map`` body (lanes-per-shard,
+  :func:`~repro.core.dks_sharded.relax_frontier_lanes`), so batching no
+  longer needs vmap-over-shard_map — one device program relaxes every
+  lane's frontier in one collective exchange.
+
+Per-lane exit flags (``done`` / ``budget_hit`` / ``capped``) freeze lanes
+individually (:func:`freeze_lanes`): a lane that proves its exit stops
+accumulating counters while the driver keeps stepping the rest.  Every
+engine surface is a thin loop over this driver — ``query`` is the
+degenerate 1-lane case, ``query_batch`` a fused while-loop over a bucket
+of lanes, streaming/deadline surfaces host-step it — so there is exactly
+one superstep formulation to test, shard, and optimize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dks import (
+    DKSConfig,
+    DKSState,
+    freeze_finished,
+    init_state,
+    superstep,
+)
+
+
+def is_frontier_graph(graph: Any) -> bool:
+    """Sharded (FrontierGraph) vs dense (DeviceGraph) residency, without
+    importing dks_sharded at module load (it imports from dks)."""
+    return hasattr(graph, "edge_dst_l")
+
+
+def lane_view(state: DKSState, i: int) -> DKSState:
+    """One lane of a lane-batched state, as an unbatched DKSState."""
+    return jax.tree_util.tree_map(lambda x: x[i], state)
+
+
+def lane_init(graph: Any, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState:
+    """Superstep 0 for a batch of lanes.  ``kw_masks``: bool[L, m, V]."""
+    return jax.vmap(lambda m: init_state(graph, m, cfg))(kw_masks)
+
+
+# Per-lane freeze: lanes whose exit criterion fired keep their state and
+# counters while the driver steps the rest (rank-aware select on ``done``).
+freeze_lanes = freeze_finished
+
+
+def lane_superstep(graph: Any, state: DKSState, cfg: DKSConfig) -> DKSState:
+    """One Pregel superstep for every lane at once, finished lanes frozen.
+
+    The single kernel behind every engine executor: dense lanes ride a
+    vmapped :func:`~repro.core.dks.superstep`; sharded lanes share one
+    frontier exchange inside the ``shard_map``
+    (:func:`~repro.core.dks_sharded.relax_frontier_lanes`) with the
+    node-local tail vmapped over lanes.
+    """
+    if is_frontier_graph(graph):
+        from repro.core.dks_sharded import frontier_tail, relax_frontier_lanes
+
+        R, overflow = relax_frontier_lanes(graph, state.S, state.changed, cfg)
+        nxt = jax.vmap(
+            lambda st, r, ov: frontier_tail(graph, st, r, ov, cfg)
+        )(state, R, overflow)
+    else:
+        nxt = jax.vmap(lambda st: superstep(graph, st, cfg))(state)
+    if state.done.shape[0] == 1:
+        # Degenerate 1-lane case (engine.query, streams): every driving
+        # loop stops at done, so the body never runs on a finished lane —
+        # the freeze select would be a pure full-state where() per
+        # superstep that XLA cannot fold (done is dynamic).  Lane count
+        # is static at trace time, so this branch costs nothing.
+        return nxt
+    return freeze_lanes(state, nxt)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_lanes(graph: Any, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState:
+    """Full lane-batched DKS run as one jitted while-loop (the fused
+    driver): steps until every lane's exit criterion fires.  Works on both
+    partitionings; 1 lane is the single-query production path."""
+    state = lane_init(graph, kw_masks, cfg)
+    return jax.lax.while_loop(
+        lambda st: ~jnp.all(st.done),
+        lambda st: lane_superstep(graph, st, cfg),
+        state)
+
+
+# --------------------------------------------------------------------------
+# Instrumented host loop (per-phase wall times, paper Table 1)
+# --------------------------------------------------------------------------
+
+
+def host_instrumented_loop(
+    graph: Any,
+    kw_masks: jax.Array,
+    cfg: DKSConfig,
+    exit_hook: Callable[[DKSState], bool] | None,
+    phase_relax: Callable,
+    phase_receive: Callable,
+    phase_combine: Callable,
+    phase_agg: Callable,
+) -> tuple[DKSState, dict[str, Any]]:
+    """The host-driven per-phase superstep loop shared by the dense and
+    sharded instrumented runners — one copy of the timing buckets, message
+    accounting, history rows, and ``exit_hook`` contract.  The phases are
+    the driver's lane-batched kernels run at ``L = 1`` (``kw_masks``:
+    bool[m, V], un-batched; the final state is returned un-batched too).
+
+    Phase signatures (each jitted by the caller, timed here; all on
+    lane-batched arrays):
+      phase_relax(S, changed) -> aux           "send_bfs"
+      phase_receive(S, aux) -> S1              "receive"
+      phase_combine(S1) -> S1                  "evaluate"
+      phase_agg(S0, state, aux) -> state       "send_agg"
+    ``aux`` is whatever relax must hand forward (per-edge candidates on the
+    dense path; (R, overflow) on the sharded path).
+
+    ``exit_hook`` sees an *un-batched* :class:`DKSState` (lane 0), so
+    host-side criteria like ``fagin.paper_exit_hook`` keep working.
+    """
+    timings = {"send_bfs": 0.0, "receive": 0.0, "evaluate": 0.0,
+               "send_agg": 0.0}
+    state = jax.block_until_ready(lane_init(graph, kw_masks[None], cfg))
+    deg = graph.out_degree.astype(jnp.float32)
+    history = []
+    while not bool(state.done[0]):
+        n_bfs = jnp.sum(jnp.where(state.first_fire, deg, 0.0), axis=1)
+        n_deep = jnp.sum(
+            jnp.where(state.changed & ~state.first_fire, deg, 0.0), axis=1)
+
+        t0 = time.perf_counter()
+        aux = jax.block_until_ready(phase_relax(state.S, state.changed))
+        t1 = time.perf_counter()
+        S1 = jax.block_until_ready(phase_receive(state.S, aux))
+        t2 = time.perf_counter()
+        S1 = jax.block_until_ready(phase_combine(S1))
+        t3 = time.perf_counter()
+        S0 = state.S
+        state = dataclasses.replace(
+            state,
+            S=S1,
+            msgs_bfs=state.msgs_bfs + n_bfs,
+            msgs_deep=state.msgs_deep + n_deep,
+            step=state.step + 1,
+        )
+        state = jax.block_until_ready(phase_agg(S0, state, aux))
+        t4 = time.perf_counter()
+
+        timings["send_bfs"] += t1 - t0
+        timings["receive"] += t2 - t1
+        timings["evaluate"] += t3 - t2
+        timings["send_agg"] += t4 - t3
+        lane = lane_view(state, 0)
+        history.append(
+            dict(step=int(lane.step), frontier=int(jnp.sum(lane.changed)),
+                 msgs_bfs=float(lane.msgs_bfs),
+                 msgs_deep=float(lane.msgs_deep),
+                 best=float(lane.topk_w[0]))
+        )
+        if exit_hook is not None and exit_hook(lane):
+            state = dataclasses.replace(
+                state, done=jnp.ones_like(state.done))
+    info = dict(timings=timings, history=history)
+    return lane_view(state, 0), info

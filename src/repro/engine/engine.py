@@ -11,29 +11,42 @@ among four overlapping entry points (``run_dks``, ``run_dks_batched``,
   ``shard_map`` mesh path, built once and reused by every query;
 - **the inverted index** — token -> keyword-node masks, padded to the
   device layout (no ``np.pad`` dance at call sites);
-- **a compiled-executable cache** — one jitted while-loop per
-  ``(DKSConfig, partition, kind)``; repeated queries with the same
+- **the lane-batched driver** — every surface is a thin loop over ONE
+  step kernel (:mod:`repro.core.driver`): a :class:`DKSState` with a
+  leading lane axis, advanced by ``lane_superstep`` on either
+  partitioning (for "sharded" the lane axis lives *inside* the
+  ``shard_map`` body, so a batch of queries costs one device program and
+  one collective per superstep — no vmap-over-shard_map needed);
+- **a compiled-executable cache** — per ``(DKSConfig, partition)`` there
+  are exactly two compiled things: the **fused** driver (the whole
+  while-loop as one device program, used by ``query`` — the degenerate
+  1-lane case — and ``query_batch``) and the **stepwise** driver (an
+  ``(init, superstep)`` pair the host loops over, used by the streaming,
+  deadline, and instrumented surfaces).  Repeated queries with the same
   ``(m, k)`` shape reuse the compiled program with zero re-tracing
   (asserted by tests via :meth:`QueryEngine.trace_count`).
 
-Three query surfaces::
+Query surfaces::
 
     engine = QueryEngine.build(graph, tokens=tokens)
     result = engine.query(["paris", "piano"], k=3)     # ranked AnswerTrees
-    results = engine.query_batch(queries, k=1)          # m-bucketed vmap
+    results = engine.query_batch(queries, k=1)          # m-bucketed lanes
     for upd in engine.query_stream(query, k=1):         # per-superstep
         ...  # upd.weights + upd.spa_ratio: answers with a sound bound
+    engine.query_deadline_batch(queries, deadline_s=.05)  # shared driver
 
 ``query_stream`` makes the paper's early-termination guarantee (Sec. 5.4 /
 Fig. 12) a first-class API: after every superstep the caller sees the
 current best answers together with a monotonically tightening lower bound
 on the optimum, so it can stop as soon as the approximation suffices.
+``query_deadline_batch`` extends that to a *bucket* of same-shape queries
+riding one driver: lanes freeze individually as they prove exits, and on
+expiry every lane gets its own best-so-far answer with per-lane bounds.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import itertools
 import time
 from pathlib import Path
@@ -44,14 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import INF, shardmap
-from repro.core.dks import (
-    DKSConfig,
-    DKSState,
-    freeze_finished,
-    init_state,
-    run_dks_instrumented,
-    superstep,
-)
+from repro.core.dks import DKSConfig, DKSState, run_dks_instrumented
+from repro.core.driver import lane_init, lane_superstep, lane_view
 from repro.core.reconstruct import extract_answers
 from repro.core.spa import nu_lower_bound, spa_cover_dp, spa_ratio
 from repro.engine.policy import ExecutionPolicy
@@ -194,10 +201,21 @@ class QueryEngine:
     def v_pad(self) -> int:
         return self.device_graph.v_pad
 
-    def trace_count(self, m: int, k: int, kind: str = "single",
+    # Executor kinds, collapsed by the lane driver: "fused" (the whole
+    # while-loop as one device program; query and query_batch) and
+    # "stepwise" ((init, superstep) pair the host loops over; streaming
+    # and deadline surfaces).  Legacy kind names from the four-executor
+    # era keep resolving for callers of trace_count.
+    _KIND_ALIASES = {"single": "fused", "batch": "fused",
+                     "stream": "stepwise", "driver": "stepwise"}
+
+    def trace_count(self, m: int, k: int, kind: str = "fused",
                     **overrides) -> int:
         """How many times the executable for this query shape was traced.
-        1 after any number of same-shape queries = the cache works."""
+        1 after any number of same-shape *and same-lane-count* queries =
+        the cache works (a new lane count is a new input shape, so it
+        re-traces once, like any jit)."""
+        kind = self._KIND_ALIASES.get(kind, kind)
         key = (self._config(m, k, **overrides), self.policy.partition, kind)
         return self._trace_counts.get(key, 0)
 
@@ -273,13 +291,14 @@ class QueryEngine:
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
         masks, unmatched = self._masks(keywords, strict)
-        fn = self._executable(cfg, "single")
+        fn = self._executable(cfg, "fused")
         t0 = time.perf_counter()
-        state = self._execute(fn, self.device_graph, jnp.asarray(masks))
+        # The degenerate 1-lane case of the lane driver.
+        states = self._execute(fn, self.device_graph, jnp.asarray(masks[None]))
         dt = time.perf_counter() - t0
-        return self._make_result(keywords, masks, state, cfg, dt, extract,
-                                 keep_state, unmatched=unmatched,
-                                 own_time_s=dt)
+        return self._make_result(keywords, masks, lane_view(states, 0), cfg,
+                                 dt, extract, keep_state,
+                                 unmatched=unmatched, own_time_s=dt)
 
     def query_batch(
         self,
@@ -297,26 +316,21 @@ class QueryEngine:
 
         Queries are bucketed by keyword count ``m`` (the table shape is
         ``[V, 2^m, K]``, so only same-``m`` queries share an executable);
-        each bucket runs as one vmapped device program.  Results come back
-        in input order; ``wall_time_s`` is the shared bucket time.  On
-        partition="single" that is the bucket's device execution time; the
-        sharded path serves a bucket as sequential single-query runs
-        (shard_map under vmap is unsupported) and reports the bucket's
-        total serve time — device execution plus per-query host work such
-        as answer extraction — on each of its results.  Within a bucket
-        the value is identical either way; across partitionings the two
-        quantities are not directly comparable.
-
-        ``own_time_s`` carries each query's individual serve time where one
-        exists: on the sequential sharded path every result records its own
-        run's time (so serving stats stay honest — the shared bucket total
-        would overbill every query); inside a vmapped bucket it is None.
+        each bucket rides the fused lane driver as ONE device program —
+        on both partitionings.  On partition="sharded" the lanes live
+        inside the ``shard_map`` body, so the whole bucket shares a
+        single frontier exchange per superstep instead of degrading to
+        sequential single-query runs.  Results come back in input order;
+        ``wall_time_s`` is the shared bucket device time, and
+        ``own_time_s`` is None inside a bucket (lanes advance in
+        lockstep — there is no honest per-query time to report).
 
         ``n_real``: serving hook — queries at index >= ``n_real`` are
-        padding lanes (added by a serving layer to stabilize the vmapped
-        batch shape).  They still ride in their bucket's device program,
-        but skip host-side result construction (answer-tree extraction is
-        O(V·2^m) per lane) and come back as None.
+        padding lanes (added by a serving layer to stabilize the lane
+        count the driver compiles for).  They still ride in their
+        bucket's device program, but skip host-side result construction
+        (answer-tree extraction is O(V·2^m) per lane) and come back as
+        None.
         """
         n_real = len(queries) if n_real is None else n_real
         results: list[QueryResult | None] = [None] * len(queries)
@@ -324,34 +338,19 @@ class QueryEngine:
         for i, q in enumerate(queries):
             buckets.setdefault(len(q), []).append(i)
         for m, idxs in sorted(buckets.items()):
-            if self.policy.partition == "sharded":
-                # shard_map under vmap is unsupported; serve sequentially,
-                # then stamp the shared bucket time per the contract above.
-                # Padding lanes would be whole wasted runs here: skip them.
-                real = [i for i in idxs if i < n_real]
-                t0 = time.perf_counter()
-                bucket = [self.query(queries[i], k=k, extract=extract,
-                                     keep_state=keep_state, strict=strict,
-                                     **overrides)
-                          for i in real]
-                dt = time.perf_counter() - t0
-                for i, res in zip(real, bucket):
-                    results[i] = dataclasses.replace(res, wall_time_s=dt)
-                continue
             cfg = self._config(m, k, **overrides)
             pairs = [self._masks(list(queries[i]), strict) for i in idxs]
             masks = np.stack([p[0] for p in pairs])
-            fn = self._executable(cfg, "batch")
+            fn = self._executable(cfg, "fused")
             t0 = time.perf_counter()
             states = self._execute(fn, self.device_graph, jnp.asarray(masks))
             dt = time.perf_counter() - t0
             for bi, i in enumerate(idxs):
                 if i >= n_real:
                     continue
-                st = jax.tree_util.tree_map(lambda x, bi=bi: x[bi], states)
                 results[i] = self._make_result(
-                    list(queries[i]), masks[bi], st, cfg, dt, extract,
-                    keep_state, unmatched=pairs[bi][1])
+                    list(queries[i]), masks[bi], lane_view(states, bi), cfg,
+                    dt, extract, keep_state, unmatched=pairs[bi][1])
         return results  # type: ignore[return-value]
 
     def query_stream(
@@ -463,46 +462,115 @@ class QueryEngine:
         deadline expired before the run's own exit criterion).  On a
         proven exit both bounds equal the certified best answer and the
         cover DP is skipped entirely.
+
+        The 1-lane case of :meth:`query_deadline_batch`.
         """
-        keywords = list(keywords)
-        cfg = self._config(len(keywords), k, **overrides)
-        masks, unmatched = self._masks(keywords, strict)
+        out = self.query_deadline_batch(
+            [list(keywords)], k, deadline_s=deadline_s, extract=extract,
+            keep_state=keep_state, strict=strict, **overrides)
+        assert out[0] is not None
+        return out[0]
+
+    def query_deadline_batch(
+        self,
+        queries: Sequence[Sequence],
+        k: int = 1,
+        *,
+        deadline_s: float,
+        extract: bool = True,
+        keep_state: bool = False,
+        strict: bool = True,
+        n_real: int | None = None,
+        **overrides,
+    ) -> list[tuple[QueryResult, dict[str, Any]] | None]:
+        """Serve a BUCKET of same-shape queries under one shared wall-clock
+        budget, riding a single lane driver.
+
+        All queries must share the keyword count ``m`` (they share one
+        compiled driver — the serving layer's shape buckets guarantee
+        this).  The driver steps every lane together; a lane whose exit
+        criterion fires freezes individually (its counters and answer
+        stop with it) while the driver keeps stepping the rest.  When the
+        budget expires, every still-running lane is interrupted at the
+        same superstep and gets its own best-so-far answer with
+        *per-lane* bounds — the paper's early-termination guarantee
+        (Sec. 5.4), amortized over concurrent requests: N same-budget
+        queries cost ~max supersteps instead of the sum.
+
+        Returns one ``(result, info)`` per query (input order), with
+        ``info`` as in :meth:`query_deadline` plus ``driver_supersteps``
+        (the shared driver's step count — compare against the sum of
+        per-lane ``result.supersteps`` to see the sharing win).
+        ``result.own_time_s`` is the lane's own serve time: the wall
+        clock when its exit was observed, or the full bucket time if it
+        ran to the deadline.  ``n_real``: as in :meth:`query_batch`,
+        queries at index >= ``n_real`` are padding lanes and come back as
+        None.
+        """
+        queries = [list(q) for q in queries]
+        if not queries:
+            return []
+        ms = {len(q) for q in queries}
+        if len(ms) != 1:
+            raise ValueError(
+                f"a deadline bucket shares one driver: all queries must "
+                f"have the same keyword count (got m={sorted(ms)})")
+        n_real = len(queries) if n_real is None else n_real
+        cfg = self._config(ms.pop(), k, **overrides)
+        pairs = [self._masks(q, strict) for q in queries]
+        masks = np.stack([p[0] for p in pairs])
+        init_fn, step_fn = self._executable(cfg, "stepwise")
         t0 = time.perf_counter()
         deadline_t = t0 + max(deadline_s, 0.0)
-        init_fn, step_fn = self._executable(cfg, "stream")
         state = self._execute(init_fn, self.device_graph, jnp.asarray(masks))
-        interrupted = False
+        own_t: list[float | None] = [None] * len(queries)
+        driver_steps = 0
         while True:
-            if bool(state.done) or int(state.step) >= cfg.max_supersteps:
-                break
-            if time.perf_counter() >= deadline_t:
-                interrupted = True
+            done = np.asarray(state.done)
+            now = time.perf_counter()
+            for i in range(n_real):
+                if done[i] and own_t[i] is None:
+                    # The lane proved its exit here: that is ITS serve
+                    # time, even while the driver keeps stepping others.
+                    own_t[i] = now - t0
+            if done[:n_real].all() or now >= deadline_t:
                 break
             state = self._execute(step_fn, self.device_graph, state)
-        forced = bool(state.budget_hit) or bool(state.capped)
-        if interrupted or forced:
-            bounds = self._state_bounds(state, cfg)
-            spa = bounds.spa
-            sound_lb = bounds.sound_lb
-            # Reported bound folds in the sound facts, so it can never
-            # sit below the guarantee it accompanies.
-            opt_lb = max(bounds.opt_lb, sound_lb)
-        else:
-            # Proven exit: the run certified its best answer — that IS
-            # the bound, and the O(3^m) cover DP would be dead weight.
-            spa = None
-            opt_lb = sound_lb = min(float(state.topk_w[0]), INF)
+            driver_steps += 1
         dt = time.perf_counter() - t0
-        res = self._make_result(keywords, masks, state, cfg, dt, extract,
-                                keep_state, unmatched=unmatched,
-                                own_time_s=dt, interrupted=interrupted,
-                                spa_hint=spa)
-        info = dict(
-            opt_lower_bound=min(opt_lb, INF),
-            sound_opt_lower_bound=min(sound_lb, INF),
-            interrupted=interrupted,
-        )
-        return res, info
+        out: list[tuple[QueryResult, dict[str, Any]] | None] = []
+        for i, q in enumerate(queries):
+            if i >= n_real:
+                out.append(None)
+                continue
+            lane = lane_view(state, i)
+            interrupted = not bool(lane.done)
+            forced = bool(lane.budget_hit) or bool(lane.capped)
+            if interrupted or forced:
+                bounds = self._state_bounds(lane, cfg)
+                spa = bounds.spa
+                sound_lb = bounds.sound_lb
+                # Reported bound folds in the sound facts, so it can
+                # never sit below the guarantee it accompanies.
+                opt_lb = max(bounds.opt_lb, sound_lb)
+            else:
+                # Proven exit: the run certified its best answer — that
+                # IS the bound, and the O(3^m) cover DP is dead weight.
+                spa = None
+                opt_lb = sound_lb = min(float(lane.topk_w[0]), INF)
+            res = self._make_result(
+                q, masks[i], lane, cfg, dt, extract, keep_state,
+                unmatched=pairs[i][1],
+                own_time_s=own_t[i] if own_t[i] is not None else dt,
+                interrupted=interrupted, spa_hint=spa)
+            info = dict(
+                opt_lower_bound=min(opt_lb, INF),
+                sound_opt_lower_bound=min(sound_lb, INF),
+                interrupted=interrupted,
+                driver_supersteps=driver_steps,
+            )
+            out.append((res, info))
+        return out
 
     def _state_bounds(self, state: DKSState, cfg: DKSConfig):
         """One state's lower-bound facts, shared by the stream and
@@ -534,12 +602,16 @@ class QueryEngine:
 
     def _stream(self, cfg: DKSConfig, masks: np.ndarray,
                 unmatched: tuple = ()):
-        """(state, StreamUpdate) pairs, one per superstep (incl. init)."""
-        init_fn, step_fn = self._executable(cfg, "stream")
-        state = self._execute(init_fn, self.device_graph, jnp.asarray(masks))
+        """(state, StreamUpdate) pairs, one per superstep (incl. init) —
+        a host loop over the 1-lane stepwise driver.  Yields un-batched
+        lane views, so result construction stays lane-free."""
+        init_fn, step_fn = self._executable(cfg, "stepwise")
+        states = self._execute(init_fn, self.device_graph,
+                               jnp.asarray(masks[None]))
         opt_lb = 0.0
         sound_lb = 0.0
         while True:
+            state = lane_view(states, 0)
             bounds = self._state_bounds(state, cfg)
             best = bounds.best
             done = bool(state.done)
@@ -568,7 +640,7 @@ class QueryEngine:
             )
             if done or int(state.step) >= cfg.max_supersteps:
                 return
-            state = self._execute(step_fn, self.device_graph, state)
+            states = self._execute(step_fn, self.device_graph, states)
 
     def query_instrumented(
         self,
@@ -650,54 +722,53 @@ class QueryEngine:
             self.index.missing_tokens(keywords))
         return masks, unmatched
 
-    def _step_fn(self):
-        if self.policy.partition == "sharded":
-            from repro.core.dks_sharded import superstep_frontier
-            return superstep_frontier
-        return superstep
-
     def _executable(self, cfg: DKSConfig, kind: str):
         """Fetch-or-compile the executor for a query shape.
 
-        ``kind``: "single" (jitted while-loop), "batch" (vmapped while-loop
-        over the query axis), "stream" ((init, superstep) jitted pair).
+        The four executor kinds of the pre-driver engine (single-query
+        while-loop, vmapped batch, host-stepped stream, sequential
+        sharded fallback) collapse to the lane driver plus a loop policy:
+
+        - "fused": the whole driver as one jitted while-loop over the
+          lane axis (``query`` runs it with 1 lane, ``query_batch`` with
+          a bucket of lanes; on either partitioning it is ONE device
+          execution per call);
+        - "stepwise": the ``(init, superstep)`` pair of the same kernel,
+          for surfaces that need host control between supersteps
+          (streaming, deadline buckets).
+
         The trace counter increments at trace time only, so a cache hit
         leaves it untouched — that is the no-re-trace guarantee tests
-        assert.
+        assert.  (jit itself re-traces per lane count, as for any new
+        input shape; a serving layer pads buckets to keep the lane-count
+        alphabet small.)
         """
+        kind = self._KIND_ALIASES.get(kind, kind)
         key = (cfg, self.policy.partition, kind)
         fn = self._executables.get(key)
         if fn is not None:
             return fn
-        step = self._step_fn()
 
-        def _run(graph, masks, _freeze=False):
-            self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
-            state = init_state(graph, masks, cfg)
+        if kind == "fused":
+            def _run(graph, masks):
+                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+                state = lane_init(graph, masks, cfg)
+                return jax.lax.while_loop(
+                    lambda st: ~jnp.all(st.done),
+                    lambda st: lane_superstep(graph, st, cfg),
+                    state)
 
-            def body(st):
-                nxt = step(graph, st, cfg)
-                # Batched loops step every lane until the whole batch is
-                # done; freeze finished lanes so counters stop with them.
-                return freeze_finished(st, nxt) if _freeze else nxt
-
-            return jax.lax.while_loop(lambda st: ~st.done, body, state)
-
-        if kind == "single":
             fn = jax.jit(_run)
-        elif kind == "batch":
-            fn = jax.jit(jax.vmap(
-                functools.partial(_run, _freeze=True), in_axes=(None, 0)))
-        elif kind == "stream":
+        elif kind == "stepwise":
             def _init(graph, masks):
                 self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
-                return init_state(graph, masks, cfg)
+                return lane_init(graph, masks, cfg)
 
             def _step(graph, st):
                 self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
-                return step(graph, st, cfg)
+                return lane_superstep(graph, st, cfg)
 
-            # A cached stream pair counts 2 traces (init + superstep).
+            # A cached stepwise pair counts 2 traces (init + superstep).
             fn = (jax.jit(_init), jax.jit(_step))
         else:
             raise ValueError(f"unknown executable kind {kind!r}")

@@ -51,12 +51,14 @@ class QueryResult:
                      queries: the shared bucket time).
       own_time_s:    THIS query's individual serve time, where one is
                      measurable: equal to ``wall_time_s`` for single-query
-                     surfaces, the query's own serve time on the sharded
-                     ``query_batch`` path (which runs a bucket's queries
-                     sequentially — serving stats should bill each query
-                     its own time, not the shared bucket total), and None
-                     inside a vmapped bucket (the lanes execute as one
-                     device program, so per-query time does not exist).
+                     surfaces; on ``query_deadline_batch`` the wall clock
+                     at which the lane's exit was observed (or the full
+                     bucket time if it ran to the deadline — lanes freeze
+                     individually, so this is the honest per-lane bill);
+                     and None inside a ``query_batch`` bucket on either
+                     partitioning (the lanes advance in lockstep through
+                     one fused device program, so per-query time does not
+                     exist).
       state:         the raw final :class:`DKSState` (device arrays) when
                      the query was made with ``keep_state=True``; None
                      otherwise, so served results don't pin the dense

@@ -15,10 +15,12 @@ def mid_df_tokens(index: "InvertedIndex", lo: int = 2,
     """df-sorted vocabulary slice with ``lo <= df <= hi`` — the pool the
     CLIs auto-pick query keywords from (paper Sec. 7.1 samples across the
     df spectrum).  Falls back to the full df-sorted vocabulary when the
-    band is empty, so tiny test graphs still yield queries."""
-    vocab = sorted(index.vocabulary(), key=index.df)
-    mid = [t for t in vocab if lo <= index.df(t) <= hi]
-    return mid or vocab
+    band is empty, so tiny test graphs still yield queries.  Uses the
+    bulk :meth:`InvertedIndex.token_dfs` enumeration (one pass; on a
+    lazy artifact index, no per-token binary searches)."""
+    pairs = sorted(index.token_dfs(), key=lambda p: p[1])
+    mid = [t for t, d in pairs if lo <= d <= hi]
+    return mid or [t for t, _ in pairs]
 
 
 class InvertedIndex:
@@ -100,6 +102,14 @@ class InvertedIndex:
     def df(self, token) -> int:
         return len(self.lookup(token))
 
+    def token_dfs(self) -> list[tuple]:
+        """All ``(token, df)`` pairs in one pass — the bulk form callers
+        enumerating the vocabulary should use instead of a per-token
+        ``df()`` loop (the artifact-backed lazy index overrides this to
+        read posting lengths straight off the offsets table, where a
+        per-token ``df()`` would be a binary search each)."""
+        return [(tok, len(post)) for tok, post in self._frozen.items()]
+
     # ------------------------------------------------------------------
     # Persistence (repro.store artifact hooks)
     # ------------------------------------------------------------------
@@ -111,7 +121,11 @@ class InvertedIndex:
         token ``i``'s posting list is ``nodes[offsets[i]:offsets[i+1]]``
         (int32 node ids, sorted unique).  This is the layout
         :mod:`repro.store` persists — and the one :meth:`from_postings`
-        rebuilds from without re-tokenizing anything.
+        rebuilds from without re-tokenizing anything.  The *sorted* token
+        order is load-bearing: the artifact reader
+        (``repro.store.LazyArtifactIndex``) resolves tokens by binary
+        search over the persisted table, so artifact open stays O(1) in
+        vocabulary size.
         """
         tokens = sorted(self._frozen)
         offsets = np.zeros(len(tokens) + 1, np.int64)

@@ -9,8 +9,10 @@ against the direct single-query engine.
 ``--smoke`` shrinks the run to CI size and *asserts* the serving
 invariants: mean batch-fill > 1 (the micro-batcher coalesced concurrent
 clients), warm cache-hit rate > 0 (the trace repeats, the cache caught
-it), and every served answer either matches the direct engine result or
-carries ``approximate=True`` with a valid SPA lower bound.
+it), at least one multi-lane deadline bucket (same-budget requests rode
+one stepwise lane driver and shared supersteps), and every served answer
+either matches the direct engine result or carries ``approximate=True``
+with a valid SPA lower bound.
 """
 
 from __future__ import annotations
@@ -144,9 +146,25 @@ def main() -> int:
         warm = stats.cache_hits + stats.single_flight_hits
         assert warm > 0, "repeated queries neither hit the cache nor " \
             "attached to an in-flight run"
+        if args.deadline_frac > 0:
+            # The trace's same-budget deadline bursts must have ridden a
+            # shared lane driver: mean fill > 1 implies at least one
+            # multi-lane deadline bucket (every dispatch serves >= 1).
+            assert stats.deadline_dispatches > 0, "no deadline dispatches"
+            assert stats.mean_deadline_fill > 1.0, (
+                f"deadline requests never coalesced: fill "
+                f"{stats.mean_deadline_fill} over "
+                f"{stats.deadline_dispatches} dispatches")
+            assert stats.deadline_driver_supersteps <= \
+                stats.deadline_lane_supersteps, "driver stepped more " \
+                "than its lanes billed — freeze accounting is broken"
         print("smoke invariants hold: batch-fill > 1, "
               f"warm reuse > 0 ({stats.cache_hits} cache hits + "
-              f"{stats.single_flight_hits} single-flight)")
+              f"{stats.single_flight_hits} single-flight), "
+              f"deadline fill {stats.mean_deadline_fill:.2f} over "
+              f"{stats.deadline_dispatches} shared drivers "
+              f"({stats.deadline_driver_supersteps} driver vs "
+              f"{stats.deadline_lane_supersteps} lane supersteps)")
     return 0
 
 

@@ -10,8 +10,10 @@ has waited ``max_wait_ms`` (the classic latency/throughput knob pair).
 Everything executes inline on the single dispatcher thread: client threads
 only ever touch the queue and their futures, so jax sees one caller and the
 service needs no further locking around device work.  Deadline-bounded
-requests never wait in a bucket — a deadline is per-request, so they are
-handed to the dispatch function immediately as singletons.
+requests coalesce too — into buckets keyed by shape *and* budget
+(``deadline_ms``), so same-budget requests ride one lane driver and share
+supersteps; their admission window is capped at a fraction of the budget
+so queue wait cannot eat the budget it counts against.
 """
 
 from __future__ import annotations
@@ -44,14 +46,19 @@ class Request:
     t_submit: float
     engine: Any = None
     deadline_t: float | None = None
+    deadline_ms: float | None = None
     cache_key: Hashable = None
 
     @property
     def shape_key(self) -> tuple:
         # The engine build is part of the shape: requests admitted under
-        # different builds must never share a dispatch.
+        # different builds must never share a dispatch.  The *budget*
+        # (deadline_ms, not the absolute deadline) is part of it too:
+        # same-budget requests ride one lane driver and stop together;
+        # deadline-less requests (None) bucket separately.
         version = self.engine.version if self.engine is not None else None
-        return (len(self.keywords), self.k, self.overrides, version)
+        return (len(self.keywords), self.k, self.overrides, version,
+                self.deadline_ms)
 
 
 _STOP = object()
@@ -61,9 +68,10 @@ class MicroBatcher:
     """Admission queue + dispatcher thread.
 
     ``dispatch`` is called on the dispatcher thread with a non-empty list
-    of same-shape requests (or a deadline singleton) and must resolve every
-    request's future — including on error.  :class:`DKSService` provides
-    it; the batcher owns only admission, grouping, and timing.
+    of same-shape (and, for deadline requests, same-budget) requests and
+    must resolve every request's future — including on error.
+    :class:`DKSService` provides it; the batcher owns only admission,
+    grouping, and timing.
     """
 
     def __init__(self, dispatch: Callable[[list[Request]], None], *,
@@ -178,9 +186,6 @@ class MicroBatcher:
             for req in drained:
                 if req is _STOP:
                     stopping = True
-                elif req.deadline_t is not None:
-                    # Deadline requests dispatch immediately, solo.
-                    self._safe_dispatch([req])
                 else:
                     pending.setdefault(req.shape_key, []).append(req)
             now = time.perf_counter()
@@ -190,7 +195,8 @@ class MicroBatcher:
                     self._safe_dispatch(group[: self.max_batch])
                     del group[: self.max_batch]
                 if group and (stopping or
-                              now - group[0].t_submit >= self.max_wait_s):
+                              now - group[0].t_submit
+                              >= self._window_s(group[0])):
                     self._safe_dispatch(group)
                     group = []
                 if group:
@@ -200,13 +206,27 @@ class MicroBatcher:
             if stopping and not pending:
                 return
 
+    def _window_s(self, req: Request) -> float:
+        """Admission window for a request's bucket.  Deadline buckets cap
+        it at a fraction of the budget — the wait counts against the very
+        deadline it is coalescing for, so a bucket must dispatch with
+        most of its budget intact even when ``max_wait_ms`` is larger.
+        A 1 ms floor keeps near-zero budgets coalescing: such a request
+        expires either way, and concurrent identical-budget requests
+        submitted back-to-back must not race the dispatcher into
+        singleton buckets."""
+        if req.deadline_ms is None:
+            return self.max_wait_s
+        return min(self.max_wait_s,
+                   max(1e-3, 0.2 * req.deadline_ms / 1e3))
+
     def _next_timeout(self, pending: dict[tuple, list[Request]]):
         """Block forever when idle; otherwise wake for the nearest bucket
         window expiry (0 = poll without blocking)."""
         if not pending:
             return None
         now = time.perf_counter()
-        nearest = min(group[0].t_submit + self.max_wait_s
+        nearest = min(group[0].t_submit + self._window_s(group[0])
                       for group in pending.values())
         remaining = nearest - now
         return max(remaining, 0.0) if remaining > 1e-4 else 0

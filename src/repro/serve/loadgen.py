@@ -34,6 +34,7 @@ class TraceRequest:
 def make_trace(index, n_requests: int = 48, *, unique: int = 8,
                m_choices: tuple = (2, 3), k: int = 1,
                deadline_frac: float = 0.0, deadline_ms: float = 75.0,
+               deadline_burst: int = 4,
                seed: int = 0) -> list[TraceRequest]:
     """Synthetic request trace over an :class:`InvertedIndex`'s vocabulary.
 
@@ -41,12 +42,19 @@ def make_trace(index, n_requests: int = 48, *, unique: int = 8,
     through ``m_choices``, tokens picked from spread-out windows of the
     df-sorted vocabulary so keyword-node counts span the Fig. 9 range),
     then ``n_requests`` draws follow a 1/rank popularity — the head query
-    repeats often enough that a warm cache sees hits.  A ``deadline_frac``
-    fraction of requests (every ``1/deadline_frac``-th, deterministic)
-    carries a ``deadline_ms`` budget to exercise the approximate path.
+    repeats often enough that a warm cache sees hits.
+
+    A ``deadline_frac`` fraction of requests carries a ``deadline_ms``
+    budget, placed as **bursts** of up to ``deadline_burst`` consecutive
+    requests sharing one keyword count ``m`` (real SLO traffic arrives
+    in same-budget waves, not evenly interleaved): concurrent replay
+    clients then land same-shape same-budget requests in one admission
+    window, which is what exercises the service's coalesced deadline
+    buckets — N lanes riding one stepwise driver.  Deterministic per
+    ``seed``.
     """
-    vocab = sorted(index.vocabulary(), key=index.df)
-    usable = [t for t in vocab if index.df(t) >= 2]
+    pairs = sorted(index.token_dfs(), key=lambda p: p[1])
+    usable = [t for t, d in pairs if d >= 2]
     if len(usable) < max(m_choices) * 2:
         raise ValueError("vocabulary too small for a trace")
     rng = np.random.default_rng(seed)
@@ -60,12 +68,36 @@ def make_trace(index, n_requests: int = 48, *, unique: int = 8,
     ranks = np.arange(len(pool))
     popularity = 1.0 / (ranks + 1.0)
     popularity /= popularity.sum()
-    every = int(round(1.0 / deadline_frac)) if deadline_frac > 0 else 0
     trace = []
     for j in range(n_requests):
         q = pool[int(rng.choice(len(pool), p=popularity))]
-        dl = deadline_ms if (every and j % every == every - 1) else None
-        trace.append(TraceRequest(keywords=q, k=k, deadline_ms=dl))
+        trace.append(TraceRequest(keywords=q, k=k, deadline_ms=None))
+    if deadline_frac > 0:
+        pool_by_m: dict[int, list[tuple]] = {}
+        for q in pool:
+            pool_by_m.setdefault(len(q), []).append(q)
+        n_dl = max(1, min(n_requests, int(round(deadline_frac
+                                                * n_requests))))
+        burst = max(1, min(deadline_burst, n_dl))
+        n_bursts = max(1, -(-n_dl // burst))
+        taken: set[int] = set()
+        placed = 0
+        for b in range(n_bursts):
+            start = int(b * n_requests / n_bursts)
+            same_m = pool_by_m[len(trace[start].keywords)]
+            in_burst = 0
+            p = start
+            # Skip slots an earlier (overlapping) burst already claimed,
+            # so the trace carries exactly n_dl deadline requests.
+            while placed < n_dl and in_burst < burst and p < n_requests:
+                if p not in taken:
+                    q = same_m[int(rng.choice(len(same_m)))]
+                    trace[p] = TraceRequest(keywords=q, k=k,
+                                            deadline_ms=deadline_ms)
+                    taken.add(p)
+                    placed += 1
+                    in_burst += 1
+                p += 1
     return trace
 
 

@@ -16,10 +16,15 @@ the engine into that service:
   already executing (same cache token) attaches to the in-flight future
   instead of dispatching again: N concurrent identical misses cost one
   device execution (``ServedResult.coalesced`` marks the attached ones);
-- **deadline-bounded answers** — a per-request latency budget routes the
-  query through the streaming executor and returns the best-so-far
-  answers *with* their SPA lower bound and ``approximate=True`` when the
-  deadline expires.
+- **deadline-bounded answers, coalesced** — a per-request latency budget
+  routes the query through the engine's stepwise lane driver; same-shape
+  same-budget requests ride ONE driver (``engine.query_deadline_batch``),
+  lanes freeze individually as they prove exits, and on expiry every
+  lane gets its own best-so-far answer *with* its per-lane SPA lower
+  bound and ``approximate=True``.  Deadline throughput therefore stops
+  scaling 1:1 with concurrency: N coalesced requests cost ~max
+  supersteps, not the sum (``ServeStats.deadline_driver_supersteps`` vs
+  ``deadline_lane_supersteps`` shows the sharing).
 
 Usage::
 
@@ -64,23 +69,24 @@ class ServeConfig:
                    (KeyError on the future) instead of poisoning a whole
                    co-batched dispatch.
       pad_batches: pad partial buckets up to a fixed lane count by
-                   repeating the last query, so the vmapped executor sees
-                   few distinct batch shapes (each new shape re-traces):
+                   repeating the last query, so the lane driver sees few
+                   distinct lane counts (each new count re-traces):
                    "pow2" (next power of two, the default), "max" (always
                    ``max_batch`` lanes), or "none".  Padding lanes burn
                    device FLOPs only — the engine skips host-side result
-                   construction for them (``query_batch(n_real=)``) — and
-                   batch-fill stats count real requests only.  No-op on
-                   partition="sharded", where buckets run sequentially and
-                   a padding lane would be a whole wasted run.
+                   construction for them (``n_real=``) — and batch-fill
+                   stats count real requests only.  Applies on both
+                   partitionings (sharded lanes live inside the
+                   shard_map, so a padding lane is a free-ish extra lane
+                   there too) and to deadline buckets.
       default_deadline_ms: deadline applied when a request sets none.
-                   Caution: deadline-bounded requests route solo through
-                   the streaming executor (a deadline is per-request and
-                   needs per-superstep control), so setting a service-wide
-                   default turns off micro-batching and the fused
-                   while-loop executor for every request — use per-request
-                   ``deadline_ms`` for requests that actually have a
-                   budget, not this, for a blanket safety SLO.
+                   Deadline requests coalesce with same-shape same-budget
+                   requests onto one stepwise lane driver, but they are
+                   host-stepped (per-superstep deadline checks) and
+                   exempt from the result cache and single-flight — so a
+                   blanket default still costs more than deadline-less
+                   serving; set it only when every request truly has that
+                   budget.
     """
 
     max_batch: int = 8
@@ -123,8 +129,9 @@ class ServedResult:
                    exhausted-frontier facts only).  This is the value a
                    client may rely on: optimum >= sound_opt_lower_bound,
                    always.
-      batch_size:  real requests that shared this dispatch (1 for solo and
-                   deadline dispatches, 0 for cache hits).
+      batch_size:  real requests that shared this dispatch (deadline
+                   buckets count their coalesced lanes too; 0 for cache
+                   hits).
       latency_ms:  end-to-end submit -> resolve latency.
     """
 
@@ -207,6 +214,9 @@ class DKSService:
         ``deadline_ms``: per-request latency budget.  Queue wait counts
         against it; when it expires mid-run the request resolves with the
         best-so-far answer, ``approximate=True``, and its SPA lower bound.
+        Same-shape requests with the SAME budget coalesce onto one lane
+        driver and share supersteps (a conservative group deadline — the
+        earliest lane's — guarantees no lane overshoots its own budget).
         Deadline-less requests run to their exit criterion.
         ``overrides``: per-call policy overrides, forwarded to the engine
         (they key both the result cache and the shape bucket).
@@ -302,6 +312,7 @@ class DKSService:
                 future=future, t_submit=t_submit, engine=engine,
                 deadline_t=(t_submit + deadline_ms / 1e3
                             if deadline_ms is not None else None),
+                deadline_ms=deadline_ms,
                 cache_key=cache_key))
         except BaseException as exc:
             if single_flight:
@@ -413,8 +424,8 @@ class DKSService:
         if not group:
             return
         try:
-            if len(group) == 1 and group[0].deadline_t is not None:
-                self._serve_deadline(group[0])
+            if group[0].deadline_t is not None:
+                self._serve_deadline_batch(group)
             else:
                 self._serve_batch(group)
         except BaseException:
@@ -425,14 +436,8 @@ class DKSService:
                 sum(1 for req in group if not req.future.done()))
             raise
 
-    def _padded_len(self, engine: QueryEngine, n: int) -> int:
+    def _padded_len(self, n: int) -> int:
         mode = self.config.pad_batches
-        if engine.policy.partition == "sharded":
-            # The sharded query_batch serves a bucket as sequential
-            # single-query runs (one fixed-shape executable regardless of
-            # bucket size), so a padding lane would be a full wasted DKS
-            # run instead of the free vmap lane it is on "single".
-            return n
         if mode == "none" or n >= self.config.max_batch:
             return n
         if mode == "max":
@@ -449,8 +454,7 @@ class DKSService:
         engine = group[0].engine
         queries = [list(req.keywords) for req in group]
         n_real = len(queries)
-        queries += [queries[-1]] * (self._padded_len(engine, n_real)
-                                    - n_real)
+        queries += [queries[-1]] * (self._padded_len(n_real) - n_real)
         # n_real: padding lanes ride the device program for shape reuse
         # but skip host-side result construction in the engine.
         results = engine.query_batch(
@@ -471,30 +475,45 @@ class DKSService:
                 batch_size=n_real,
                 latency_ms=(t_done - req.t_submit) * 1e3))
 
-    def _serve_deadline(self, req: Request) -> None:
+    def _serve_deadline_batch(self, group: list[Request]) -> None:
         cfg = self.config
-        # query_deadline spends the budget on supersteps, not on
-        # per-superstep bound computation (the SPA cover DP can cost many
-        # times a superstep); bounds are computed once, at the end.
-        # Queue wait already counted against the deadline.
-        res, info = req.engine.query_deadline(
-            list(req.keywords), k=req.k, extract=cfg.extract,
-            strict=cfg.strict,
-            deadline_s=req.deadline_t - time.perf_counter(),
-            **dict(req.overrides))
+        engine = group[0].engine
+        queries = [list(req.keywords) for req in group]
+        n_real = len(queries)
+        queries += [queries[-1]] * (self._padded_len(n_real) - n_real)
+        # One lane driver for the whole bucket.  The group deadline is the
+        # EARLIEST lane's (conservative: requests with the same budget
+        # admitted within one window differ by at most that window, and
+        # no lane may overshoot its own deadline).  query_deadline_batch
+        # spends the budget on supersteps, not on per-superstep bound
+        # computation (the SPA cover DP can cost many times a superstep);
+        # per-lane bounds are computed once, at the end.  Queue wait
+        # already counted against the deadline.
+        deadline_t = min(req.deadline_t for req in group)
+        out = engine.query_deadline_batch(
+            queries, k=group[0].k, extract=cfg.extract, strict=cfg.strict,
+            deadline_s=deadline_t - time.perf_counter(), n_real=n_real,
+            **dict(group[0].overrides))
         t_done = time.perf_counter()
-        approximate = info["interrupted"]
-        if not approximate and req.engine is self.engine:
-            # Finished inside its budget: an exact answer, cacheable like
-            # any other (unless the build was swapped while in flight —
-            # the old-version key would be unreachable).  Best-so-far
-            # results are budget-specific — never cached.
-            self._cache.put(req.cache_key, res)
-        self._stats.record_dispatch(1, deadline=True)
-        self._stats.record_request(req.t_submit, t_done,
-                                   approximate=approximate)
-        req.future.set_result(ServedResult(
-            result=res, cache_hit=False, approximate=approximate,
-            batch_size=1, latency_ms=(t_done - req.t_submit) * 1e3,
-            opt_lower_bound=info["opt_lower_bound"],
-            sound_opt_lower_bound=info["sound_opt_lower_bound"]))
+        driver_steps = out[0][1]["driver_supersteps"] if out else 0
+        lane_steps = sum(res.supersteps for res, _ in out[:n_real])
+        self._stats.record_dispatch(n_real, deadline=True,
+                                    driver_steps=driver_steps,
+                                    lane_steps=lane_steps)
+        cacheable = engine is self.engine
+        for req, (res, info) in zip(group, out):
+            approximate = info["interrupted"]
+            if not approximate and cacheable:
+                # Finished inside its budget: an exact answer, cacheable
+                # like any other (unless the build was swapped while in
+                # flight — the old-version key would be unreachable).
+                # Best-so-far results are budget-specific — never cached.
+                self._cache.put(req.cache_key, res)
+            self._stats.record_request(req.t_submit, t_done,
+                                       approximate=approximate)
+            req.future.set_result(ServedResult(
+                result=res, cache_hit=False, approximate=approximate,
+                batch_size=n_real,
+                latency_ms=(t_done - req.t_submit) * 1e3,
+                opt_lower_bound=info["opt_lower_bound"],
+                sound_opt_lower_bound=info["sound_opt_lower_bound"]))

@@ -32,14 +32,23 @@ class ServeStats:
       failures:        dispatched requests whose execution raised (their
                        futures carry the exception).
       batch_dispatches: device dispatches made by the micro-batcher.
-      deadline_dispatches: solo dispatches for deadline-bounded requests
-                       (they route through the streaming executor and never
-                       coalesce — a deadline is per-request).
+      deadline_dispatches: lane-driver dispatches for deadline-bounded
+                       requests (same-shape same-budget requests coalesce
+                       onto one stepwise driver and share supersteps).
       batched_requests: requests served through batch dispatches.
       mean_batch_fill: batched_requests / batch_dispatches — how many
-                       client requests each vmapped device program served
+                       client requests each lane-driver program served
                        (padding lanes are not counted; > 1 means the
                        batcher is amortizing dispatch across clients).
+      deadline_batched_requests / mean_deadline_fill: the same pair for
+                       deadline dispatches (> 1 mean fill means at least
+                       one multi-lane deadline bucket rode one driver).
+      deadline_driver_supersteps: total supersteps the shared deadline
+                       drivers actually stepped.
+      deadline_lane_supersteps: sum of the per-lane superstep counts those
+                       drivers served (what solo serving would pay at
+                       minimum).  driver << lane = coalescing is working:
+                       a bucket costs ~max(lane steps), not the sum.
       cache_hits / cache_misses / cache_evictions / cache_hit_rate:
                        result-cache counters (hit rate over hits+misses).
       single_flight_hits: requests that attached to an identical request
@@ -60,6 +69,10 @@ class ServeStats:
     deadline_dispatches: int
     batched_requests: int
     mean_batch_fill: float
+    deadline_batched_requests: int
+    mean_deadline_fill: float
+    deadline_driver_supersteps: int
+    deadline_lane_supersteps: int
     cache_hits: int
     cache_misses: int
     cache_evictions: int
@@ -84,8 +97,12 @@ class ServeStats:
             f"latency ms    p50={self.p50_ms:.1f} p95={self.p95_ms:.1f}"
             f" mean={self.mean_ms:.1f} max={self.max_ms:.1f}\n"
             f"batch-fill    {self.mean_batch_fill:.2f} mean over"
-            f" {self.batch_dispatches} batch dispatches"
-            f" (+{self.deadline_dispatches} deadline singles)\n"
+            f" {self.batch_dispatches} batch dispatches\n"
+            f"deadline      {self.deadline_batched_requests} requests over"
+            f" {self.deadline_dispatches} driver dispatches"
+            f" (fill {self.mean_deadline_fill:.2f};"
+            f" {self.deadline_driver_supersteps} driver vs"
+            f" {self.deadline_lane_supersteps} lane supersteps)\n"
             f"cache         hits={self.cache_hits}"
             f" misses={self.cache_misses}"
             f" evictions={self.cache_evictions}"
@@ -113,6 +130,9 @@ class StatsCollector:
         self._batch_dispatches = 0
         self._deadline_dispatches = 0
         self._batched_requests = 0
+        self._deadline_requests = 0
+        self._deadline_driver_steps = 0
+        self._deadline_lane_steps = 0
         self._single_flight = 0
 
     def record_request(self, t_submit: float, t_done: float,
@@ -140,10 +160,18 @@ class StatsCollector:
         with self._lock:
             self._single_flight += 1
 
-    def record_dispatch(self, n_requests: int, deadline: bool) -> None:
+    def record_dispatch(self, n_requests: int, deadline: bool,
+                        driver_steps: int = 0, lane_steps: int = 0) -> None:
+        """One device dispatch serving ``n_requests`` real lanes.  For
+        deadline dispatches, ``driver_steps`` is what the shared driver
+        stepped and ``lane_steps`` the sum of its lanes' own counters —
+        the coalescing win is driver << lanes."""
         with self._lock:
             if deadline:
                 self._deadline_dispatches += 1
+                self._deadline_requests += n_requests
+                self._deadline_driver_steps += driver_steps
+                self._deadline_lane_steps += lane_steps
             else:
                 self._batch_dispatches += 1
                 self._batched_requests += n_requests
@@ -166,6 +194,12 @@ class StatsCollector:
                 mean_batch_fill=(
                     self._batched_requests / self._batch_dispatches
                     if self._batch_dispatches else 0.0),
+                deadline_batched_requests=self._deadline_requests,
+                mean_deadline_fill=(
+                    self._deadline_requests / self._deadline_dispatches
+                    if self._deadline_dispatches else 0.0),
+                deadline_driver_supersteps=self._deadline_driver_steps,
+                deadline_lane_supersteps=self._deadline_lane_steps,
                 cache_hits=hits,
                 cache_misses=misses,
                 cache_evictions=cache_stats.get("evictions", 0),

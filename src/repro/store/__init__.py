@@ -40,6 +40,7 @@ from repro.store.artifact import (  # noqa: F401
     ChecksumError,
     FormatVersionError,
     GraphArtifact,
+    LazyArtifactIndex,
     open_artifact,
     write_artifact,
 )

@@ -20,10 +20,16 @@ A :class:`GraphArtifact` is a directory of raw ``.npy`` buffers plus a
       label_bytes.npy          int64[V+1] offsets)
 
 Buffers are opened with ``np.load(mmap_mode="r")`` — nothing is read until
-touched, so opening a multi-GB artifact costs a manifest parse and V+1
-offsets, not a graph rebuild.  Writes are atomic: everything lands in a
-``<path>.tmp-<pid>`` sibling first and is renamed into place, so a crashed
-ingest can never leave a half-written artifact at the target path.
+touched, so opening a multi-GB artifact costs a manifest parse, not a
+graph rebuild.  The vocabulary is persisted as a *sorted* token table
+(:meth:`InvertedIndex.to_postings` emits it sorted), so the loaded index
+(:class:`LazyArtifactIndex`) resolves tokens by binary search over the
+mmapped table — O(log T) touched pages per lookup, and **O(1) in
+vocabulary size at open time**: no token dict is ever materialized unless
+a caller enumerates ``vocabulary()``.  Writes are atomic: everything
+lands in a ``<path>.tmp-<pid>`` sibling first and is renamed into place,
+so a crashed ingest can never leave a half-written artifact at the
+target path.
 
 Validation is layered: :func:`open_artifact` always checks the magic and
 format version (``FormatVersionError`` on mismatch) and that every buffer's
@@ -99,6 +105,90 @@ class _BufferSpec:
     dtype: str
     shape: tuple[int, ...]
     sha256: str
+
+
+class LazyArtifactIndex(InvertedIndex):
+    """An :class:`InvertedIndex` resolved straight off the mmapped
+    artifact buffers: token -> posting is a binary search over the
+    persisted *sorted* token table, and posting lists are mmap views.
+
+    Nothing vocabulary-sized is materialized at construction — opening an
+    artifact stays O(1) in vocabulary — and a lookup touches O(log T)
+    pages of the token table plus the one posting it returns.
+    ``vocabulary()`` / ``to_postings()`` do materialize the token list
+    (callers that enumerate the vocabulary, e.g. the CLI keyword
+    auto-pick, pay for what they use).
+    """
+
+    def __init__(self, artifact: "GraphArtifact") -> None:
+        super().__init__()
+        self._n_tokens = int(artifact.manifest["n_tokens"])
+        self._token_kind = artifact.token_kind
+        self._offsets = artifact.buffer("post_offsets")
+        self._nodes = artifact.buffer("post_nodes")
+        if self._token_kind == "int":
+            self._keys = artifact.buffer("token_keys")
+        else:
+            self._tok_off = artifact.buffer("token_offsets")
+            self._tok_blob = artifact.buffer("token_bytes")
+
+    def _token_at(self, i: int):
+        if self._token_kind == "int":
+            return int(self._keys[i])
+        return bytes(
+            self._tok_blob[self._tok_off[i]:self._tok_off[i + 1]]
+        ).decode("utf-8")
+
+    def _find(self, token) -> int:
+        """Sorted-table position of ``token``, or -1.  The table order is
+        the writer's ``sorted()`` — ascending ints, or code-point order
+        for strings, which utf-8 byte comparison reproduces exactly."""
+        n = self._n_tokens
+        if self._token_kind == "int":
+            if not isinstance(token, (int, np.integer)):
+                return -1
+            i = int(np.searchsorted(self._keys, int(token)))
+            return i if i < n and int(self._keys[i]) == int(token) else -1
+        if not isinstance(token, str):
+            return -1
+        key = token.encode("utf-8")
+        lo, hi = 0, n
+        while lo < hi:
+            mid = (lo + hi) // 2
+            b = bytes(self._tok_blob[
+                self._tok_off[mid]:self._tok_off[mid + 1]])
+            if b < key:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo < n and bytes(self._tok_blob[
+                self._tok_off[lo]:self._tok_off[lo + 1]]) == key:
+            return lo
+        return -1
+
+    def lookup(self, token) -> np.ndarray:
+        i = self._find(token)
+        if i < 0:
+            return np.zeros(0, np.int32)
+        return self._nodes[self._offsets[i]:self._offsets[i + 1]]
+
+    def df(self, token) -> int:
+        i = self._find(token)
+        return 0 if i < 0 else int(self._offsets[i + 1] - self._offsets[i])
+
+    def vocabulary(self) -> list:
+        return [self._token_at(i) for i in range(self._n_tokens)]
+
+    def token_dfs(self) -> list[tuple]:
+        """Bulk ``(token, df)`` enumeration: one diff over the offsets
+        table — not a binary search per token like ``df()`` would be."""
+        dfs = np.diff(np.asarray(self._offsets))
+        return [(self._token_at(i), int(dfs[i]))
+                for i in range(self._n_tokens)]
+
+    def to_postings(self) -> tuple[list, np.ndarray, np.ndarray]:
+        return (self.vocabulary(), np.asarray(self._offsets),
+                np.asarray(self._nodes, np.int32))
 
 
 class GraphArtifact:
@@ -224,19 +314,14 @@ class GraphArtifact:
         return self._graph
 
     def index(self) -> InvertedIndex:
-        """The persisted :class:`InvertedIndex`: frozen postings rebuilt
-        as views into the mmapped ``post_nodes`` buffer — no tokenizing,
-        and no posting bytes read until a token is looked up."""
+        """The persisted :class:`InvertedIndex`, fully lazy
+        (:class:`LazyArtifactIndex`): tokens resolve by binary search over
+        the mmapped sorted token table and postings stay on disk until
+        looked up — no token dict is materialized, so this is O(1) in
+        vocabulary size (the former dict build made artifact open scale
+        with the vocabulary)."""
         if self._index is None:
-            offsets = np.asarray(self.buffer("post_offsets"))
-            if self.token_kind == "int":
-                tokens = [int(t) for t in self.buffer("token_keys")]
-            else:
-                tokens = _decode_strings(
-                    np.asarray(self.buffer("token_offsets")),
-                    self.buffer("token_bytes"))
-            self._index = InvertedIndex.from_postings(
-                tokens, offsets, self.buffer("post_nodes"))
+            self._index = LazyArtifactIndex(self)
         return self._index
 
     def labels(self) -> list[str] | None:

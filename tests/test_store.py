@@ -289,3 +289,37 @@ def test_artifact_atomic_overwrite(tmp_path, setup):
                           overwrite=True)
     assert art2.content_hash == h1  # same content, same identity
     assert not list(tmp_path.glob("*.tmp-*"))  # no temp debris
+
+
+def test_lazy_index_binary_search(setup, tmp_path):
+    """The open-time fix: artifact.index() materializes NO token dict —
+    lookups binary-search the mmapped sorted token table (int keys via
+    searchsorted, str keys via utf-8 byte comparison), with clean misses
+    below/above/between keys and on wrong-type probes."""
+    from repro.store import LazyArtifactIndex
+
+    _, _, result, artifact = setup
+    loaded = open_artifact(artifact.path).index()
+    assert isinstance(loaded, LazyArtifactIndex)
+    # Nothing vocabulary-sized was built at open.
+    assert loaded._frozen == {}
+    vocab = sorted(result.index.vocabulary())
+    assert loaded.df(vocab[0]) == result.index.df(vocab[0])
+    assert loaded.lookup(min(vocab) - 1).size == 0
+    assert loaded.lookup(max(vocab) + 1000).size == 0
+    assert loaded.lookup("not-an-int").size == 0
+
+    labels = ["alpha beta", "beta gamma", "zeta alpha"]
+    from repro.graph.structure import build_graph
+    g = build_graph([0, 1], [1, 2], 3, labels=labels)
+    art = write_artifact(tmp_path / "s", g,
+                         InvertedIndex.from_labels(labels))
+    li = open_artifact(art.path).index()
+    assert isinstance(li, LazyArtifactIndex)
+    assert li.lookup("aaaa").size == 0     # before the first key
+    assert li.lookup("zzzz").size == 0     # past the last key
+    assert li.lookup("bet").size == 0      # prefix of a key, not a key
+    assert li.lookup(123).size == 0        # wrong type
+    np.testing.assert_array_equal(li.lookup("beta"), [0, 1])
+    assert sorted(li.vocabulary()) == \
+        sorted(InvertedIndex.from_labels(labels).vocabulary())
