@@ -99,6 +99,8 @@ def main() -> None:
     record("fig15_sharded_vs_single", dks.fig15_sharded_vs_single,
            n_queries=2 if not args.full else 8)
     record("fig_sharded_batch", dks.fig_sharded_batch)
+    record("fig_extract", dks.fig_extract,
+           buckets=(1, 4, 8) if not args.full else (1, 4, 8, 16))
     record("fig_serve_throughput", sv.fig_serve_throughput,
            batch_sizes=(1, 4) if not args.full else (1, 2, 4, 8),
            n_requests=12 if not args.full else 32,
@@ -132,6 +134,7 @@ def main() -> None:
             "per_figure_wall_s": dks_figs,
             "sharded_vs_single": results.get("fig15_sharded_vs_single"),
             "sharded_batch": results.get("fig_sharded_batch"),
+            "extract": results.get("fig_extract"),
         }
         (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))
         print(f"wrote {OUT / 'BENCH_dks.json'}")

@@ -13,6 +13,9 @@ Public API:
   init_state, superstep, freeze_finished    — the loop's building blocks
   lane_view, freeze_lanes                   — lane-batch helpers
   extract_answers, AnswerTree               — aggregator-side answer trees
+  collect_answers, finish_tree              — the same aggregator with the
+                                              exhaustion flag + pluggable
+                                              backtrace (repro.answers)
   extract_answer_weights                    — top-K weights only (no trees)
   dreyfus_wagner, brute_force_topk          — exact oracles (tests)
 
@@ -40,7 +43,12 @@ from repro.core.driver import (  # noqa: F401
     lane_view,
     run_lanes,
 )
-from repro.core.reconstruct import AnswerTree, extract_answers  # noqa: F401
+from repro.core.reconstruct import (  # noqa: F401
+    AnswerTree,
+    collect_answers,
+    extract_answers,
+    finish_tree,
+)
 from repro.core.steiner_ref import brute_force_topk, dreyfus_wagner  # noqa: F401
 
 _ENGINE_EXPORTS = ("QueryEngine", "ExecutionPolicy", "QueryResult",

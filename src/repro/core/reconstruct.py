@@ -162,6 +162,111 @@ def _spanning_tree(edges: list[tuple[int, int]], g: Graph) -> list[tuple[int, in
     return out
 
 
+def finish_tree(
+    edges: list[tuple[int, int]],
+    g: Graph,
+    kw_masks: np.ndarray,
+    root: int,
+    raw_value: float,
+) -> AnswerTree:
+    """Backtraced edge list -> finished :class:`AnswerTree`: prune to
+    minimal, cycle-repair, recompute the true weight over the deduped edge
+    set, re-root if the root itself was pruned."""
+    orig_nodes = {n for e in edges for n in e}
+    edges = prune_non_minimal(edges, kw_masks, root)
+    # A walk-union may contain cycles: reduce to a spanning tree of the
+    # union and re-prune (paper's V_K-based extraction never produces
+    # cycles; this is our equivalent repair at the aggregator).
+    if len({n for e in edges for n in e}) != len(edges) + (1 if edges else 0):
+        edges = _spanning_tree(list(dict.fromkeys(edges)), g)
+        edges = prune_non_minimal(edges, kw_masks, root)
+    m = kw_masks.shape[0]
+    if not edges and orig_nodes and not all(kw_masks[i, root]
+                                            for i in range(m)):
+        # Pruning collapsed the whole tree: the last prune left a single
+        # node covering every keyword.  Re-root onto (a deterministic)
+        # such survivor — keeping the original root would report a
+        # zero-weight "tree" that covers nothing.
+        root = min(c for c in orig_nodes
+                   if all(kw_masks[i, c] for i in range(m)))
+    weight = sum(_edge_weight(g, u, v) for u, v in edges)
+    tree_nodes = {n for e in edges for n in e}
+    if edges and root not in tree_nodes:
+        # Root pruned away as a redundant leaf: re-root at the highest
+        # degree remaining node (the connection node of what is left).
+        degc: dict[int, int] = {}
+        for u, v in edges:
+            degc[u] = degc.get(u, 0) + 1
+            degc[v] = degc.get(v, 0) + 1
+        root = max(degc, key=degc.get)
+    nodes = tuple(sorted(tree_nodes | {root}))
+    return AnswerTree(
+        root=root, edges=tuple(sorted(edges)), weight=round(weight, 6),
+        raw_value=raw_value, nodes=nodes,
+    )
+
+
+def collect_answers(
+    S: np.ndarray,
+    g: Graph,
+    kw_masks: np.ndarray,
+    k: int,
+    candidate_factor: int = 4,
+    backtrace_fn=None,
+) -> tuple[list[AnswerTree], bool]:
+    """Global top-K minimal answer-trees from the final DP table, with an
+    exhaustion flag.
+
+    Mirrors the paper's aggregator A_A: collect candidate (root, value)
+    pairs in a *stable* value-ascending order (ties broken by cell index,
+    so host and device candidate selection agree bit-for-bit),
+    reconstruct, prune to minimal, recompute true weights over the deduped
+    edge set, drop duplicates, re-rank.
+
+    Every candidate of the initial ``k * candidate_factor`` window is
+    processed (recomputed weights can re-rank past the k-th tree).  When
+    dedup / failed backtraces collapse that pool below ``k`` distinct
+    trees, the scan *refills*: it keeps walking the value-ordered table
+    until ``k`` distinct trees exist or the finite candidates run out.
+    Returns ``(ranked[:k], exhausted)`` — ``exhausted`` is True when the
+    table holds fewer than ``k`` distinct trees in total.
+
+    ``backtrace_fn(pos, root, val)``: optional override returning an edge
+    list (or None) for the candidate at scan position ``pos`` — the hook
+    the device-batched backtracer (:mod:`repro.answers`) plugs in; the
+    default is the host :func:`backtrace`.
+    """
+    m = kw_masks.shape[0]
+    full = (1 << m) - 1
+    K = S.shape[2]
+    flat = S[:, full, :].reshape(-1)
+    # Stable: equal values scan in cell-index order (argpartition would
+    # pick an arbitrary representative set at the window boundary).
+    order = np.argsort(flat, kind="stable")
+    if backtrace_fn is None:
+        def backtrace_fn(pos: int, root: int, val: float):
+            return backtrace(S, g, kw_masks, root, full, val)
+    window = min(len(order), max(k, 1) * candidate_factor)
+    answers: dict[tuple, AnswerTree] = {}
+    pos = 0
+    while pos < len(order):
+        if pos >= window and len(answers) >= k:
+            break
+        fi = int(order[pos])
+        val = float(flat[fi])
+        if val >= INF:
+            break
+        root = fi // K
+        edges = backtrace_fn(pos, root, val)
+        pos += 1
+        if edges is None:
+            continue
+        tree = finish_tree(edges, g, kw_masks, root, val)
+        answers.setdefault(tree.key(), tree)
+    ranked = sorted(answers.values(), key=lambda t: (t.weight, t.root))
+    return ranked[:k], len(answers) < k
+
+
 def extract_answers(
     S: np.ndarray,
     g: Graph,
@@ -169,50 +274,7 @@ def extract_answers(
     k: int,
     candidate_factor: int = 4,
 ) -> list[AnswerTree]:
-    """Global top-K minimal answer-trees from the final DP table.
-
-    Mirrors the paper's aggregator A_A: collect candidate (root, value)
-    pairs, reconstruct, prune to minimal, recompute true weights over the
-    deduped edge set, drop duplicates, re-rank.
-    """
-    m = kw_masks.shape[0]
-    full = (1 << m) - 1
-    vals = S[:, full, :]
-    flat = vals.reshape(-1)
-    n_cand = min(len(flat), k * candidate_factor)
-    idx = np.argpartition(flat, n_cand - 1)[:n_cand]
-    idx = idx[np.argsort(flat[idx])]
-    answers: dict[tuple, AnswerTree] = {}
-    for fi in idx:
-        val = float(flat[fi])
-        if val >= INF:
-            break
-        root = int(fi // S.shape[2])
-        edges = backtrace(S, g, kw_masks, root, full, val)
-        if edges is None:
-            continue
-        edges = prune_non_minimal(edges, kw_masks, root)
-        # A walk-union may contain cycles: reduce to a spanning tree of the
-        # union and re-prune (paper's V_K-based extraction never produces
-        # cycles; this is our equivalent repair at the aggregator).
-        if len({n for e in edges for n in e}) != len(edges) + (1 if edges else 0):
-            edges = _spanning_tree(list(dict.fromkeys(edges)), g)
-            edges = prune_non_minimal(edges, kw_masks, root)
-        weight = sum(_edge_weight(g, u, v) for u, v in edges)
-        tree_nodes = {n for e in edges for n in e}
-        if edges and root not in tree_nodes:
-            # Root pruned away as a redundant leaf: re-root at the highest
-            # degree remaining node (the connection node of what is left).
-            degc: dict[int, int] = {}
-            for u, v in edges:
-                degc[u] = degc.get(u, 0) + 1
-                degc[v] = degc.get(v, 0) + 1
-            root = max(degc, key=degc.get)
-        nodes = tuple(sorted(tree_nodes | {root}))
-        tree = AnswerTree(
-            root=root, edges=tuple(sorted(edges)), weight=round(weight, 6),
-            raw_value=val, nodes=nodes,
-        )
-        answers.setdefault(tree.key(), tree)
-    ranked = sorted(answers.values(), key=lambda t: (t.weight, t.root))
-    return ranked[:k]
+    """:func:`collect_answers` without the exhaustion flag (the original
+    aggregator surface; kept for callers that only want the trees)."""
+    answers, _ = collect_answers(S, g, kw_masks, k, candidate_factor)
+    return answers

@@ -59,7 +59,7 @@ import numpy as np
 from repro import INF, shardmap
 from repro.core.dks import DKSConfig, DKSState, run_dks_instrumented
 from repro.core.driver import lane_init, lane_superstep, lane_view
-from repro.core.reconstruct import extract_answers
+from repro.core.reconstruct import collect_answers
 from repro.core.spa import nu_lower_bound, spa_cover_dp, spa_ratio
 from repro.engine.policy import ExecutionPolicy
 from repro.engine.result import QueryResult, StreamUpdate
@@ -117,6 +117,14 @@ class QueryEngine:
         self._executables: dict[tuple, Any] = {}
         self._trace_counts: dict[tuple, int] = {}
         self._execute_count = 0
+        # Answer subsystem hooks: the device-batched backtracer (lazy; its
+        # kernels cache per bucket shape) and the artifact the engine was
+        # built from (labels for answer rendering).  ``batched_extraction``
+        # turns the device backtrace path of query_batch off (host-only
+        # extraction) — a debugging escape hatch, not a serving knob.
+        self._answer_backtracer: Any = None
+        self.artifact: Any = None
+        self.batched_extraction = True
 
     # ------------------------------------------------------------------
     # Construction
@@ -181,8 +189,10 @@ class QueryEngine:
             device_graph = pack_frontier_graph(graph, n_shards, mesh=mesh)
         else:
             device_graph = graph.to_device()
-        return cls(graph, index, policy, device_graph, mesh=mesh,
-                   graph_hash=graph_hash)
+        engine = cls(graph, index, policy, device_graph, mesh=mesh,
+                     graph_hash=graph_hash)
+        engine.artifact = artifact
+        return engine
 
     # ------------------------------------------------------------------
     # Introspection
@@ -258,6 +268,26 @@ class QueryEngine:
             policy = dataclasses.replace(policy, **overrides)
         return (norm, int(k), policy, self.version)
 
+    def node_label(self, v: int) -> str:
+        """Entity string for a node: in-memory graph labels when present,
+        else the artifact's label blob (decoded per node, off the mmap),
+        else ``node:<id>`` — the label function answer rendering plugs in.
+        """
+        v = int(v)
+        if self.graph.labels is not None:
+            return str(self.graph.labels[v])
+        if self.artifact is not None and self.artifact.has_labels:
+            return self.artifact.label(v)
+        return f"node:{v}"
+
+    def _backtracer(self):
+        """The lazily-built device-batched backtracer (repro.answers);
+        shared across queries so its per-shape kernels compile once."""
+        if self._answer_backtracer is None:
+            from repro.answers import BatchedBacktracer
+            self._answer_backtracer = BatchedBacktracer(self.graph)
+        return self._answer_backtracer
+
     # ------------------------------------------------------------------
     # Queries
     # ------------------------------------------------------------------
@@ -268,6 +298,7 @@ class QueryEngine:
         k: int = 1,
         *,
         extract: bool = True,
+        extract_pool: int | None = None,
         keep_state: bool = False,
         strict: bool = True,
         **overrides,
@@ -277,6 +308,9 @@ class QueryEngine:
         ``keywords``: tokens understood by the index (int ids or strings).
         ``extract``: reconstruct ranked :class:`AnswerTree`\\ s on the host
         (skip for stats-only runs — the weights are always populated).
+        ``extract_pool``: reconstruct up to this many distinct trees (>=
+        ``k``) onto ``QueryResult.answer_pool`` — the material diversified
+        re-ranking / pagination works from; ``answers`` stays the top-k.
         ``keep_state``: retain the raw final :class:`DKSState` on the
         result (a dense ``[V, 2^m, K]`` table — off by default so served
         results don't pin device memory).
@@ -298,7 +332,8 @@ class QueryEngine:
         dt = time.perf_counter() - t0
         return self._make_result(keywords, masks, lane_view(states, 0), cfg,
                                  dt, extract, keep_state,
-                                 unmatched=unmatched, own_time_s=dt)
+                                 unmatched=unmatched, own_time_s=dt,
+                                 extract_pool=extract_pool)
 
     def query_batch(
         self,
@@ -306,6 +341,7 @@ class QueryEngine:
         k: int = 1,
         *,
         extract: bool = True,
+        extract_pool: int | None = None,
         keep_state: bool = False,
         strict: bool = True,
         n_real: int | None = None,
@@ -331,6 +367,12 @@ class QueryEngine:
         bucket's device program, but skip host-side result construction
         (answer-tree extraction is O(V·2^m) per lane) and come back as
         None.
+
+        Answer-tree extraction for the whole bucket runs through the
+        device-batched backtracer (:mod:`repro.answers`): one device
+        program resolves the top-candidate decompositions of every real
+        lane at once, and only ragged stragglers re-run the host search —
+        bit-identical results, batched cost.
         """
         n_real = len(queries) if n_real is None else n_real
         results: list[QueryResult | None] = [None] * len(queries)
@@ -345,12 +387,27 @@ class QueryEngine:
             t0 = time.perf_counter()
             states = self._execute(fn, self.device_graph, jnp.asarray(masks))
             dt = time.perf_counter() - t0
+            pre: dict[int, tuple] = {}
+            if extract and self.batched_extraction:
+                topk = np.asarray(states.topk_w)
+                lanes = [bi for bi in range(len(idxs))
+                         if idxs[bi] < n_real and topk[bi, 0] < INF]
+                if lanes:
+                    S_lanes = states.S
+                    if self.mesh is not None:
+                        # Sharded runs leave S device-distributed; the
+                        # backtrace kernel is a plain single-device jit.
+                        S_lanes = np.asarray(S_lanes)
+                    pre = dict(zip(lanes, self._backtracer().extract_lanes(
+                        S_lanes, masks, k=max(cfg.k, extract_pool or 0),
+                        lanes=lanes, n_nodes=self.n_nodes)))
             for bi, i in enumerate(idxs):
                 if i >= n_real:
                     continue
                 results[i] = self._make_result(
                     list(queries[i]), masks[bi], lane_view(states, bi), cfg,
-                    dt, extract, keep_state, unmatched=pairs[bi][1])
+                    dt, extract, keep_state, unmatched=pairs[bi][1],
+                    extract_pool=extract_pool, answers_pre=pre.get(bi))
         return results  # type: ignore[return-value]
 
     def query_stream(
@@ -438,6 +495,7 @@ class QueryEngine:
         *,
         deadline_s: float,
         extract: bool = True,
+        extract_pool: int | None = None,
         keep_state: bool = False,
         strict: bool = True,
         **overrides,
@@ -467,7 +525,8 @@ class QueryEngine:
         """
         out = self.query_deadline_batch(
             [list(keywords)], k, deadline_s=deadline_s, extract=extract,
-            keep_state=keep_state, strict=strict, **overrides)
+            extract_pool=extract_pool, keep_state=keep_state, strict=strict,
+            **overrides)
         assert out[0] is not None
         return out[0]
 
@@ -478,6 +537,7 @@ class QueryEngine:
         *,
         deadline_s: float,
         extract: bool = True,
+        extract_pool: int | None = None,
         keep_state: bool = False,
         strict: bool = True,
         n_real: int | None = None,
@@ -506,6 +566,13 @@ class QueryEngine:
         ran to the deadline.  ``n_real``: as in :meth:`query_batch`,
         queries at index >= ``n_real`` are padding lanes and come back as
         None.
+
+        Tree extraction *overlaps* the driver: a lane that freezes has a
+        final table, so its host-side reconstruction starts on a worker
+        thread immediately (:class:`repro.answers.ExtractionOverlap`)
+        while the device steps the remaining lanes — by loop exit most
+        trees already exist.  Interrupted lanes extract best-so-far trees
+        from their frozen state at the deadline, alongside their bounds.
         """
         queries = [list(q) for q in queries]
         if not queries:
@@ -520,6 +587,11 @@ class QueryEngine:
         pairs = [self._masks(q, strict) for q in queries]
         masks = np.stack([p[0] for p in pairs])
         init_fn, step_fn = self._executable(cfg, "stepwise")
+        overlap = None
+        if extract:
+            from repro.answers import ExtractionOverlap
+            overlap = ExtractionOverlap(
+                self.graph, max(cfg.k, extract_pool or 0))
         t0 = time.perf_counter()
         deadline_t = t0 + max(deadline_s, 0.0)
         state = self._execute(init_fn, self.device_graph, jnp.asarray(masks))
@@ -533,6 +605,12 @@ class QueryEngine:
                     # The lane proved its exit here: that is ITS serve
                     # time, even while the driver keeps stepping others.
                     own_t[i] = now - t0
+                    if overlap is not None and \
+                            float(np.asarray(state.topk_w[i, 0])) < INF:
+                        # Frozen lane => final table: reconstruct its
+                        # trees NOW, under the remaining supersteps.
+                        overlap.submit(i, state.S[i],
+                                       masks[i][:, : self.n_nodes])
             if done[:n_real].all() or now >= deadline_t:
                 break
             state = self._execute(step_fn, self.device_graph, state)
@@ -544,6 +622,13 @@ class QueryEngine:
                 out.append(None)
                 continue
             lane = lane_view(state, i)
+            answers_pre = None
+            if overlap is not None and float(lane.topk_w[0]) < INF:
+                # Overlapped result for frozen lanes; inline best-so-far
+                # extraction for lanes the deadline interrupted.
+                answers_pre = overlap.result(
+                    i, lane.S, masks[i][:, : self.n_nodes]) \
+                    if not overlap.pending(i) else overlap.result(i)
             interrupted = not bool(lane.done)
             forced = bool(lane.budget_hit) or bool(lane.capped)
             if interrupted or forced:
@@ -562,7 +647,8 @@ class QueryEngine:
                 q, masks[i], lane, cfg, dt, extract, keep_state,
                 unmatched=pairs[i][1],
                 own_time_s=own_t[i] if own_t[i] is not None else dt,
-                interrupted=interrupted, spa_hint=spa)
+                interrupted=interrupted, spa_hint=spa,
+                extract_pool=extract_pool, answers_pre=answers_pre)
             info = dict(
                 opt_lower_bound=min(opt_lb, INF),
                 sound_opt_lower_bound=min(sound_lb, INF),
@@ -570,6 +656,8 @@ class QueryEngine:
                 driver_supersteps=driver_steps,
             )
             out.append((res, info))
+        if overlap is not None:
+            overlap.close()
         return out
 
     def _state_bounds(self, state: DKSState, cfg: DKSConfig):
@@ -788,6 +876,8 @@ class QueryEngine:
         own_time_s: float | None = None,
         interrupted: bool = False,
         spa_hint: float | None = None,
+        extract_pool: int | None = None,
+        answers_pre: tuple | None = None,
     ) -> QueryResult:
         weights = np.asarray(state.topk_w)
         roots = np.asarray(state.topk_root)
@@ -807,11 +897,34 @@ class QueryEngine:
                 shat = jnp.minimum(state.s_front + self._e_min, INF)
                 spa = float(spa_cover_dp(shat, cfg.m))
             ratio = float(spa_ratio(state.topk_w[0], spa))
-        answers = []
+        # Tree extraction: ``answers_pre`` is a ready-made
+        # ``(ranked, exhausted)`` pair from the device-batched backtracer
+        # (query_batch) or the extraction overlap (deadline buckets); the
+        # inline host collector covers the rest.  ``extract_pool`` widens
+        # the collection target so ``answer_pool`` carries material for
+        # diversified re-ranking, with ``answers`` staying its top-k.
+        answers: list = []
+        answers_exhausted = pool_exhausted = False
+        answer_pool = None
         if extract and weights[0] < INF:
-            answers = extract_answers(
-                np.asarray(state.S), self.graph,
-                masks[:, : self.n_nodes], k=cfg.k)
+            if answers_pre is not None:
+                ranked, exhausted = answers_pre
+            else:
+                ranked, exhausted = collect_answers(
+                    np.asarray(state.S), self.graph,
+                    masks[:, : self.n_nodes],
+                    k=max(cfg.k, extract_pool or 0))
+            answers = ranked[: cfg.k]
+            answers_exhausted = len(ranked) < cfg.k
+            if extract_pool:
+                answer_pool = ranked
+                pool_exhausted = exhausted
+        elif extract:
+            # No finite answer => no trees exist; the empty pool is a
+            # definitive (cacheable) fact, not a skipped extraction.
+            answers_exhausted = True
+            if extract_pool:
+                answer_pool, pool_exhausted = [], True
         return QueryResult(
             query=tuple(keywords),
             m=cfg.m,
@@ -833,4 +946,7 @@ class QueryEngine:
             state=state if keep_state else None,
             unmatched=tuple(unmatched),
             own_time_s=own_time_s,
+            answers_exhausted=answers_exhausted,
+            answer_pool=answer_pool,
+            pool_exhausted=pool_exhausted,
         )

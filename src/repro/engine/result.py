@@ -68,6 +68,21 @@ class QueryResult:
                      instead; with ``strict=False`` a nonempty value
                      explains an INF answer without burning supersteps on
                      diagnosis).
+      answers_exhausted: True when the final table holds fewer than ``k``
+                     distinct answer trees — ``len(answers) < k`` is a
+                     property of the graph/query, not an extraction
+                     shortfall (the collector refills candidates until the
+                     finite table is exhausted).  Always False when
+                     extraction was skipped.
+      answer_pool:   the larger ranked tree list when the query was made
+                     with ``extract_pool > k`` (serving extracts a pool so
+                     diversified re-ranking has material to choose from);
+                     ``answers`` is its first ``k``.  None when no pool
+                     was requested.
+      pool_exhausted: as ``answers_exhausted`` but for the requested pool
+                     size — True when the table holds fewer distinct trees
+                     than the pool asked for (the pool is the complete
+                     answer list; pagination past it cannot find more).
     """
 
     query: tuple
@@ -90,6 +105,9 @@ class QueryResult:
     state: DKSState | None
     unmatched: tuple = ()
     own_time_s: float | None = None
+    answers_exhausted: bool = False
+    answer_pool: list[AnswerTree] | None = None
+    pool_exhausted: bool = False
 
     @property
     def found(self) -> bool:

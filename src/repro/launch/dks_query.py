@@ -73,6 +73,11 @@ def main() -> int:
                          "local devices (runs on any jax via repro.shardmap)")
     ap.add_argument("--stream", action="store_true",
                     help="print per-superstep answers with SPA bounds")
+    ap.add_argument("--extract", action="store_true",
+                    help="print label-rendered answer trees (entity "
+                         "strings from the artifact's label blob when "
+                         "--artifact is given; node:<id> otherwise) "
+                         "instead of raw int ids")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -132,9 +137,19 @@ def main() -> int:
         print(f"superstep cap hit: SPA-ratio={res.spa_ratio:.3f}")
 
     print("\ntop answers (weights):", [w for w in res.weights if w < 1e8])
-    for i, a in enumerate(res.answers):
-        print(f"  #{i+1} weight={a.weight} root={a.root} "
-              f"edges={list(a.edges)[:8]}{'...' if len(a.edges) > 8 else ''}")
+    if args.extract:
+        from repro.answers import render_tree
+        if res.answers and res.answers_exhausted:
+            print(f"(table holds fewer than k={args.k} distinct trees)")
+        for i, a in enumerate(res.answers):
+            rt = render_tree(a, label_fn=engine.node_label,
+                             graph=engine.graph)
+            print(f"  #{i+1} {rt.describe()}")
+    else:
+        for i, a in enumerate(res.answers):
+            print(f"  #{i+1} weight={a.weight} root={a.root} "
+                  f"edges={list(a.edges)[:8]}"
+                  f"{'...' if len(a.edges) > 8 else ''}")
     return 0
 
 

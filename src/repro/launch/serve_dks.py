@@ -10,9 +10,12 @@ against the direct single-query engine.
 invariants: mean batch-fill > 1 (the micro-batcher coalesced concurrent
 clients), warm cache-hit rate > 0 (the trace repeats, the cache caught
 it), at least one multi-lane deadline bucket (same-budget requests rode
-one stepwise lane driver and shared supersteps), and every served answer
+one stepwise lane driver and shared supersteps), every served answer
 either matches the direct engine result or carries ``approximate=True``
-with a valid SPA lower bound.
+with a valid SPA lower bound, and answer trees are servable end-to-end:
+a ``return_trees=True`` query yields >= k distinct keyword-covering
+trees and an identical follow-up is served warm from the tree-pool
+cache.
 """
 
 from __future__ import annotations
@@ -64,6 +67,59 @@ def verify_served(engine, trace, served, atol=1e-5):
                 srv.result.weights, ref.weights, rtol=1e-5, atol=atol,
                 err_msg=f"served weights diverged for {req.keywords}")
     return n_exact, n_approx
+
+
+def verify_trees(svc, engine, trace, k=2):
+    """Smoke acceptance for served answer trees (``return_trees=True``).
+
+    Walks the trace's unique keyword sets, asserting on the first one
+    whose table holds >= k distinct trees: the served page carries >= k
+    *distinct* tree keys, every tree's node set covers every query
+    keyword (checked against the inverted index), and an identical
+    follow-up request is served warm from the tree-pool cache — same
+    page, no re-extraction.  Returns (keywords, n_distinct) for the
+    query that passed; raises AssertionError if no unique query yields
+    k trees or any invariant fails.
+    """
+    index = engine.index
+    seen: set = set()
+    for req in trace:
+        if req.keywords in seen:
+            continue
+        seen.add(req.keywords)
+        srv = svc.query(list(req.keywords), k=k, return_trees=True,
+                        tree_page_size=k)
+        page = srv.trees
+        assert page is not None, "return_trees request served no TreePage"
+        if page.total < k:
+            continue  # thin table for this query; try the next one
+        keys = {(t.root, tuple(sorted((e.u, e.v) for e in t.edges)))
+                for t in page.items}
+        assert len(keys) >= k, (
+            f"served page for {req.keywords} repeats trees: "
+            f"{len(keys)} distinct keys < k={k}")
+        for t in page.items:
+            nodes = set(t.nodes)
+            for tok in req.keywords:
+                hits = set(int(v) for v in index.lookup(tok))
+                assert nodes & hits, (
+                    f"tree rooted at {t.root} does not cover keyword "
+                    f"{tok!r} for query {req.keywords}")
+            assert len(t.node_labels) == len(t.nodes), (
+                "tree served without a label per node")
+        before = svc.stats().tree_cache_hits
+        warm = svc.query(list(req.keywords), k=k, return_trees=True,
+                         tree_page_size=k)
+        assert warm.cache_hit, "identical tree request missed the cache"
+        assert svc.stats().tree_cache_hits > before, (
+            "warm tree request re-extracted instead of hitting the "
+            "tree-pool cache")
+        warm_keys = {(t.root, tuple(sorted((e.u, e.v) for e in t.edges)))
+                     for t in warm.trees.items}
+        assert warm_keys == keys, "warm tree page diverged from cold page"
+        return req.keywords, len(keys)
+    raise AssertionError(
+        f"no unique trace query yielded k={k} distinct answer trees")
 
 
 def main() -> int:
@@ -126,8 +182,12 @@ def main() -> int:
           f"max_wait_ms={cfg.max_wait_ms:g}")
 
     t0 = time.perf_counter()
+    tree_check = None
     with DKSService(engine, cfg) as svc:
         served = replay(svc, trace, n_clients=args.clients)
+        if args.smoke:
+            tree_check = verify_trees(svc, engine, trace,
+                                      k=max(2, args.k))
         stats = svc.stats()
     wall = time.perf_counter() - t0
 
@@ -158,13 +218,19 @@ def main() -> int:
             assert stats.deadline_driver_supersteps <= \
                 stats.deadline_lane_supersteps, "driver stepped more " \
                 "than its lanes billed — freeze accounting is broken"
+        assert stats.tree_requests > 0, "smoke never requested trees"
+        assert stats.tree_cache_hits > 0, \
+            "warm tree request missed the tree-pool cache"
+        kw, n_keys = tree_check
         print("smoke invariants hold: batch-fill > 1, "
               f"warm reuse > 0 ({stats.cache_hits} cache hits + "
               f"{stats.single_flight_hits} single-flight), "
               f"deadline fill {stats.mean_deadline_fill:.2f} over "
               f"{stats.deadline_dispatches} shared drivers "
               f"({stats.deadline_driver_supersteps} driver vs "
-              f"{stats.deadline_lane_supersteps} lane supersteps)")
+              f"{stats.deadline_lane_supersteps} lane supersteps); "
+              f"trees: {n_keys} distinct covering trees for {kw}, "
+              f"{stats.tree_cache_hits}/{stats.tree_requests} warm")
     return 0
 
 

@@ -17,15 +17,23 @@ Public API:
                   identical misses execute once), and deadline-bounded
                   best-so-far answers with SPA lower bounds (paper
                   Sec. 5.4 as a serving feature).
-  ServeConfig   — max_batch / max_wait_ms / cache_size / padding knobs.
+  ServeConfig   — max_batch / max_wait_ms / cache_size / padding / tree
+                  serving knobs.
   ServedResult  — QueryResult + cache_hit / approximate / opt_lower_bound
-                  / batch_size / latency_ms.
-  ServeStats    — p50/p95 latency, throughput, batch-fill, cache-hit rate.
+                  / batch_size / latency_ms / trees (a TreePage when the
+                  request asked with return_trees=True: label-rendered,
+                  diversity- or weight-ranked, cursor-paginated answer
+                  trees backed by a tree-pool LRU keyed on cache_token).
+  ServeStats    — p50/p95 latency, throughput, batch-fill, cache-hit rate,
+                  tree-request counters.
   ResultCache   — the LRU (exposed for direct use and tests).
+  TreePage / RenderedTree / RenderedEdge — the served tree payloads
+                  (re-exported from repro.answers).
   loadgen       — synthetic traces + concurrent replay clients
                   (make_trace / replay / TraceRequest).
 """
 
+from repro.answers import RenderedEdge, RenderedTree, TreePage  # noqa: F401
 from repro.serve.cache import ResultCache  # noqa: F401
 from repro.serve.service import (  # noqa: F401
     DKSService,

@@ -48,6 +48,13 @@ class Request:
     deadline_t: float | None = None
     deadline_ms: float | None = None
     cache_key: Hashable = None
+    # Answer-tree serving (DKSService.submit(return_trees=True)).  These
+    # shape only host-side rendering, never the device program, so they
+    # are NOT part of shape_key — tree and non-tree requests co-batch.
+    return_trees: bool = False
+    tree_ranking: str = "diverse"      # "diverse" | "weight"
+    tree_cursor: int = 0
+    tree_page_size: int | None = None
 
     @property
     def shape_key(self) -> tuple:

@@ -47,6 +47,7 @@ import time
 from concurrent.futures import CancelledError, Future
 from typing import Hashable, Sequence
 
+from repro.answers import TreePage, diversified_order, paginate
 from repro.engine import QueryEngine, QueryResult
 from repro.serve.batcher import MicroBatcher, Request
 from repro.serve.cache import ResultCache
@@ -87,6 +88,19 @@ class ServeConfig:
                    blanket default still costs more than deadline-less
                    serving; set it only when every request truly has that
                    budget.
+      tree_cache_size: tree-pool LRU entries (``return_trees`` serving);
+                   0 disables the tree cache.  Keyed on the engine's
+                   cache token, so it is exact-only and version-safe by
+                   construction (a rebuilt graph keys differently).
+      tree_page_size: default trees per :class:`TreePage` (a request can
+                   override per call).
+      tree_pool_factor: tree requests extract a pool of
+                   ``k * tree_pool_factor`` distinct trees, so diversified
+                   re-ranking and pagination have material beyond the
+                   top-k.
+      diversify_lambda: the MMR relevance/diversity trade-off for
+                   ``tree_ranking="diverse"`` (1 = pure weight order,
+                   0 = pure diversification).
     """
 
     max_batch: int = 8
@@ -96,12 +110,22 @@ class ServeConfig:
     strict: bool = True
     pad_batches: str = "pow2"   # "pow2" | "max" | "none"
     default_deadline_ms: float | None = None
+    tree_cache_size: int = 256
+    tree_page_size: int = 5
+    tree_pool_factor: int = 3
+    diversify_lambda: float = 0.5
 
     def __post_init__(self) -> None:
         if self.pad_batches not in ("pow2", "max", "none"):
             raise ValueError(f"unknown pad_batches {self.pad_batches!r}")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.tree_page_size < 1:
+            raise ValueError("tree_page_size must be >= 1")
+        if self.tree_pool_factor < 1:
+            raise ValueError("tree_pool_factor must be >= 1")
+        if not 0.0 <= self.diversify_lambda <= 1.0:
+            raise ValueError("diversify_lambda must be in [0, 1]")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +157,10 @@ class ServedResult:
                    buckets count their coalesced lanes too; 0 for cache
                    hits).
       latency_ms:  end-to-end submit -> resolve latency.
+      trees:       one :class:`TreePage` of label-rendered, ranked answer
+                   trees (``return_trees=True`` requests only; None
+                   otherwise).  For approximate results these are the
+                   best-so-far trees, bounded by ``opt_lower_bound``.
     """
 
     result: QueryResult
@@ -143,6 +171,7 @@ class ServedResult:
     opt_lower_bound: float | None = None
     sound_opt_lower_bound: float | None = None
     coalesced: bool = False
+    trees: TreePage | None = None
 
     @property
     def weights(self):
@@ -170,6 +199,12 @@ class DKSService:
         self.engine = engine
         self.config = config or ServeConfig()
         self._cache = ResultCache(self.config.cache_size)
+        # Tree-pool LRU: cache_token -> (ranked AnswerTree pool,
+        # exhausted).  Exact-only and version-safe for the same reason the
+        # result cache is — the token carries the engine build version.
+        # Ranking/pagination is computed per request FROM the pool, so one
+        # entry serves every cursor/page-size/ranking combination.
+        self._tree_cache = ResultCache(self.config.tree_cache_size)
         self._stats = StatsCollector()
         self._batcher = MicroBatcher(
             self._dispatch, max_batch=self.config.max_batch,
@@ -207,6 +242,10 @@ class DKSService:
 
     def submit(self, keywords: Sequence, k: int = 1, *,
                deadline_ms: float | None = None,
+               return_trees: bool = False,
+               tree_ranking: str = "diverse",
+               tree_cursor: int = 0,
+               tree_page_size: int | None = None,
                **overrides) -> "Future[ServedResult]":
         """Admit one query; returns a future resolving to a
         :class:`ServedResult`.
@@ -221,6 +260,15 @@ class DKSService:
         ``overrides``: per-call policy overrides, forwarded to the engine
         (they key both the result cache and the shape bucket).
 
+        ``return_trees``: serve a :class:`TreePage` of label-rendered
+        answer trees on ``ServedResult.trees``.  ``tree_ranking`` picks
+        the cursor order — "diverse" (MMR duplication-free, the default)
+        or "weight" (plain rank) — and ``tree_cursor``/``tree_page_size``
+        paginate over it; pass the page's ``next_cursor`` back to get the
+        following page (served from the tree cache, no device work).
+        Tree requests are exempt from single-flight (the in-flight twin
+        may not be extracting a tree pool).
+
         Identical concurrent misses are single-flighted: the first one
         executes, later ones attach to its in-flight future and resolve
         from its result (``coalesced=True``) — including its failure, if
@@ -234,6 +282,11 @@ class DKSService:
         future: Future = Future()
         if not self._batcher.running:
             raise RuntimeError("service is not running")
+        if tree_ranking not in ("diverse", "weight"):
+            future.set_exception(ValueError(
+                f"unknown tree_ranking {tree_ranking!r} "
+                "(expected 'diverse' or 'weight')"))
+            return future
         engine = self.engine  # snapshot: set_engine must not swap mid-flight
         if self.config.strict:
             missing = engine.index.missing_tokens(list(keywords))
@@ -274,9 +327,21 @@ class DKSService:
             return future
         hit = self._cache.get(cache_key, count_miss=False)
         if hit is not None:
-            self._resolve_cache_hit(future, hit, t_submit)
-            return future
-        single_flight = deadline_ms is None
+            if not return_trees:
+                self._resolve_cache_hit(future, hit, t_submit)
+                return future
+            # A tree request needs the pool too: both caches must hit —
+            # a result without its pool re-dispatches (the dense table is
+            # long gone, so re-extraction means re-running the query).
+            pool_entry = self._tree_cache.get((cache_key, "trees"))
+            if pool_entry is not None:
+                self._stats.record_tree_request(cache_hit=True)
+                page = self._render_page(
+                    pool_entry, engine, ranking=tree_ranking,
+                    cursor=tree_cursor, page_size=tree_page_size)
+                self._resolve_cache_hit(future, hit, t_submit, trees=page)
+                return future
+        single_flight = deadline_ms is None and not return_trees
         if single_flight:
             # Cross-request single-flight: an identical request is already
             # executing (same cache_token, so same engine build / k /
@@ -313,7 +378,11 @@ class DKSService:
                 deadline_t=(t_submit + deadline_ms / 1e3
                             if deadline_ms is not None else None),
                 deadline_ms=deadline_ms,
-                cache_key=cache_key))
+                cache_key=cache_key,
+                return_trees=return_trees,
+                tree_ranking=tree_ranking,
+                tree_cursor=tree_cursor,
+                tree_page_size=tree_page_size))
         except BaseException as exc:
             if single_flight:
                 self._abort_single_flight(cache_key, exc)
@@ -331,20 +400,28 @@ class DKSService:
 
     def query(self, keywords: Sequence, k: int = 1, *,
               deadline_ms: float | None = None, timeout: float | None = None,
+              return_trees: bool = False, tree_ranking: str = "diverse",
+              tree_cursor: int = 0, tree_page_size: int | None = None,
               **overrides) -> ServedResult:
         """Blocking :meth:`submit` — one served answer."""
         return self.submit(keywords, k,
-                           deadline_ms=deadline_ms, **overrides
+                           deadline_ms=deadline_ms,
+                           return_trees=return_trees,
+                           tree_ranking=tree_ranking,
+                           tree_cursor=tree_cursor,
+                           tree_page_size=tree_page_size, **overrides
                            ).result(timeout)
 
     def _resolve_cache_hit(self, future: Future, hit: QueryResult,
-                           t_submit: float) -> None:
+                           t_submit: float,
+                           trees: TreePage | None = None) -> None:
         """Resolve one future from a cached result (stats recorded)."""
         t_done = time.perf_counter()
         self._stats.record_request(t_submit, t_done)
         future.set_result(ServedResult(
             result=hit, cache_hit=True, approximate=False,
-            batch_size=0, latency_ms=(t_done - t_submit) * 1e3))
+            batch_size=0, latency_ms=(t_done - t_submit) * 1e3,
+            trees=trees))
 
     # ------------------------------------------------------------------
     # Single-flight bookkeeping
@@ -391,9 +468,28 @@ class DKSService:
     # ------------------------------------------------------------------
 
     def invalidate_cache(self) -> int:
-        """Drop every cached result (call on graph rebuild).  Returns the
-        number of entries dropped."""
-        return self._cache.invalidate()
+        """Drop every cached result and tree pool (call on graph
+        rebuild).  Returns the number of entries dropped."""
+        return self._cache.invalidate() + self._tree_cache.invalidate()
+
+    def _render_page(self, pool_entry: tuple, engine: QueryEngine, *,
+                     ranking: str, cursor: int,
+                     page_size: int | None) -> TreePage:
+        """One :class:`TreePage` from a ``(ranked pool, exhausted)``
+        entry: rank order or MMR permutation, cut at the cursor, labels
+        from the engine (artifact label blob for ingested graphs)."""
+        pool, exhausted = pool_entry
+        pool = list(pool)
+        if ranking == "diverse":
+            order = diversified_order(pool, self.config.diversify_lambda)
+        else:
+            order = list(range(len(pool)))
+        return paginate(
+            pool, order, cursor,
+            page_size if page_size is not None
+            else self.config.tree_page_size,
+            ranking, exhausted,
+            label_fn=engine.node_label, graph=engine.graph)
 
     def set_engine(self, engine: QueryEngine) -> None:
         """Swap in a rebuilt engine (graph update) and invalidate the
@@ -455,10 +551,17 @@ class DKSService:
         queries = [list(req.keywords) for req in group]
         n_real = len(queries)
         queries += [queries[-1]] * (self._padded_len(n_real) - n_real)
+        # Tree requests widen extraction to a ranked pool for the WHOLE
+        # bucket (extraction is per-lane host work; the pool rides the
+        # same device-batched backtrace pass either way) and force
+        # extraction on even for weight-only configs.
+        want_trees = any(req.return_trees for req in group)
+        pool_n = group[0].k * cfg.tree_pool_factor if want_trees else None
         # n_real: padding lanes ride the device program for shape reuse
         # but skip host-side result construction in the engine.
         results = engine.query_batch(
-            queries, k=group[0].k, extract=cfg.extract, strict=cfg.strict,
+            queries, k=group[0].k, extract=cfg.extract or want_trees,
+            extract_pool=pool_n, strict=cfg.strict,
             n_real=n_real, **dict(group[0].overrides))
         t_done = time.perf_counter()
         self._stats.record_dispatch(n_real, deadline=False)
@@ -469,11 +572,23 @@ class DKSService:
         for req, res in zip(group, results):
             if cacheable:
                 self._cache.put(req.cache_key, res)
+                if want_trees and res.answer_pool is not None:
+                    self._tree_cache.put(
+                        (req.cache_key, "trees"),
+                        (res.answer_pool, res.pool_exhausted))
+            trees = None
+            if req.return_trees:
+                self._stats.record_tree_request(cache_hit=False)
+                trees = self._render_page(
+                    (res.answer_pool or [], res.pool_exhausted), engine,
+                    ranking=req.tree_ranking, cursor=req.tree_cursor,
+                    page_size=req.tree_page_size)
             self._stats.record_request(req.t_submit, t_done)
             req.future.set_result(ServedResult(
                 result=res, cache_hit=False, approximate=False,
                 batch_size=n_real,
-                latency_ms=(t_done - req.t_submit) * 1e3))
+                latency_ms=(t_done - req.t_submit) * 1e3,
+                trees=trees))
 
     def _serve_deadline_batch(self, group: list[Request]) -> None:
         cfg = self.config
@@ -490,8 +605,11 @@ class DKSService:
         # per-lane bounds are computed once, at the end.  Queue wait
         # already counted against the deadline.
         deadline_t = min(req.deadline_t for req in group)
+        want_trees = any(req.return_trees for req in group)
+        pool_n = group[0].k * cfg.tree_pool_factor if want_trees else None
         out = engine.query_deadline_batch(
-            queries, k=group[0].k, extract=cfg.extract, strict=cfg.strict,
+            queries, k=group[0].k, extract=cfg.extract or want_trees,
+            extract_pool=pool_n, strict=cfg.strict,
             deadline_s=deadline_t - time.perf_counter(), n_real=n_real,
             **dict(group[0].overrides))
         t_done = time.perf_counter()
@@ -507,8 +625,23 @@ class DKSService:
                 # Finished inside its budget: an exact answer, cacheable
                 # like any other (unless the build was swapped while in
                 # flight — the old-version key would be unreachable).
-                # Best-so-far results are budget-specific — never cached.
+                # Best-so-far results are budget-specific — never cached,
+                # and neither are their tree pools.
                 self._cache.put(req.cache_key, res)
+                if want_trees and res.answer_pool is not None:
+                    self._tree_cache.put(
+                        (req.cache_key, "trees"),
+                        (res.answer_pool, res.pool_exhausted))
+            trees = None
+            if req.return_trees:
+                self._stats.record_tree_request(cache_hit=False)
+                # For interrupted lanes these are the BEST-SO-FAR trees,
+                # served alongside their lower bound — the paper's
+                # early-termination answer, now with explanations.
+                trees = self._render_page(
+                    (res.answer_pool or [], res.pool_exhausted), engine,
+                    ranking=req.tree_ranking, cursor=req.tree_cursor,
+                    page_size=req.tree_page_size)
             self._stats.record_request(req.t_submit, t_done,
                                        approximate=approximate)
             req.future.set_result(ServedResult(
@@ -516,4 +649,5 @@ class DKSService:
                 batch_size=n_real,
                 latency_ms=(t_done - req.t_submit) * 1e3,
                 opt_lower_bound=info["opt_lower_bound"],
-                sound_opt_lower_bound=info["sound_opt_lower_bound"]))
+                sound_opt_lower_bound=info["sound_opt_lower_bound"],
+                trees=trees))

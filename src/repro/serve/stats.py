@@ -56,6 +56,11 @@ class ServeStats:
                        served from the leader's result, no device work,
                        not counted in the cache counters.
       approximate:     requests answered best-so-far under a deadline.
+      tree_requests:   requests that asked for answer trees
+                       (``return_trees=True``).
+      tree_cache_hits: tree requests served whole from the result cache
+                       plus the tree-pool LRU — no device work, no
+                       re-extraction (re-ranking/pagination only).
       p50_ms / p95_ms / mean_ms / max_ms: end-to-end latency percentiles
                        over the last ``LATENCY_WINDOW`` requests (exact
                        until the window fills).
@@ -79,6 +84,8 @@ class ServeStats:
     cache_hit_rate: float
     single_flight_hits: int
     approximate: int
+    tree_requests: int
+    tree_cache_hits: int
     p50_ms: float
     p95_ms: float
     mean_ms: float
@@ -107,7 +114,9 @@ class ServeStats:
             f" misses={self.cache_misses}"
             f" evictions={self.cache_evictions}"
             f" hit-rate={self.cache_hit_rate:.2f}"
-            f" single-flight={self.single_flight_hits}"
+            f" single-flight={self.single_flight_hits}\n"
+            f"trees         {self.tree_requests} requests,"
+            f" {self.tree_cache_hits} served from the tree cache"
         )
 
 
@@ -134,6 +143,8 @@ class StatsCollector:
         self._deadline_driver_steps = 0
         self._deadline_lane_steps = 0
         self._single_flight = 0
+        self._tree_requests = 0
+        self._tree_cache_hits = 0
 
     def record_request(self, t_submit: float, t_done: float,
                        approximate: bool = False) -> None:
@@ -159,6 +170,14 @@ class StatsCollector:
         request (call alongside record_request for that request)."""
         with self._lock:
             self._single_flight += 1
+
+    def record_tree_request(self, cache_hit: bool) -> None:
+        """One ``return_trees`` request; ``cache_hit`` when it was served
+        whole from the result + tree caches (no extraction)."""
+        with self._lock:
+            self._tree_requests += 1
+            if cache_hit:
+                self._tree_cache_hits += 1
 
     def record_dispatch(self, n_requests: int, deadline: bool,
                         driver_steps: int = 0, lane_steps: int = 0) -> None:
@@ -206,6 +225,8 @@ class StatsCollector:
                 cache_hit_rate=hits / looked if looked else 0.0,
                 single_flight_hits=self._single_flight,
                 approximate=self._approximate,
+                tree_requests=self._tree_requests,
+                tree_cache_hits=self._tree_cache_hits,
                 p50_ms=float(np.percentile(lat, 50)) if n else 0.0,
                 p95_ms=float(np.percentile(lat, 95)) if n else 0.0,
                 mean_ms=float(lat.mean()) if n else 0.0,

@@ -331,6 +331,19 @@ class GraphArtifact:
         return _decode_strings(np.asarray(self.buffer("label_offsets")),
                                self.buffer("label_bytes"))
 
+    def label(self, i: int) -> str:
+        """Decode ONE node's label straight off the mmapped blob — answer
+        rendering pays per served node, not per graph."""
+        if not self.has_labels:
+            raise ArtifactError(f"artifact has no labels ({self.path})")
+        offsets = self.buffer("label_offsets")
+        if not 0 <= i < len(offsets) - 1:
+            raise IndexError(f"label index {i} out of range "
+                             f"[0, {len(offsets) - 1})")
+        blob = self.buffer("label_bytes")
+        return blob[int(offsets[i]):int(offsets[i + 1])].tobytes() \
+            .decode("utf-8")
+
     def __repr__(self) -> str:
         return (f"GraphArtifact({str(self.path)!r}, V={self.n_nodes:,}, "
                 f"E_sym={self.n_edges_sym:,}, "

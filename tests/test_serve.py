@@ -364,3 +364,93 @@ def test_stopped_service_rejects_submits(engine):
     svc.stop()
     with pytest.raises(RuntimeError):
         svc.submit(mid_df_tokens(engine.index, 2), k=1)
+
+
+def tree_key(t):
+    return (t.root, tuple(sorted((e.u, e.v) for e in t.edges)))
+
+
+def test_return_trees_end_to_end_from_artifact(tmp_path):
+    """The full answer pipeline off an ingested artifact: served trees are
+    label-rendered from the artifact's label blob (the graph itself
+    carries no labels in memory), diversity-ranked, paginated, and a
+    warm identical request is served whole from the tree-pool cache."""
+    from repro.graph.structure import build_graph
+    from repro.store import open_artifact, write_artifact
+
+    #   paris hotel (0) --- cafe (2) --- piano bar (1)
+    #        \------------ bistro (3) ------/
+    # plus pendants so the graph has non-answer material.
+    labels = ["paris hotel", "piano bar", "cafe central", "bistro nord",
+              "museum", "shop"]
+    src = [0, 2, 0, 3, 4, 5]
+    dst = [2, 1, 3, 1, 0, 1]
+    g = build_graph(src, dst, 6, w=np.ones(6, np.float32), labels=labels)
+    index = InvertedIndex.from_labels(labels)
+    art = write_artifact(tmp_path / "art", g, index)
+    engine = QueryEngine.build(artifact=open_artifact(art.path))
+    assert engine.graph.labels is None  # labels live only in the blob
+    with DKSService(engine, ServeConfig(cache_size=8,
+                                        tree_page_size=2)) as svc:
+        srv = svc.query(["paris", "piano"], k=2, return_trees=True)
+        page = srv.trees
+        assert page is not None and page.ranking == "diverse"
+        assert page.total >= 2 and len(page.items) == 2
+        assert len({tree_key(t) for t in page.items}) == 2
+        for t in page.items:
+            # Labels are the artifact's entity strings, not node:<id>.
+            assert t.root_label == labels[t.root]
+            assert all(lbl == labels[n]
+                       for n, lbl in zip(t.nodes, t.node_labels))
+            joined = " ".join(t.node_labels)
+            assert "paris" in joined and "piano" in joined
+        # Both two-hop connections appear among the served explanations.
+        mids = {n for t in page.items for n in t.nodes} - {0, 1}
+        assert {2, 3} <= mids
+        before = svc.stats()
+        assert before.tree_requests == 1 and before.tree_cache_hits == 0
+        executes = engine.execute_count
+        warm = svc.query(["paris", "piano"], k=2, return_trees=True)
+        assert warm.cache_hit and engine.execute_count == executes
+        assert [tree_key(t) for t in warm.trees.items] == \
+               [tree_key(t) for t in page.items]
+        assert svc.stats().tree_cache_hits == 1
+        # Tree caches drain on invalidation too.
+        assert svc.invalidate_cache() >= 2
+        assert not svc.query(["paris", "piano"], k=2,
+                             return_trees=True).cache_hit
+
+
+def test_tree_ranking_and_pagination(engine):
+    toks = mid_df_tokens(engine.index, 2)
+    with DKSService(engine, ServeConfig(cache_size=8, tree_page_size=2,
+                                        tree_pool_factor=4)) as svc:
+        srv = svc.query(toks, k=3, return_trees=True, tree_ranking="weight")
+        page = srv.trees
+        assert page.ranking == "weight"
+        ws = [t.weight for t in page.items]
+        assert ws == sorted(ws), "weight ranking must be ascending"
+        # Walk the cursor to the end: pages partition the pool, each
+        # follow-up is served from the caches (no device work).
+        seen = list(page.items)
+        cursor = page.next_cursor
+        while cursor is not None:
+            nxt = svc.query(toks, k=3, return_trees=True,
+                            tree_ranking="weight", tree_cursor=cursor)
+            assert nxt.cache_hit
+            assert nxt.trees.cursor == cursor
+            seen.extend(nxt.trees.items)
+            cursor = nxt.trees.next_cursor
+        assert len(seen) == page.total
+        assert len({tree_key(t) for t in seen}) == page.total, (
+            "pool contains duplicate trees")
+        # Diverse ranking is a permutation of the same pool.
+        div = svc.query(toks, k=3, return_trees=True,
+                        tree_ranking="diverse", tree_page_size=page.total)
+        assert {tree_key(t) for t in div.trees.items} == \
+               {tree_key(t) for t in seen}
+        # Bad ranking fails that request alone; the service lives on.
+        with pytest.raises(ValueError, match="tree_ranking"):
+            svc.submit(toks, k=1, return_trees=True,
+                       tree_ranking="bogus").result(timeout=60)
+        assert svc.query(toks, k=3, return_trees=True).trees is not None
