@@ -252,6 +252,82 @@ def fig_sharded_batch(n_nodes=4000, n_edges=12000, k=1, batch=16,
     }
 
 
+def fig_weighted_relax(n_nodes=4000, n_edges=12000, k=2, repeats=5):
+    """Weight-policy cost at query time, measured: the typed channel is
+    folded into the effective weight vector ONCE at engine build
+    (:func:`repro.graph.weights.apply_weight_policy`), so the relaxation
+    kernels stay single-weight — a confidence-blended engine must run the
+    *same* device program as the default degree engine, just over
+    different weight values.  Three asserts make that the acceptance
+    criterion: (a) under the default policy a typed graph serves
+    bit-identical weights to its untyped twin (the channel rides along
+    invisibly); (b) the two policies produce distinct ``cache_token``s on
+    the same build inputs (answers must never cross policies); (c) the
+    confidence engine's per-superstep time stays within 1.5x of the
+    degree engine's (a regression here means policy work leaked into the
+    superstep loop).  Best-of-``repeats`` timings, warmed per engine."""
+    from repro.graph import WeightPolicy, build_graph
+    from repro.graph.generators import lod_like_graph
+    from repro.graph.index import InvertedIndex, mid_df_tokens
+
+    g, tokens = lod_like_graph(n_nodes, n_edges, seed=13, vocab=200)
+    rng = np.random.default_rng(13)
+    pred = rng.integers(0, 3, size=len(g.src)).astype(np.int32)
+    conf = rng.uniform(0.5, 2.0, size=len(g.src)).astype(np.float32)
+    gt = build_graph(g.src, g.dst, g.n_nodes, w=g.w,
+                     pred=pred, conf=conf,
+                     pred_names=["cites", "knows", "funds"])
+    index = InvertedIndex.from_token_matrix(tokens)
+
+    e_plain = QueryEngine.build(g, index=index,
+                                policy=ExecutionPolicy(max_supersteps=32))
+    e_deg = QueryEngine.build(gt, index=index,
+                              policy=ExecutionPolicy(max_supersteps=32))
+    e_conf = QueryEngine.build(
+        gt, index=index,
+        policy=ExecutionPolicy(
+            max_supersteps=32,
+            weights=WeightPolicy(kind="confidence", blend=1.0)))
+
+    mid = mid_df_tokens(index)
+    q = mid[:: max(1, len(mid) // 3)][:3]
+
+    r_plain = e_plain.query(q, k=k, extract=False)   # doubles as warm-up
+    r_deg = e_deg.query(q, k=k, extract=False)
+    r_conf = e_conf.query(q, k=k, extract=False)
+    np.testing.assert_array_equal(
+        r_plain.weights, r_deg.weights,
+        err_msg="typed channel changed default-policy answers — the "
+                "degree policy must leave a typed graph's weights alone")
+    assert e_deg.cache_token(q, k=k) != e_conf.cache_token(q, k=k), (
+        "two weight policies over the same build share a cache token — "
+        "a result cache would serve one policy's answers to the other")
+
+    t_deg = min(_timed(lambda: e_deg.query(q, k=k, extract=False))
+                for _ in range(repeats))
+    t_conf = min(_timed(lambda: e_conf.query(q, k=k, extract=False))
+                 for _ in range(repeats))
+    per_step_deg = t_deg / max(r_deg.supersteps, 1)
+    per_step_conf = t_conf / max(r_conf.supersteps, 1)
+    ratio = per_step_conf / max(per_step_deg, 1e-9)
+    assert ratio <= 1.5, (
+        f"confidence policy costs {ratio:.2f}x per superstep vs degree "
+        f"({per_step_conf*1e3:.2f} vs {per_step_deg*1e3:.2f} ms) — weight "
+        f"policy work leaked into the superstep loop")
+    return {
+        "m": len(q),
+        "k": k,
+        "n_nodes": n_nodes,
+        "degree_s": round(t_deg, 4),
+        "confidence_s": round(t_conf, 4),
+        "degree_supersteps": r_deg.supersteps,
+        "confidence_supersteps": r_conf.supersteps,
+        "per_superstep_ratio": round(ratio, 3),
+        "default_policy_parity": True,
+        "distinct_cache_tokens": True,
+    }
+
+
 def fig_extract(n_nodes=6000, n_edges=18000, k=3, buckets=(1, 4, 8, 16),
                 repeats=3):
     """Answer-tree reconstruction cost: per-query host extraction vs the

@@ -99,6 +99,7 @@ def main() -> None:
     record("fig15_sharded_vs_single", dks.fig15_sharded_vs_single,
            n_queries=2 if not args.full else 8)
     record("fig_sharded_batch", dks.fig_sharded_batch)
+    record("fig_weighted_relax", dks.fig_weighted_relax)
     record("fig_extract", dks.fig_extract,
            buckets=(1, 4, 8) if not args.full else (1, 4, 8, 16))
     record("fig_serve_throughput", sv.fig_serve_throughput,
@@ -134,6 +135,7 @@ def main() -> None:
             "per_figure_wall_s": dks_figs,
             "sharded_vs_single": results.get("fig15_sharded_vs_single"),
             "sharded_batch": results.get("fig_sharded_batch"),
+            "weighted_relax": results.get("fig_weighted_relax"),
             "extract": results.get("fig_extract"),
         }
         (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))

@@ -22,6 +22,11 @@ class RenderedEdge:
     u_label: str
     v_label: str
     weight: float
+    # Provenance of the effective edge (typed graphs only): the predicate
+    # name and confidence of the cheapest parallel entry — the one the
+    # backtrace resolved.  None / 1.0 on untyped graphs.
+    predicate: str | None = None
+    confidence: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +43,18 @@ class RenderedTree:
 
     def describe(self) -> str:
         """One-line human rendering: root, weight, then each edge as
-        ``label --w--> label``."""
+        ``label --w-- label`` (``label --w[predicate]-- label`` on typed
+        graphs)."""
         if not self.edges:
             return f"[{self.weight:.3f}] {self.root_label} (single node)"
-        parts = " ; ".join(
-            f"{e.u_label} --{e.weight:.2f}-- {e.v_label}" for e in self.edges
-        )
+
+        def _edge(e: RenderedEdge) -> str:
+            tag = f"{e.weight:.2f}"
+            if e.predicate is not None:
+                tag += f"[{e.predicate}]"
+            return f"{e.u_label} --{tag}-- {e.v_label}"
+
+        parts = " ; ".join(_edge(e) for e in self.edges)
         return f"[{self.weight:.3f}] root={self.root_label}: {parts}"
 
 
@@ -76,15 +87,25 @@ def render_tree(
 ) -> RenderedTree:
     """Label-render one tree.  ``label_fn`` maps node id -> entity string
     (default ``node:<id>``); ``graph`` supplies true per-edge weights
-    (omitted -> edge weights rendered as 0)."""
+    (omitted -> edge weights rendered as 0) and, when typed, the
+    provenance tag (predicate name + confidence) of each effective edge.
+    """
     label_fn = label_fn or default_label
-    edges = tuple(
-        RenderedEdge(
+
+    def _render_edge(u: int, v: int) -> RenderedEdge:
+        weight = 0.0
+        predicate: str | None = None
+        confidence = 1.0
+        if graph is not None:
+            weight = round(_edge_weight(graph, u, v), 6)
+            info = graph.edge_channel(u, v)
+            if info is not None:
+                predicate, confidence = info
+        return RenderedEdge(
             u=u, v=v, u_label=label_fn(u), v_label=label_fn(v),
-            weight=round(_edge_weight(graph, u, v), 6) if graph is not None else 0.0,
-        )
-        for u, v in tree.edges
-    )
+            weight=weight, predicate=predicate, confidence=confidence)
+
+    edges = tuple(_render_edge(u, v) for u, v in tree.edges)
     return RenderedTree(
         root=tree.root,
         root_label=label_fn(tree.root),

@@ -16,8 +16,12 @@ Public API:
   QueryEngine      — owns graph device residency, the inverted index, and
                      the compiled-executable cache; query / query_batch /
                      query_stream / query_instrumented.
-  ExecutionPolicy  — backend (jnp | pallas) and partitioning (single |
-                     sharded mesh) selection, made once at build time.
+  ExecutionPolicy  — backend (jnp | pallas), partitioning (single |
+                     sharded mesh), and WeightPolicy (how the typed edge
+                     channel becomes effective weights) selection, made
+                     once at build time.
+  WeightPolicy     — degree | confidence-blended | predicate-filtered
+                     ranking semantics (re-exported from repro.graph).
   QueryResult      — ranked AnswerTrees + superstep/message stats + SPA
                      approximation bounds (paper Sec. 5.4 / Fig. 12).
   StreamUpdate     — per-superstep approximate answers with monotonically
@@ -28,3 +32,4 @@ Public API:
 from repro.engine.engine import QueryEngine  # noqa: F401
 from repro.engine.policy import ExecutionPolicy  # noqa: F401
 from repro.engine.result import QueryResult, StreamUpdate  # noqa: F401
+from repro.graph.weights import WeightPolicy  # noqa: F401

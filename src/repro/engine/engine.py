@@ -181,6 +181,14 @@ class QueryEngine:
             else:
                 raise ValueError(
                     "QueryEngine.build needs tokens=, index=, or graph.labels")
+        # Fold the weight policy into the weight vectors ONCE, before any
+        # device packing: the dense DeviceGraph, the sharded FrontierGraph,
+        # host answer backtrace, and rendering all read the same effective
+        # weights — the relaxation kernels never know a policy existed.
+        # The default policy is the identity (same Graph object), which is
+        # what keeps pre-typed artifacts bit-identical.
+        from repro.graph.weights import apply_weight_policy
+        graph = apply_weight_policy(graph, policy.weights)
         mesh = None
         if policy.partition == "sharded":
             from repro.core.dks_sharded import pack_frontier_graph
@@ -265,8 +273,22 @@ class QueryEngine:
         norm = tuple(sorted((type(t).__name__, t) for t in keywords))
         policy = self.policy
         if overrides:
+            self._check_overrides(overrides)
             policy = dataclasses.replace(policy, **overrides)
         return (norm, int(k), policy, self.version)
+
+    @staticmethod
+    def _check_overrides(overrides: dict) -> None:
+        """Per-call overrides must not change the weight policy: the
+        device graph was packed with the build policy's effective weights,
+        so a per-query ``weights=`` would silently rank on the wrong
+        vector.  Build a second engine instead."""
+        if "weights" in overrides:
+            raise ValueError(
+                "the weight policy is fixed at engine build (the device "
+                "graph is packed with its effective weights) — build an "
+                "engine with ExecutionPolicy(weights=...) instead of "
+                "overriding per call")
 
     def node_label(self, v: int) -> str:
         """Entity string for a node: in-memory graph labels when present,
@@ -279,6 +301,13 @@ class QueryEngine:
         if self.artifact is not None and self.artifact.has_labels:
             return self.artifact.label(v)
         return f"node:{v}"
+
+    def edge_info(self, u: int, v: int) -> tuple[str | None, float] | None:
+        """``(predicate_name, confidence)`` of the effective edge between
+        ``u`` and ``v`` (the cheapest parallel entry — the one backtrace
+        resolved), or None on untyped graphs.  Rendering uses this to
+        label answer-tree edges with their provenance."""
+        return self.graph.edge_channel(int(u), int(v))
 
     def _backtracer(self):
         """The lazily-built device-batched backtracer (repro.answers);
@@ -795,6 +824,7 @@ class QueryEngine:
             raise ValueError("a query needs at least one keyword")
         policy = self.policy
         if overrides:
+            self._check_overrides(overrides)
             policy = dataclasses.replace(policy, **overrides)
         return policy.dks_config(m, k)
 

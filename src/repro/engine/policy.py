@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.dks import DKSConfig
+from repro.graph.weights import WeightPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +32,12 @@ class ExecutionPolicy:
                   of local devices.
       exit_mode:  "sound" (stop once no better answer can appear, Sec. 6) or
                   "none" (run to frontier exhaustion).
+      weights:    :class:`~repro.graph.weights.WeightPolicy` — how the typed
+                  edge channel becomes the effective weight vector.  Applied
+                  ONCE at engine build (the device graph is packed with the
+                  effective weights), so it cannot be overridden per query;
+                  it rides inside ``cache_token`` so caches never cross
+                  ranking semantics.
       max_supersteps / message_budget / frontier_frac / combine_passes:
                   forwarded to :class:`DKSConfig` (paper Sec. 5.4 budget and
                   forced-stop semantics).
@@ -44,6 +51,7 @@ class ExecutionPolicy:
     message_budget: float = float("inf")
     frontier_frac: float = 0.25
     combine_passes: int | None = None
+    weights: WeightPolicy = WeightPolicy()
 
     def __post_init__(self) -> None:
         if self.backend not in ("jnp", "pallas"):
@@ -52,6 +60,9 @@ class ExecutionPolicy:
             raise ValueError(f"unknown partition {self.partition!r}")
         if self.exit_mode not in ("sound", "none"):
             raise ValueError(f"unknown exit_mode {self.exit_mode!r}")
+        if not isinstance(self.weights, WeightPolicy):
+            raise ValueError(
+                f"weights must be a WeightPolicy, got {self.weights!r}")
 
     def dks_config(self, m: int, k: int) -> DKSConfig:
         """Materialize the per-query static config for an (m, k) shape."""

@@ -1,3 +1,8 @@
 """Graph substrate: storage, partitioning, text index, sampling, generators."""
 
-from repro.graph.structure import DeviceGraph, Graph, build_graph  # noqa: F401
+from repro.graph.structure import (  # noqa: F401
+    DeviceGraph, Graph, MIN_EDGE_WEIGHT, build_graph,
+)
+from repro.graph.weights import (  # noqa: F401
+    WeightPolicy, apply_weight_policy, effective_weights,
+)

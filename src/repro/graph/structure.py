@@ -13,6 +13,13 @@ Edge weights follow the paper (Sec. 7.1): ``w(e) = int(log10(d_in(dst)))``
 clipped to >= 1 below a degree threshold tau, and "infinite" (the INF
 sentinel) above it — high-degree hub nodes are effectively disconnected,
 which is what keeps relationship queries meaningful on LOD data.
+
+Both views optionally carry a *typed channel*: per-edge ``(pred, conf)``
+where ``pred`` is an id into ``pred_names`` and ``conf`` a positive
+provenance score.  The channel never enters the semiring directly — a
+:class:`repro.graph.weights.WeightPolicy` folds it into the effective
+weight vector before device packing, so the relaxation kernels stay
+single-weight.
 """
 
 from __future__ import annotations
@@ -25,6 +32,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import INF
+
+# Floor for effective edge weights.  Theorem 1 needs w > 0; confidence
+# scaling (``w / conf**blend``) can push a weight arbitrarily close to 0,
+# and float32 provenance scores can even round it *to* 0 — instead of
+# raising mid-ingest, weights in [0, MIN_EDGE_WEIGHT) clamp up to this
+# floor (negative weights still raise: they are caller bugs, not rounding).
+MIN_EDGE_WEIGHT = 1e-3
 
 
 @jax.tree_util.register_dataclass
@@ -39,6 +53,11 @@ class DeviceGraph:
       out_degree: int32[V_pad] symmetric degree (0 on padded nodes).
       node_valid: bool[V_pad].
       n_nodes / n_edges: static true counts (pre-padding).
+      pred / conf: optional typed channel, int32[E_pad] predicate ids
+        (-1 on padded entries) and float32[E_pad] confidences (1.0 on
+        padded entries); None on untyped graphs.  ``w`` is always the
+        *effective* weight the relaxation consumes — the channel rides
+        along for provenance-aware consumers, not for the kernels.
     """
 
     src: jax.Array
@@ -49,6 +68,8 @@ class DeviceGraph:
     node_valid: jax.Array
     n_nodes: int = dataclasses.field(metadata=dict(static=True))
     n_edges: int = dataclasses.field(metadata=dict(static=True))
+    pred: jax.Array | None = None
+    conf: jax.Array | None = None
 
     @property
     def v_pad(self) -> int:
@@ -82,6 +103,17 @@ class Graph:
     # to_device then skips the argsort); None on in-memory graphs, where
     # retaining a second edge-list copy would cost real host memory.
     sym_sorted: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
+    # Optional typed channel.  pred/conf align with the raw directed
+    # edges (src/dst/w); csr_pred/csr_conf align with indices/ew;
+    # sym_typed = (pred, conf) aligns with sym_sorted.  A graph is
+    # "typed" iff csr_pred is not None (the CSR channel is what answer
+    # reconstruction and weight policies consume).
+    pred: np.ndarray | None = None
+    conf: np.ndarray | None = None
+    csr_pred: np.ndarray | None = None
+    csr_conf: np.ndarray | None = None
+    sym_typed: tuple[np.ndarray, np.ndarray] | None = None
+    pred_names: list[str] | None = None
 
     @property
     def n_edges_directed(self) -> int:
@@ -91,9 +123,31 @@ class Graph:
     def n_edges_sym(self) -> int:
         return len(self.indices)
 
+    @property
+    def typed(self) -> bool:
+        return self.csr_pred is not None
+
     def neighbors(self, v: int) -> tuple[np.ndarray, np.ndarray]:
         s, e = self.indptr[v], self.indptr[v + 1]
         return self.indices[s:e], self.ew[s:e]
+
+    def edge_channel(self, u: int, v: int) -> tuple[str | None, float] | None:
+        """``(predicate_name, confidence)`` of the *cheapest* parallel
+        edge between ``u`` and ``v`` — the entry ``_edge_weight`` (and so
+        backtrace / rendering) resolves to.  None on untyped graphs or
+        when no such edge exists."""
+        if self.csr_pred is None:
+            return None
+        s, e = self.indptr[u], self.indptr[u + 1]
+        hits = np.nonzero(self.indices[s:e] == v)[0]
+        if not len(hits):
+            return None
+        j = int(hits[int(np.argmin(self.ew[s:e][hits]))])
+        pid = int(self.csr_pred[s:e][j])
+        name = None
+        if self.pred_names is not None and 0 <= pid < len(self.pred_names):
+            name = self.pred_names[pid]
+        return name, float(self.csr_conf[s:e][j])
 
     def sym_sorted_edges(
         self, cache: bool = False,
@@ -117,6 +171,23 @@ class Graph:
         if cache:
             self.sym_sorted = triple
         return triple
+
+    def sym_typed_edges(
+        self, cache: bool = False,
+    ) -> tuple[np.ndarray, np.ndarray] | None:
+        """Typed channel aligned with :meth:`sym_sorted_edges` — the same
+        stable dst-argsort of the CSR arrays, so ``sym_pred[i]`` describes
+        the edge ``(sym_src[i], sym_dst[i])``.  None on untyped graphs."""
+        if self.csr_pred is None:
+            return None
+        if self.sym_typed is not None:
+            return self.sym_typed
+        order = np.argsort(self.indices.astype(np.int32), kind="stable")
+        typed = (self.csr_pred[order].astype(np.int32, copy=False),
+                 self.csr_conf[order].astype(np.float32, copy=False))
+        if cache:
+            self.sym_typed = typed
+        return typed
 
     def to_device(
         self,
@@ -145,11 +216,18 @@ class Graph:
         out_degree[:v] = deg
         node_valid = np.zeros(v_pad, bool)
         node_valid[:v] = True
+        pred = conf = None
+        typed = self.sym_typed_edges()
+        if typed is not None:
+            pred = jnp.asarray(np.concatenate(
+                [typed[0], np.full(pad_e, -1, np.int32)]))
+            conf = jnp.asarray(np.concatenate(
+                [typed[1], np.ones(pad_e, np.float32)]))
         return DeviceGraph(
             src=jnp.asarray(src), dst=jnp.asarray(dst), w=jnp.asarray(w),
             valid=jnp.asarray(valid), out_degree=jnp.asarray(out_degree),
             node_valid=jnp.asarray(node_valid),
-            n_nodes=v, n_edges=e,
+            n_nodes=v, n_edges=e, pred=pred, conf=conf,
         )
 
 
@@ -175,44 +253,89 @@ def build_graph(
     w: np.ndarray | None = None,
     labels: list[str] | None = None,
     tau: int = 1001,
+    pred: np.ndarray | None = None,
+    conf: np.ndarray | None = None,
+    pred_names: list[str] | None = None,
 ) -> Graph:
     """Build a host Graph from directed edges; symmetrize; CSR-index.
 
     If ``w`` is None, weights follow the paper's degree model. Reverse edges
     get the same weight as the forward edge (paper Sec. 4: "we also include
     the reverse edges with the same edge-weight").
+
+    ``pred``/``conf`` attach the typed channel (per directed edge:
+    predicate id into ``pred_names``, positive confidence).  Dedup is then
+    *type-aware*: parallel edges with distinct predicates survive as
+    parallel CSR entries (the untyped dedup keeps only the min weight per
+    ``(u, v)``, which would silently collapse them); per ``(u, v, pred)``
+    the min-weight (then max-confidence) entry wins.
+
+    Weights in ``[0, MIN_EDGE_WEIGHT)`` clamp up to the floor rather than
+    raising — confidence-scaled weights legitimately round to 0 in
+    float32; negative weights are still an error.
     """
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
     if w is None:
         w = degree_weights(dst, n_nodes, tau=tau)
     w = np.asarray(w, np.float32)
-    if len(src) and (w <= 0).any():
-        raise ValueError("edge weights must be positive (paper requires w>0)")
+    if len(src) and (w < 0).any():
+        raise ValueError("edge weights must be non-negative (paper requires w>0)")
+    w = np.where(w < MIN_EDGE_WEIGHT, np.float32(MIN_EDGE_WEIGHT), w)
+    if conf is not None and pred is None:
+        raise ValueError("conf requires pred (readers synthesize a "
+                         "predicate id when only confidences exist)")
+    typed = pred is not None
+    if typed:
+        pred = np.asarray(pred, np.int32)
+        conf = (np.ones(len(src), np.float32) if conf is None
+                else np.asarray(conf, np.float32))
+        if len(src) and (conf <= 0).any():
+            raise ValueError("edge confidences must be positive")
 
     # Symmetrize: forward + reverse with equal weight; drop exact duplicates
-    # keeping the minimum weight per (u, v).
+    # keeping the minimum weight per (u, v) — per (u, v, pred) when typed.
     u = np.concatenate([src, dst])
     v = np.concatenate([dst, src])
     ww = np.concatenate([w, w])
+    pp = np.concatenate([pred, pred]) if typed else None
+    cc = np.concatenate([conf, conf]) if typed else None
     # Remove self loops (contribute nothing to trees).
     keep = u != v
     u, v, ww = u[keep], v[keep], ww[keep]
+    if typed:
+        pp, cc = pp[keep], cc[keep]
     if len(u):
         key = u.astype(np.int64) * n_nodes + v.astype(np.int64)
-        order = np.lexsort((ww, key))
-        key, u, v, ww = key[order], u[order], v[order], ww[order]
-        first = np.ones(len(key), bool)
-        first[1:] = key[1:] != key[:-1]
-        u, v, ww = u[first], v[first], ww[first]
+        if typed:
+            # Sort by (u,v), then pred, then weight asc, then conf desc:
+            # the first row of each (u, v, pred) group is the keeper.
+            order = np.lexsort((-cc, ww, pp, key))
+            key, u, v, ww = key[order], u[order], v[order], ww[order]
+            pp, cc = pp[order], cc[order]
+            first = np.ones(len(key), bool)
+            first[1:] = (key[1:] != key[:-1]) | (pp[1:] != pp[:-1])
+            u, v, ww, pp, cc = u[first], v[first], ww[first], pp[first], cc[first]
+        else:
+            order = np.lexsort((ww, key))
+            key, u, v, ww = key[order], u[order], v[order], ww[order]
+            first = np.ones(len(key), bool)
+            first[1:] = key[1:] != key[:-1]
+            u, v, ww = u[first], v[first], ww[first]
 
     order = np.argsort(u, kind="stable")
     u, v, ww = u[order], v[order], ww[order]
+    if typed:
+        pp, cc = pp[order], cc[order]
     counts = np.bincount(u, minlength=n_nodes)
     indptr = np.zeros(n_nodes + 1, np.int64)
     np.cumsum(counts, out=indptr[1:])
     return Graph(
-        n_nodes=n_nodes, src=src, dst=dst, w=w,
+        n_nodes=n_nodes, src=src, dst=dst, w=w.astype(np.float32, copy=False),
         indptr=indptr, indices=v.astype(np.int32), ew=ww.astype(np.float32),
         labels=labels,
+        pred=pred, conf=conf,
+        csr_pred=pp.astype(np.int32, copy=False) if typed else None,
+        csr_conf=cc.astype(np.float32, copy=False) if typed else None,
+        pred_names=list(pred_names) if pred_names is not None else None,
     )

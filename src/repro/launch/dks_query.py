@@ -18,9 +18,36 @@ import time
 
 from repro import INF
 from repro.configs import DKS_CONFIGS
-from repro.engine import ExecutionPolicy, QueryEngine
+from repro.engine import ExecutionPolicy, QueryEngine, WeightPolicy
 from repro.graph.generators import lod_like_graph
 from repro.graph.index import InvertedIndex, mid_df_tokens
+
+
+def add_weight_policy_args(ap: argparse.ArgumentParser) -> None:
+    """The shared --weight-policy / --blend / --predicate-filter flags
+    (dks_query and serve_dks accept the same provenance-ranking knobs)."""
+    ap.add_argument("--weight-policy", default="degree",
+                    choices=["degree", "confidence"],
+                    help="edge-weight semantics: 'degree' = the stored "
+                         "(paper Sec. 7.1) weights; 'confidence' = blend "
+                         "per-edge provenance into the length "
+                         "(w / conf**blend) — needs a typed artifact")
+    ap.add_argument("--blend", type=float, default=1.0,
+                    help="confidence exponent for --weight-policy "
+                         "confidence (higher = provenance bites harder)")
+    ap.add_argument("--predicate-filter", default=None,
+                    help="comma-separated predicate names to allow; edges "
+                         "with any other predicate are disconnected (INF) "
+                         "— needs a typed artifact")
+
+
+def weight_policy_from_args(args) -> WeightPolicy:
+    preds = None
+    if args.predicate_filter:
+        preds = tuple(p.strip() for p in args.predicate_filter.split(",")
+                      if p.strip())
+    return WeightPolicy(kind=args.weight_policy, blend=args.blend,
+                        predicates=preds)
 
 
 def load_dataset(name: str):
@@ -71,6 +98,7 @@ def main() -> int:
                     choices=["single", "sharded"],
                     help="sharded = frontier-compressed shard_map over the "
                          "local devices (runs on any jax via repro.shardmap)")
+    add_weight_policy_args(ap)
     ap.add_argument("--stream", action="store_true",
                     help="print per-superstep answers with SPA bounds")
     ap.add_argument("--extract", action="store_true",
@@ -87,12 +115,15 @@ def main() -> int:
         exit_mode=args.exit_mode,
         max_supersteps=args.max_supersteps,
         message_budget=args.message_budget,
+        weights=weight_policy_from_args(args),
     )
     ds, engine = build_engine(args.dataset, policy,
                               artifact=args.artifact)
     source = args.artifact if args.artifact else ds.name
     print(f"loaded {source}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
           f"({time.time()-t0:.1f}s)")
+    if not policy.weights.is_default:
+        print(f"weight policy: {policy.weights}")
 
     index = engine.index
     if args.query:

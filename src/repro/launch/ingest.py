@@ -82,6 +82,96 @@ def verify_roundtrip(result, artifact, *, n_queries: int = 3,
     return len(queries)
 
 
+def _typed_fixture_lines() -> list[str]:
+    """A small typed N-Triples fixture: a ``knows`` backbone (so a
+    predicate-filtered engine stays connected), ``cites``/``funds`` cross
+    edges, and N-Quads-style numeric 4th terms on some statements (the
+    reader's per-statement confidence convention)."""
+    def uri(i: int) -> str:
+        return f"<http://x.example/e{i}>"
+
+    lines = []
+    n = 24
+    for i in range(n - 1):   # knows backbone, alternating confidences
+        conf = " 0.9" if i % 2 else ""
+        lines.append(f"{uri(i)} <http://p.example/knows> {uri(i+1)}{conf} .")
+    for i in range(0, n - 6, 3):   # cites cross edges, explicit confidence
+        lines.append(f"{uri(i)} <http://p.example/cites> {uri(i+6)} "
+                     f"\"0.5\"^^<http://www.w3.org/2001/XMLSchema#double> .")
+    for i in range(0, n - 9, 4):   # funds long-range edges, high confidence
+        lines.append(f"{uri(i)} <http://p.example/funds> {uri(i+9)} 4 .")
+    return lines
+
+
+def typed_smoke(tmp: Path, *, max_supersteps: int = 16) -> None:
+    """Smoke leg for the typed edge channel: ingest a confidence-annotated
+    N-Triples fixture, persist + reopen the v2 artifact, and assert (a)
+    the predicate dictionary survives into the manifest, (b) default and
+    predicate-filtered queries are bit-identical between the in-memory
+    build and the mmapped artifact engine, and (c) a filtered engine's
+    rendered trees carry only allowed predicates."""
+    from repro.answers import render_tree
+    from repro.graph import WeightPolicy
+
+    fixture = tmp / "typed-fixture.nt"
+    fixture.write_text("\n".join(_typed_fixture_lines()) + "\n",
+                       encoding="utf-8")
+    result = ingest_ntriples(fixture)
+    assert result.stats.n_predicates == 3, result.stats.n_predicates
+    assert result.graph.typed
+
+    out = tmp / "typed-artifact"
+    artifact = write_artifact(out, result.graph, result.index,
+                              tau=result.tau,
+                              stats=result.stats.as_dict(), overwrite=True)
+    reopened = open_artifact(out, verify="full")
+    assert reopened.format_version == 2, reopened.format_version
+    assert reopened.typed
+    assert set(reopened.predicates) == {"knows", "cites", "funds"}, \
+        reopened.predicates
+
+    queries = [["e3", "e7"], ["e2", "e10"], ["e1", "e5", "e9"]]
+    policies = [
+        ExecutionPolicy(max_supersteps=max_supersteps),
+        ExecutionPolicy(max_supersteps=max_supersteps,
+                        weights=WeightPolicy(predicates=("knows",))),
+        ExecutionPolicy(max_supersteps=max_supersteps,
+                        weights=WeightPolicy(kind="confidence", blend=1.0)),
+    ]
+    for policy in policies:
+        e_mem = QueryEngine.build(result.graph, index=result.index,
+                                  policy=policy)
+        e_art = QueryEngine.build(artifact=reopened, policy=policy)
+        for q in queries:
+            r_mem = e_mem.query(q, k=2, extract=False)
+            r_art = e_art.query(q, k=2, extract=False)
+            np.testing.assert_array_equal(
+                r_mem.weights, r_art.weights,
+                err_msg=f"typed artifact parity broke for {q!r} "
+                        f"under {policy.weights}")
+            assert r_mem.supersteps == r_art.supersteps, (q, policy.weights)
+
+    # Predicate-filtered end-to-end: every rendered edge of every answer
+    # tree must carry an allowed predicate.
+    filt = QueryEngine.build(
+        artifact=reopened,
+        policy=ExecutionPolicy(max_supersteps=max_supersteps,
+                               weights=WeightPolicy(predicates=("knows",))))
+    res = filt.query(["e3", "e7"], k=2)
+    assert res.answers, "filtered query returned no answer trees"
+    for a in res.answers:
+        rt = render_tree(a, label_fn=filt.node_label, graph=filt.graph)
+        for e in rt.edges:
+            assert e.predicate == "knows", (
+                f"filtered tree served a {e.predicate!r} edge: "
+                f"{rt.describe()}")
+    print(f"typed smoke invariants hold: {result.stats.n_predicates} "
+          f"predicates persisted in a format-v{reopened.format_version} "
+          f"artifact; default/filtered/confidence parity on "
+          f"{len(queries)} queries; filtered trees carry only 'knows' "
+          f"edges ({len(res.answers)} trees checked)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     src = ap.add_mutually_exclusive_group()
@@ -183,6 +273,8 @@ def main() -> int:
         assert reopened.content_hash == artifact.content_hash
         print("ingest smoke invariants hold: checksum-verified reopen, "
               "query parity, true edge counts")
+        typed_smoke(Path(tmp_ctx.name),
+                    max_supersteps=args.max_supersteps)
         tmp_ctx.cleanup()
     return 0
 

@@ -26,7 +26,8 @@ import time
 import numpy as np
 
 from repro.engine import ExecutionPolicy
-from repro.launch.dks_query import build_engine
+from repro.launch.dks_query import (add_weight_policy_args, build_engine,
+                                    weight_policy_from_args)
 from repro.serve import DKSService, ServeConfig
 from repro.serve.loadgen import make_trace, replay
 
@@ -145,6 +146,7 @@ def main() -> int:
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--partition", default="single",
                     choices=["single", "sharded"])
+    add_weight_policy_args(ap)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the direct-engine parity pass")
@@ -163,12 +165,15 @@ def main() -> int:
     t0 = time.time()
     policy = ExecutionPolicy(
         backend=args.backend, partition=args.partition,
-        max_supersteps=args.max_supersteps)
+        max_supersteps=args.max_supersteps,
+        weights=weight_policy_from_args(args))
     ds, engine = build_engine(args.dataset, policy,
                               artifact=args.artifact)
     source = args.artifact if args.artifact else ds.name
     print(f"loaded {source}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
           f"({time.time()-t0:.1f}s)")
+    if not policy.weights.is_default:
+        print(f"weight policy: {policy.weights}")
 
     trace = make_trace(
         engine.index, args.requests, unique=args.unique, k=args.k,

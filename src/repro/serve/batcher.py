@@ -59,13 +59,19 @@ class Request:
     @property
     def shape_key(self) -> tuple:
         # The engine build is part of the shape: requests admitted under
-        # different builds must never share a dispatch.  The *budget*
-        # (deadline_ms, not the absolute deadline) is part of it too:
-        # same-budget requests ride one lane driver and stop together;
-        # deadline-less requests (None) bucket separately.
+        # different builds must never share a dispatch.  So is the build's
+        # WEIGHT POLICY: two engines over the same artifact share a
+        # version (the content hash) but may rank on different effective
+        # weights — co-batching them would serve one policy's answers to
+        # the other's requests.  The *budget* (deadline_ms, not the
+        # absolute deadline) is part of it too: same-budget requests ride
+        # one lane driver and stop together; deadline-less requests
+        # (None) bucket separately.
         version = self.engine.version if self.engine is not None else None
+        weights = (getattr(self.engine.policy, "weights", None)
+                   if self.engine is not None else None)
         return (len(self.keywords), self.k, self.overrides, version,
-                self.deadline_ms)
+                weights, self.deadline_ms)
 
 
 _STOP = object()

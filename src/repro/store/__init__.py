@@ -36,6 +36,7 @@ write -> reopen -> verify query parity; ``--smoke`` for CI).
 
 from repro.store.artifact import (  # noqa: F401
     FORMAT_VERSION,
+    SUPPORTED_VERSIONS,
     ArtifactError,
     ChecksumError,
     FormatVersionError,

@@ -12,6 +12,11 @@ A :class:`GraphArtifact` is a directory of raw ``.npy`` buffers plus a
       ew.npy
       sym_src.npy sym_dst.npy  dst-sorted symmetric edge list — the exact
       sym_w.npy                DeviceGraph layout, so loading skips the sort
+      pred.npy conf.npy        typed channel (format v2, typed graphs only):
+      csr_pred.npy             per-edge predicate id + confidence for the
+      csr_conf.npy             directed, CSR, and dst-sorted symmetric
+      sym_pred.npy             layouts; the predicate dictionary itself
+      sym_conf.npy             lives in the manifest (``predicates``)
       post_offsets.npy         InvertedIndex frozen postings (int64[T+1] /
       post_nodes.npy           int32[sum df]) + the vocabulary keys
       token_keys.npy           (int tokens)  — or token_offsets.npy +
@@ -58,7 +63,13 @@ from repro.graph.index import InvertedIndex
 from repro.graph.structure import Graph
 
 MAGIC = "repro-graph-artifact"
-FORMAT_VERSION = 1
+# v1: untyped single-weight artifacts.  v2 adds the optional typed channel
+# (pred/conf buffers + manifest "predicates") — pure superset: a v2
+# artifact of an untyped graph differs from v1 only in the version field,
+# and this reader opens both (v1 artifacts keep serving bit-identical
+# results under the default WeightPolicy).
+FORMAT_VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 _MANIFEST = "manifest.json"
 
 
@@ -251,6 +262,18 @@ class GraphArtifact:
     def has_labels(self) -> bool:
         return "label_offsets" in self._buffers
 
+    @property
+    def typed(self) -> bool:
+        """True when the artifact persists the per-edge (pred, conf)
+        channel (format v2 typed graphs)."""
+        return "csr_pred" in self._buffers
+
+    @property
+    def predicates(self) -> list[str]:
+        """Predicate dictionary recorded at write time (empty when
+        untyped — v1 artifacts never have one)."""
+        return list(self.manifest.get("predicates", []))
+
     def nbytes(self) -> int:
         """Total on-disk buffer bytes (payload, excluding npy headers)."""
         return sum(int(np.prod(spec.shape)) * np.dtype(spec.dtype).itemsize
@@ -300,6 +323,18 @@ class GraphArtifact:
         index instead of re-tokenizing; call :meth:`labels` when the text
         itself is needed."""
         if self._graph is None:
+            typed: dict[str, Any] = {}
+            if self.typed:
+                typed = dict(
+                    csr_pred=self.buffer("csr_pred"),
+                    csr_conf=self.buffer("csr_conf"),
+                    sym_typed=(self.buffer("sym_pred"),
+                               self.buffer("sym_conf")),
+                    pred_names=self.predicates,
+                )
+                if "pred" in self._buffers:
+                    typed["pred"] = self.buffer("pred")
+                    typed["conf"] = self.buffer("conf")
             self._graph = Graph(
                 n_nodes=self.n_nodes,
                 src=self.buffer("src"), dst=self.buffer("dst"),
@@ -310,6 +345,7 @@ class GraphArtifact:
                 sym_sorted=(self.buffer("sym_src"),
                             self.buffer("sym_dst"),
                             self.buffer("sym_w")),
+                **typed,
             )
         return self._graph
 
@@ -431,6 +467,15 @@ def _write_buffers(
     arrays["sym_src"] = np.ascontiguousarray(sym_src, np.int32)
     arrays["sym_dst"] = np.ascontiguousarray(sym_dst, np.int32)
     arrays["sym_w"] = np.ascontiguousarray(sym_w, np.float32)
+    if graph.typed:
+        arrays["csr_pred"] = np.ascontiguousarray(graph.csr_pred, np.int32)
+        arrays["csr_conf"] = np.ascontiguousarray(graph.csr_conf, np.float32)
+        sym_pred, sym_conf = graph.sym_typed_edges(cache=True)
+        arrays["sym_pred"] = np.ascontiguousarray(sym_pred, np.int32)
+        arrays["sym_conf"] = np.ascontiguousarray(sym_conf, np.float32)
+        if graph.pred is not None:
+            arrays["pred"] = np.ascontiguousarray(graph.pred, np.int32)
+            arrays["conf"] = np.ascontiguousarray(graph.conf, np.float32)
     if token_kind == "int":
         arrays["token_keys"] = np.asarray([int(t) for t in tokens],
                                           np.int64)
@@ -464,6 +509,11 @@ def _write_buffers(
         "token_kind": token_kind,
         "n_tokens": len(tokens),
     }
+    if graph.typed:
+        # Predicate dictionary in the (content-hashed) meta: the artifact
+        # is self-describing — names, not just a count — and renaming a
+        # predicate changes the content identity.
+        meta["predicates"] = list(graph.pred_names or [])
     manifest = dict(meta)
     manifest["stats"] = stats or {}
     manifest["buffers"] = buffers
@@ -498,10 +548,11 @@ def open_artifact(path: str | Path,
         raise FormatVersionError(
             f"{path} is not a {MAGIC} (magic={manifest.get('magic')!r})")
     version = manifest.get("format_version")
-    if version != FORMAT_VERSION:
+    if version not in SUPPORTED_VERSIONS:
         raise FormatVersionError(
             f"artifact format v{version} at {path}; this reader supports "
-            f"v{FORMAT_VERSION} — re-ingest the source with this version")
+            f"v{SUPPORTED_VERSIONS} — re-ingest the source with this "
+            "version")
     for key in ("content_hash", "buffers", "n_nodes"):
         if key not in manifest:
             raise ArtifactError(f"manifest missing {key!r} in {path}")

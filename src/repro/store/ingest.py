@@ -6,12 +6,19 @@ bluk-bnb: 16.1M nodes / 46.6M edges) — graphs that arrive as text, not as
 numpy arrays.  This module turns such dumps into the host objects
 :mod:`repro.store.artifact` persists:
 
-- **readers** for N-Triples (``<s> <p> <o> .``) and TSV edge lists, both
-  line-streamed (``.gz`` transparently supported) — nothing holds the raw
-  text;
+- **readers** for N-Triples (``<s> <p> <o> .``, with an optional numeric
+  4th term read as a per-statement confidence) and TSV edge lists
+  (``src dst [pred] [conf]``), both line-streamed (``.gz`` transparently
+  supported) — nothing holds the raw text;
 - **dictionary encoding**: entity and predicate strings become dense int32
   ids the moment they are seen; node label text (a URI's local name, a
-  literal's text) feeds the inverted index at finalization;
+  literal's text) feeds the inverted index at finalization; the predicate
+  dictionary survives into the graph (``pred_names``) and the artifact
+  manifest, so artifacts are self-describing;
+- **typed channel**: every accumulated edge carries ``(pred_id, conf)``
+  next to its endpoints; untyped sources leave the channel dormant
+  (``pred=-1, conf=1.0``) and finalize to a plain single-weight graph —
+  byte-identical to the pre-typed pipeline;
 - **chunked edge accumulation**: edges land in fixed-size int32 chunks
   (optionally spilled to ``.npy`` files under ``spill_dir`` once
   ``spill_after`` chunks are resident), so raw text never accumulates and
@@ -104,13 +111,16 @@ class StreamIngestor:
         self.spill_dir = Path(spill_dir) if spill_dir is not None else None
         self.spill_after = int(spill_after)
         self._ids: dict[str, int] = {}
+        self._pred_ids: dict[str, int] = {}
         self._labels: list[str] = []
-        self._chunks: list[np.ndarray | Path] = []   # [2, n] arrays
-        self._cur = np.empty((2, self.chunk_edges), np.int32)
+        # [4, n] int32 chunks: src, dst, pred_id, conf (float32 bits).
+        self._chunks: list[np.ndarray | Path] = []
+        self._cur = np.empty((4, self.chunk_edges), np.int32)
         self._fill = 0
         self._n_spilled = 0
         self._self_loops = 0
         self._n_edges = 0
+        self._typed = False
 
     # -- encoding ------------------------------------------------------
 
@@ -125,6 +135,17 @@ class StreamIngestor:
             self._labels.append(name if label is None else label)
         return nid
 
+    def predicate_id(self, name: str) -> int:
+        """Dense id for a predicate string (assigned on first sight).
+        Registering any predicate makes the ingest *typed*: finalize will
+        attach the ``(pred, conf)`` channel to the graph."""
+        pid = self._pred_ids.get(name)
+        if pid is None:
+            pid = len(self._pred_ids)
+            self._pred_ids[name] = pid
+            self._typed = True
+        return pid
+
     @property
     def n_nodes(self) -> int:
         return len(self._ids)
@@ -133,22 +154,39 @@ class StreamIngestor:
     def n_edges(self) -> int:
         return self._n_edges
 
+    @property
+    def n_predicates(self) -> int:
+        return len(self._pred_ids)
+
+    @property
+    def pred_names(self) -> list[str]:
+        return list(self._pred_ids)
+
     # -- accumulation --------------------------------------------------
 
     def add_edge(self, src: str, dst: str,
                  src_label: str | None = None,
-                 dst_label: str | None = None) -> None:
+                 dst_label: str | None = None,
+                 pred: str | None = None,
+                 conf: float = 1.0) -> None:
         self.add_edge_ids(self.entity_id(src, src_label),
-                          self.entity_id(dst, dst_label))
+                          self.entity_id(dst, dst_label),
+                          pred=-1 if pred is None else self.predicate_id(pred),
+                          conf=conf)
 
-    def add_edge_ids(self, src: int, dst: int) -> None:
+    def add_edge_ids(self, src: int, dst: int,
+                     pred: int = -1, conf: float = 1.0) -> None:
         if src == dst:
             # Self-loops contribute nothing to answer trees (build_graph
             # drops them anyway); reject at the door and count honestly.
             self._self_loops += 1
             return
+        if pred >= 0 or conf != 1.0:
+            self._typed = True
         self._cur[0, self._fill] = src
         self._cur[1, self._fill] = dst
+        self._cur[2, self._fill] = pred
+        self._cur[3, self._fill] = np.float32(conf).view(np.int32)
         self._fill += 1
         self._n_edges += 1
         if self._fill == self.chunk_edges:
@@ -169,13 +207,16 @@ class StreamIngestor:
         else:
             self._chunks.append(chunk)
 
-    def _edges(self) -> tuple[np.ndarray, np.ndarray]:
-        """Stream every chunk (resident or spilled) into one preallocated
-        pair of arrays — peak = the final O(E) buffers + one chunk, with
-        no transient concatenate copy."""
+    def _edges(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Stream every chunk (resident or spilled) into preallocated
+        arrays — peak = the final O(E) buffers + one chunk, with no
+        transient concatenate copy.  Returns ``(src, dst, pred, conf)``;
+        the typed rows are dormant (-1 / 1.0) for untyped ingests."""
         self._flush()
         src = np.empty(self._n_edges, np.int32)
         dst = np.empty(self._n_edges, np.int32)
+        pred = np.empty(self._n_edges, np.int32)
+        conf_bits = np.empty(self._n_edges, np.int32)
         pos = 0
         for c in self._chunks:
             arr = c if isinstance(c, np.ndarray) else \
@@ -183,9 +224,11 @@ class StreamIngestor:
             n = arr.shape[1]
             src[pos:pos + n] = arr[0]
             dst[pos:pos + n] = arr[1]
+            pred[pos:pos + n] = arr[2]
+            conf_bits[pos:pos + n] = arr[3]
             pos += n
         assert pos == self._n_edges
-        return src, dst
+        return src, dst, pred, conf_bits.view(np.float32)
 
     # -- finalization --------------------------------------------------
 
@@ -198,12 +241,28 @@ class StreamIngestor:
         in-degrees (weights depend on global degree counts, so they can
         only be emitted at finalization).  ``index``/``tokens`` override
         the default labels-derived index (synthetic token matrices).
+
+        Typed ingests (any registered predicate or non-unit confidence)
+        attach the ``(pred, conf)`` channel and the predicate dictionary
+        to the graph; edges that arrived without a predicate are filed
+        under a synthetic ``"(untyped)"`` entry so the channel is total.
         """
-        src, dst = self._edges()
+        src, dst, pred, conf = self._edges()
         labels = list(self._labels) if self._labels else None
         t0 = time.perf_counter()
-        graph = build_graph(src, dst, max(self.n_nodes, 1),
-                            labels=labels, tau=tau)
+        if self._typed:
+            if len(pred) and (pred < 0).any():
+                pred = np.where(pred < 0,
+                                np.int32(self.predicate_id("(untyped)")),
+                                pred)
+            graph = build_graph(src, dst, max(self.n_nodes, 1),
+                                labels=labels, tau=tau,
+                                pred=pred, conf=conf,
+                                pred_names=self.pred_names)
+            stats.n_predicates = self.n_predicates
+        else:
+            graph = build_graph(src, dst, max(self.n_nodes, 1),
+                                labels=labels, tau=tau)
         if index is None:
             if tokens is not None:
                 index = InvertedIndex.from_token_matrix(np.asarray(tokens))
@@ -254,14 +313,16 @@ def display_text(term: str) -> str:
     return term
 
 
-def _nt_terms(line: str) -> tuple[str, str, str] | None:
-    """Parse one N-Triples statement into (subject, predicate, object)
-    raw terms.  Handles ``<uri>``, ``_:bnode``, and quoted literals with
-    escapes / ``@lang`` / ``^^<datatype>`` suffixes.  Returns None for a
-    line that isn't a statement."""
+def _nt_terms(line: str) -> list[str] | None:
+    """Parse one N-Triples statement into raw terms: ``[s, p, o]`` or
+    ``[s, p, o, x]`` when a 4th term precedes the final ``.`` (an
+    N-Quads-style annotation — our readers interpret a *numeric* 4th term
+    as the statement's confidence).  Handles ``<uri>``, ``_:bnode``, and
+    quoted literals with escapes / ``@lang`` / ``^^<datatype>`` suffixes.
+    Returns None for a line that isn't a statement."""
     terms = []
     i, n = 0, len(line)
-    while i < n and len(terms) < 3:
+    while i < n and len(terms) < 4:
         while i < n and line[i] in " \t":
             i += 1
         if i >= n:
@@ -298,9 +359,9 @@ def _nt_terms(line: str) -> tuple[str, str, str] | None:
                 j += 1
             terms.append(line[i:j])
             i = j
-    if len(terms) != 3:
+    if len(terms) not in (3, 4):
         return None
-    s, p, o = terms
+    s, p, o = terms[:3]
     # N-Triples grammar: subject is a URI or blank node, predicate a URI,
     # object any term — reject bare-word lines instead of inventing nodes.
     if not (s.startswith("<") or s.startswith("_:")):
@@ -309,7 +370,18 @@ def _nt_terms(line: str) -> tuple[str, str, str] | None:
         return None
     if not (o.startswith("<") or o.startswith("_:") or o.startswith('"')):
         return None
-    return (s, p, o)
+    return terms
+
+
+def _term_confidence(term: str) -> float | None:
+    """A 4th statement term read as a confidence: a bare number or a
+    numeric literal (``"0.9"``, ``"0.9"^^<xsd:double>``); anything else
+    (e.g. an N-Quads graph label) is None — ignored, not an error."""
+    try:
+        c = float(display_text(term))
+    except (TypeError, ValueError):
+        return None
+    return c if c > 0 else None
 
 
 def ingest_ntriples(
@@ -323,16 +395,18 @@ def ingest_ntriples(
     """Stream an N-Triples dump into ``(graph, index, stats)``.
 
     Every distinct subject/object term becomes a node (dictionary-encoded
-    int32); predicates are counted but carry no graph structure beyond the
-    edge (the paper's graphs are the entity-relationship projection).
-    Node keyword text is the term's :func:`display_text`.  ``on_error``:
-    ``"skip"`` counts malformed lines in the stats, ``"raise"`` fails fast.
+    int32); every statement's predicate becomes the edge's type — the
+    predicate dictionary keys on :func:`display_text` of the predicate URI
+    (the name the CLI filter flags accept; URIs sharing a local name share
+    an id).  A numeric 4th term (N-Quads-style annotation) is read as the
+    statement's confidence; a non-numeric one is ignored.  Node keyword
+    text is the term's :func:`display_text`.  ``on_error``: ``"skip"``
+    counts malformed lines in the stats, ``"raise"`` fails fast.
     """
     if on_error not in ("skip", "raise"):
         raise ValueError(f"unknown on_error={on_error!r}")
     stats = IngestStats(source=f"ntriples:{path}")
     ing = StreamIngestor(chunk_edges=chunk_edges, spill_dir=spill_dir)
-    preds: dict[str, int] = {}
     t0 = time.perf_counter()
     with _open_text(path) as f:
         for line in f:
@@ -348,11 +422,13 @@ def ingest_ntriples(
                         f"in {path}: {line[:120]!r}")
                 stats.malformed_lines += 1
                 continue
-            s, p, o = terms
+            s, p, o = terms[:3]
+            conf = _term_confidence(terms[3]) if len(terms) == 4 else None
             stats.statements += 1
-            preds.setdefault(p, len(preds))
-            ing.add_edge(s, o, display_text(s), display_text(o))
-    stats.n_predicates = len(preds)
+            ing.add_edge(s, o, display_text(s), display_text(o),
+                         pred=display_text(p),
+                         conf=1.0 if conf is None else conf)
+    stats.n_predicates = ing.n_predicates
     stats.ingest_s = time.perf_counter() - t0
     return ing.finalize(stats, tau=tau)
 
@@ -365,9 +441,12 @@ def ingest_tsv(
     spill_dir: str | Path | None = None,
     on_error: str = "skip",
 ) -> IngestResult:
-    """Stream a TSV/whitespace edge list (``src<TAB>dst`` per line; extra
-    columns ignored; ``#`` comments skipped).  Endpoint strings are
-    dictionary-encoded and double as the node keyword text."""
+    """Stream a TSV/whitespace edge list (``src<TAB>dst[<TAB>pred][<TAB>conf]``
+    per line; ``#`` comments skipped).  Endpoint strings are
+    dictionary-encoded and double as the node keyword text.  A numeric
+    3rd column is read as the edge's confidence; a non-numeric one as its
+    predicate name (then a numeric 4th column is the confidence); columns
+    past those are ignored."""
     if on_error not in ("skip", "raise"):
         raise ValueError(f"unknown on_error={on_error!r}")
     stats = IngestStats(source=f"tsv:{path}")
@@ -387,8 +466,17 @@ def ingest_tsv(
                         f"{line[:120]!r}")
                 stats.malformed_lines += 1
                 continue
+            pred, conf = None, None
+            if len(cols) >= 3 and cols[2].strip():
+                conf = _term_confidence(cols[2].strip())
+                if conf is None:
+                    pred = cols[2].strip()
+                    if len(cols) >= 4 and cols[3].strip():
+                        conf = _term_confidence(cols[3].strip())
             stats.statements += 1
-            ing.add_edge(cols[0].strip(), cols[1].strip())
+            ing.add_edge(cols[0].strip(), cols[1].strip(),
+                         pred=pred, conf=1.0 if conf is None else conf)
+    stats.n_predicates = ing.n_predicates
     stats.ingest_s = time.perf_counter() - t0
     return ing.finalize(stats, tau=tau)
 
@@ -426,14 +514,25 @@ def from_graph(
 
 
 def write_tsv(path: str | Path, src: Iterable[int], dst: Iterable[int],
-              name: str = "n") -> int:
+              name: str = "n",
+              pred: Iterable[str] | None = None,
+              conf: Iterable[float] | None = None) -> int:
     """Dump an edge list as a TSV file (benchmark/test helper for the
-    streaming reader; entity names are ``{name}{id}``).  Returns the
-    number of lines written."""
+    streaming reader; entity names are ``{name}{id}``).  Optional
+    ``pred``/``conf`` columns produce a typed edge list the reader's
+    3rd/4th-column convention picks up.  Returns the number of lines
+    written."""
     n = 0
+    preds = list(pred) if pred is not None else None
+    confs = list(conf) if conf is not None else None
     with open(path, "w", encoding="utf-8") as f:
-        for s, d in zip(src, dst):
-            f.write(f"{name}{int(s)}\t{name}{int(d)}\n")
+        for i, (s, d) in enumerate(zip(src, dst)):
+            row = f"{name}{int(s)}\t{name}{int(d)}"
+            if preds is not None:
+                row += f"\t{preds[i]}"
+            if confs is not None:
+                row += f"\t{float(confs[i]):g}"
+            f.write(row + "\n")
             n += 1
     return n
 

@@ -1,0 +1,312 @@
+"""Typed-edge / weight-policy tests: type-aware dedup, the weight floor,
+effective-weight semantics, v1 artifact compatibility (bit-identical under
+the default policy), policy-distinct cache tokens at the ResultCache
+level, predicate-filtered end-to-end queries, distinct top-K answers
+under duplicate weights across predicates, and serve shape-key safety."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import INF
+from repro.engine import ExecutionPolicy, QueryEngine, WeightPolicy
+from repro.graph import (
+    MIN_EDGE_WEIGHT,
+    apply_weight_policy,
+    build_graph,
+    effective_weights,
+)
+from repro.graph.generators import lod_like_graph
+from repro.graph.index import InvertedIndex
+from repro.serve import ResultCache
+from repro.store import from_graph, open_artifact, write_artifact
+
+
+def typed_diamond():
+    """4 nodes, 3 predicates: a direct ``funds`` edge (weight 1) between
+    the keyword nodes and two equal-weight (2.0) two-hop paths — one all
+    ``knows``, one all ``cites`` — through distinct middles.
+
+        alpha --funds(1)-- beta
+        alpha --knows(1)-- mid1 --knows(1)-- beta
+        alpha --cites(1)-- mid2 --cites(1)-- beta
+    """
+    labels = ["alpha", "mid1", "mid2", "beta"]
+    src = np.array([0, 0, 1, 0, 2], np.int32)
+    dst = np.array([3, 1, 3, 2, 3], np.int32)
+    w = np.ones(5, np.float32)
+    pred = np.array([0, 1, 1, 2, 2], np.int32)      # funds,knows,knows,cites,cites
+    conf = np.array([0.5, 1.0, 1.0, 2.0, 2.0], np.float32)
+    g = build_graph(src, dst, 4, w=w, labels=labels, pred=pred, conf=conf,
+                    pred_names=["funds", "knows", "cites"])
+    return g, InvertedIndex.from_labels(labels)
+
+
+# ----------------------------------------------------------------------
+# build_graph: type-aware dedup + the weight floor
+# ----------------------------------------------------------------------
+
+
+def test_typed_dedup_preserves_parallel_predicate_edges():
+    """Two (u, v) edges with distinct predicates must survive as parallel
+    CSR entries (the untyped dedup would collapse them to the min)."""
+    src = np.array([0, 0], np.int32)
+    dst = np.array([1, 1], np.int32)
+    w = np.array([2.0, 3.0], np.float32)
+    gt = build_graph(src, dst, 2, w=w,
+                     pred=np.array([0, 1], np.int32),
+                     pred_names=["a", "b"])
+    nbrs, ws = gt.neighbors(0)
+    assert list(nbrs) == [1, 1]
+    assert sorted(ws) == [2.0, 3.0]
+    # edge_channel resolves the cheapest parallel entry — the one
+    # _edge_weight (and so backtrace / rendering) uses.
+    assert gt.edge_channel(0, 1) == ("a", 1.0)
+
+    gu = build_graph(src, dst, 2, w=w)
+    nbrs_u, ws_u = gu.neighbors(0)
+    assert list(nbrs_u) == [1] and list(ws_u) == [2.0]
+    assert gu.edge_channel(0, 1) is None
+
+
+def test_typed_dedup_same_predicate_keeps_min_weight_max_conf():
+    src = np.array([0, 0, 0], np.int32)
+    dst = np.array([1, 1, 1], np.int32)
+    w = np.array([3.0, 2.0, 2.0], np.float32)
+    conf = np.array([0.9, 0.2, 0.7], np.float32)
+    gt = build_graph(src, dst, 2, w=w,
+                     pred=np.zeros(3, np.int32), conf=conf,
+                     pred_names=["p"])
+    nbrs, ws = gt.neighbors(0)
+    assert list(nbrs) == [1] and list(ws) == [2.0]
+    assert gt.edge_channel(0, 1) == ("p", pytest.approx(0.7))
+
+
+def test_weight_floor_clamps_instead_of_raising():
+    """Weights rounding to 0 (confidence-scaled provenance) clamp up to
+    the documented MIN_EDGE_WEIGHT floor; negative weights still raise."""
+    src = np.array([0], np.int32)
+    dst = np.array([1], np.int32)
+    g = build_graph(src, dst, 2, w=np.array([0.0], np.float32))
+    assert g.ew.min() == np.float32(MIN_EDGE_WEIGHT)
+    with pytest.raises(ValueError, match="non-negative"):
+        build_graph(src, dst, 2, w=np.array([-1.0], np.float32))
+    with pytest.raises(ValueError, match="positive"):
+        build_graph(src, dst, 2, w=np.array([1.0], np.float32),
+                    pred=np.zeros(1, np.int32),
+                    conf=np.array([0.0], np.float32), pred_names=["p"])
+
+
+# ----------------------------------------------------------------------
+# WeightPolicy + effective_weights semantics
+# ----------------------------------------------------------------------
+
+
+def test_weight_policy_validation():
+    assert WeightPolicy().is_default
+    assert not WeightPolicy(kind="confidence").is_default
+    assert not WeightPolicy(predicates=("a",)).is_default
+    with pytest.raises(ValueError, match="kind"):
+        WeightPolicy(kind="karma")
+    with pytest.raises(ValueError, match="blend"):
+        WeightPolicy(kind="confidence", blend=0.0)
+    with pytest.raises(ValueError, match="non-empty"):
+        WeightPolicy(predicates=())
+
+
+def test_effective_weights_semantics():
+    w = np.array([2.0, 3.0, INF, 1.0], np.float32)
+    pred = np.array([0, 1, 0, 1], np.int32)
+    conf = np.array([2.0, 0.5, 4.0, 1e9], np.float32)
+    names = {"a": 0, "b": 1}
+    # confidence: w / conf**blend; INF stays INF; huge conf hits the floor.
+    eff = effective_weights(w, pred, conf,
+                            WeightPolicy(kind="confidence", blend=1.0),
+                            names)
+    np.testing.assert_allclose(
+        eff, [1.0, 6.0, INF, MIN_EDGE_WEIGHT], rtol=1e-6)
+    # blend=2 bites harder.
+    eff2 = effective_weights(w, pred, conf,
+                             WeightPolicy(kind="confidence", blend=2.0),
+                             names)
+    assert eff2[0] == pytest.approx(0.5) and eff2[1] == pytest.approx(12.0)
+    # predicate filter: disallowed -> INF (disconnected), allowed kept.
+    filt = effective_weights(w, pred, conf,
+                             WeightPolicy(predicates=("b",)), names)
+    np.testing.assert_allclose(filt, [INF, 3.0, INF, 1.0])
+    # unknown names are a typo, not a silent no-match filter.
+    with pytest.raises(ValueError, match="unknown predicate"):
+        effective_weights(w, pred, conf,
+                          WeightPolicy(predicates=("nope",)), names)
+
+
+def test_apply_weight_policy_requires_typed_graph():
+    g, _ = lod_like_graph(60, 180, seed=3, vocab=20)
+    assert apply_weight_policy(g, WeightPolicy()) is g
+    assert apply_weight_policy(g, None) is g
+    with pytest.raises(ValueError, match="typed"):
+        apply_weight_policy(g, WeightPolicy(kind="confidence"))
+
+
+# ----------------------------------------------------------------------
+# v1 artifact compatibility: bit-identical under the default policy
+# ----------------------------------------------------------------------
+
+
+def test_v1_artifact_opens_and_serves_bit_identically(tmp_path):
+    """An untyped artifact whose manifest says format v1 (the pre-typed
+    layout: same buffers, no typed channel) still opens, and its engine
+    serves bit-identical results to the in-memory build under the
+    default WeightPolicy."""
+    g, tokens = lod_like_graph(400, 1200, seed=5, vocab=80)
+    result = from_graph(g, tokens=tokens)
+    art = write_artifact(tmp_path / "a", result.graph, result.index)
+    assert art.format_version == 2 and not art.typed
+    manifest = json.loads((art.path / "manifest.json").read_text())
+    manifest["format_version"] = 1
+    (art.path / "manifest.json").write_text(json.dumps(manifest))
+
+    reopened = open_artifact(art.path)
+    assert reopened.format_version == 1
+    assert not reopened.typed and reopened.predicates == []
+    e_mem = QueryEngine.build(g, index=result.index)
+    e_art = QueryEngine.build(artifact=reopened)
+    toks = sorted(result.index.vocabulary(), key=result.index.df)
+    q = [t for t in toks if 2 <= result.index.df(t) <= 40][:3]
+    r_mem = e_mem.query(q, k=2, extract=False)
+    r_art = e_art.query(q, k=2, extract=False)
+    np.testing.assert_array_equal(r_mem.weights, r_art.weights)
+    assert r_mem.supersteps == r_art.supersteps
+    # Non-default policies need the typed channel a v1 artifact lacks.
+    with pytest.raises(ValueError, match="typed"):
+        QueryEngine.build(
+            artifact=reopened,
+            policy=ExecutionPolicy(
+                weights=WeightPolicy(kind="confidence")))
+
+
+# ----------------------------------------------------------------------
+# Cache / serving safety across policies
+# ----------------------------------------------------------------------
+
+
+def test_result_cache_misses_across_weight_policies(tmp_path):
+    """ISSUE acceptance: two engines over the SAME artifact under two
+    weight policies get distinct cache_tokens — at the ResultCache level,
+    one policy's answers can never be served to the other."""
+    g, index = typed_diamond()
+    art = write_artifact(tmp_path / "typed", g, index)
+    assert art.typed and art.predicates == ["funds", "knows", "cites"]
+
+    e_deg = QueryEngine.build(artifact=open_artifact(art.path))
+    e_conf = QueryEngine.build(
+        artifact=open_artifact(art.path),
+        policy=ExecutionPolicy(weights=WeightPolicy(kind="confidence")))
+    e_conf2 = QueryEngine.build(
+        artifact=open_artifact(art.path),
+        policy=ExecutionPolicy(weights=WeightPolicy(kind="confidence")))
+    q = ["alpha", "beta"]
+    assert e_deg.version == e_conf.version  # same artifact content hash
+
+    cache = ResultCache(capacity=8)
+    cache.put(e_deg.cache_token(q, 1), "degree-ranked answer")
+    assert cache.get(e_conf.cache_token(q, 1)) is None
+    # Same policy, fresh build (serve restart): the token is stable.
+    cache.put(e_conf.cache_token(q, 1), "confidence-ranked answer")
+    assert cache.get(e_conf2.cache_token(q, 1)) == "confidence-ranked answer"
+    assert cache.get(e_deg.cache_token(q, 1)) == "degree-ranked answer"
+
+
+def test_shape_key_differs_across_weight_policies():
+    """The batcher must never co-batch requests admitted under engines
+    with different weight policies, even at identical (m, k, version)."""
+    from concurrent.futures import Future
+
+    from repro.serve.batcher import Request
+
+    g, index = typed_diamond()
+    e_deg = QueryEngine.build(g, index=index)
+    e_filt = QueryEngine.build(
+        g, index=index,
+        policy=ExecutionPolicy(weights=WeightPolicy(predicates=("knows",))))
+
+    def req(engine):
+        return Request(keywords=("alpha", "beta"), k=1, overrides=(),
+                       future=Future(), t_submit=0.0, engine=engine)
+
+    assert req(e_deg).shape_key != req(e_filt).shape_key
+    assert req(e_deg).shape_key == req(e_deg).shape_key
+
+
+def test_per_call_weights_override_rejected():
+    g, index = typed_diamond()
+    engine = QueryEngine.build(g, index=index)
+    with pytest.raises(ValueError, match="weights"):
+        engine.query(["alpha", "beta"], k=1,
+                     weights=WeightPolicy(kind="confidence"))
+    with pytest.raises(ValueError, match="weights"):
+        engine.cache_token(["alpha", "beta"], 1,
+                           weights=WeightPolicy(kind="confidence"))
+
+
+# ----------------------------------------------------------------------
+# End-to-end ranking semantics
+# ----------------------------------------------------------------------
+
+
+def test_distinct_topk_under_duplicate_weights_across_predicates():
+    """Satellite acceptance: heterogeneous per-edge provenance produces
+    parallel equal-weight explanations (the knows path and the cites path
+    both weigh 2.0) — top-K must return them as DISTINCT answer trees,
+    not merge them on the duplicate weight."""
+    g, index = typed_diamond()
+    engine = QueryEngine.build(g, index=index)
+    res = engine.query(["alpha", "beta"], k=3)
+    assert len(res.answers) == 3
+    assert sorted(a.weight for a in res.answers) == [1.0, 2.0, 2.0]
+    node_sets = [frozenset(a.nodes) for a in res.answers]
+    assert len(set(node_sets)) == 3, "equal-weight trees merged"
+    assert {1, 2} <= set().union(*node_sets), \
+        "one of the parallel predicate paths was dropped"
+
+
+def test_predicate_filter_end_to_end():
+    """A predicate-filtered engine returns only trees whose rendered
+    edges carry allowed predicates — and its best answer differs from
+    the unfiltered engine's (which rides the direct funds edge)."""
+    from repro.answers import render_tree
+
+    g, index = typed_diamond()
+    e_all = QueryEngine.build(g, index=index)
+    e_knows = QueryEngine.build(
+        g, index=index,
+        policy=ExecutionPolicy(weights=WeightPolicy(predicates=("knows",))))
+
+    r_all = e_all.query(["alpha", "beta"], k=1)
+    assert r_all.best_weight == 1.0  # the direct funds edge
+    r_knows = e_knows.query(["alpha", "beta"], k=2)
+    assert r_knows.best_weight == 2.0  # forced through mid1
+    assert r_knows.answers
+    for a in r_knows.answers:
+        rt = render_tree(a, graph=e_knows.graph)
+        assert rt.edges, "filtered answer lost its edges"
+        for e in rt.edges:
+            assert e.predicate == "knows", rt.describe()
+    # The rendered description carries the provenance tag.
+    rt = render_tree(r_knows.answers[0], graph=e_knows.graph)
+    assert "[knows]" in rt.describe()
+
+
+def test_confidence_policy_reranks():
+    """Under confidence blending the cites path (conf 2.0 -> effective
+    weight 1.0 total) must beat the funds edge (conf 0.5 -> 2.0)."""
+    g, index = typed_diamond()
+    e_conf = QueryEngine.build(
+        g, index=index,
+        policy=ExecutionPolicy(
+            weights=WeightPolicy(kind="confidence", blend=1.0)))
+    res = e_conf.query(["alpha", "beta"], k=1)
+    assert res.best_weight == pytest.approx(1.0)
+    tree = res.answers[0]
+    assert 2 in tree.nodes, "confidence ranking did not pick the cites path"
