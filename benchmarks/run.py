@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import socket
 import subprocess
 import time
 from pathlib import Path
@@ -54,6 +56,10 @@ def provenance() -> dict:
         "n_devices": len(jax.devices()),
         "device_kind": getattr(dev, "device_kind", dev.platform),
         "platform": dev.platform,
+        # Host identity: wall-time trajectories only compare within one
+        # machine class; these two fields make cross-host noise visible.
+        "hostname": socket.gethostname(),
+        "cpu_count": os.cpu_count(),
     }
 
 
@@ -102,6 +108,9 @@ def main() -> None:
     record("fig_weighted_relax", dks.fig_weighted_relax)
     record("fig_extract", dks.fig_extract,
            buckets=(1, 4, 8) if not args.full else (1, 4, 8, 16))
+    record("fig_telemetry", dks.fig_telemetry,
+           repeats=3 if not args.full else 5,
+           n_queries=2 if not args.full else 4)
     record("fig_serve_throughput", sv.fig_serve_throughput,
            batch_sizes=(1, 4) if not args.full else (1, 2, 4, 8),
            n_requests=12 if not args.full else 32,
@@ -137,6 +146,7 @@ def main() -> None:
             "sharded_batch": results.get("fig_sharded_batch"),
             "weighted_relax": results.get("fig_weighted_relax"),
             "extract": results.get("fig_extract"),
+            "telemetry": results.get("fig_telemetry"),
         }
         (OUT / "BENCH_dks.json").write_text(json.dumps(bench_dks, indent=1))
         print(f"wrote {OUT / 'BENCH_dks.json'}")

@@ -170,6 +170,14 @@ class BatchedBacktracer:
         self.device_resolved = 0
         self.host_fallbacks = 0
 
+    def stats(self) -> dict[str, int]:
+        """``{device_resolved, host_fallbacks}`` — obligation backtraces
+        the device program settled vs ragged stragglers that re-ran the
+        host search (both monotone over the tracer's lifetime; the
+        metrics registry exports them as counters)."""
+        return {"device_resolved": self.device_resolved,
+                "host_fallbacks": self.host_fallbacks}
+
     # -- device kernel --------------------------------------------------
 
     def _kernel(self, L: int, C: int, m: int, K: int):

@@ -80,6 +80,11 @@ class ExtractionOverlap:
             np.asarray(S_lane), self.graph, np.asarray(masks), self.k,
             self.candidate_factor)
 
+    def stats(self) -> dict[str, int]:
+        """``{overlapped, inline}`` extraction counts — how much of the
+        bucket's tree reconstruction actually hid behind device steps."""
+        return {"overlapped": self.overlapped, "inline": self.inline}
+
     def close(self) -> None:
         self._pool.shutdown(wait=True)
 

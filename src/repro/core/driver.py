@@ -42,6 +42,11 @@ from repro.core.dks import (
     init_state,
     superstep,
 )
+from repro.obs.telemetry import (
+    HostTelemetryCollector,
+    N_COLS as TELEMETRY_COLS,
+    TELEMETRY_MAX_SUPERSTEPS,
+)
 
 
 def is_frontier_graph(graph: Any) -> bool:
@@ -106,6 +111,64 @@ def run_lanes(graph: Any, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState:
 
 
 # --------------------------------------------------------------------------
+# Production superstep telemetry (paper §6's per-superstep curves, from
+# the FUSED loop — no drop to the stepwise instrumented path)
+# --------------------------------------------------------------------------
+
+
+def telemetry_capacity(cfg: DKSConfig) -> int:
+    """Device-buffer row count for a config: one row per superstep, capped
+    at TELEMETRY_MAX_SUPERSTEPS (a capped run sets ``done`` anyway, so the
+    cap only matters for configs with a larger max_supersteps)."""
+    return max(1, min(int(cfg.max_supersteps), TELEMETRY_MAX_SUPERSTEPS))
+
+
+def telemetry_row(state: DKSState) -> jax.Array:
+    """One lane-summed counter row for the post-step state: ``[frontier,
+    msgs_bfs (cumulative), msgs_deep (cumulative), frozen lanes]`` — the
+    column order repro.obs.telemetry decodes.  Pure reads: computing the
+    row cannot perturb the state, which is what makes telemetry-on
+    bit-identical to telemetry-off."""
+    return jnp.stack([
+        jnp.sum(state.changed).astype(jnp.float32),
+        jnp.sum(state.msgs_bfs).astype(jnp.float32),
+        jnp.sum(state.msgs_deep).astype(jnp.float32),
+        jnp.sum(state.done).astype(jnp.float32),
+    ])
+
+
+def run_lanes_telemetry(
+    graph: Any, kw_masks: jax.Array, cfg: DKSConfig,
+) -> tuple[DKSState, jax.Array, jax.Array]:
+    """The fused driver with a telemetry carry: the while-loop threads
+    ``(state, buf, i)`` and writes one :func:`telemetry_row` per superstep
+    into a bounded ``[T, 4]`` f32 buffer (rows past T overwrite the last
+    slot — the decoder flags truncation).  Returns ``(final state, buffer,
+    supersteps run)``; same exit condition, same superstep kernel, so the
+    state trajectory is exactly :func:`run_lanes`'s.
+
+    Meant to be jitted by the caller (the engine caches it per config,
+    like the plain fused executable).
+    """
+    T = telemetry_capacity(cfg)
+    init = (lane_init(graph, kw_masks, cfg),
+            jnp.zeros((T, TELEMETRY_COLS), jnp.float32),
+            jnp.int32(0))
+
+    def cond(carry):
+        st, _, _ = carry
+        return ~jnp.all(st.done)
+
+    def body(carry):
+        st, buf, i = carry
+        nxt = lane_superstep(graph, st, cfg)
+        buf = buf.at[jnp.minimum(i, T - 1)].set(telemetry_row(nxt))
+        return nxt, buf, i + 1
+
+    return jax.lax.while_loop(cond, body, init)
+
+
+# --------------------------------------------------------------------------
 # Instrumented host loop (per-phase wall times, paper Table 1)
 # --------------------------------------------------------------------------
 
@@ -142,7 +205,10 @@ def host_instrumented_loop(
                "send_agg": 0.0}
     state = jax.block_until_ready(lane_init(graph, kw_masks[None], cfg))
     deg = graph.out_degree.astype(jnp.float32)
-    history = []
+    # One source of per-superstep truth: rows accumulate on the shared
+    # collector (repro.obs) and the legacy ``history`` dicts are derived
+    # from it — the fused telemetry path decodes the same columns.
+    collector = HostTelemetryCollector()
     while not bool(state.done[0]):
         n_bfs = jnp.sum(jnp.where(state.first_fire, deg, 0.0), axis=1)
         n_deep = jnp.sum(
@@ -171,14 +237,17 @@ def host_instrumented_loop(
         timings["evaluate"] += t3 - t2
         timings["send_agg"] += t4 - t3
         lane = lane_view(state, 0)
-        history.append(
-            dict(step=int(lane.step), frontier=int(jnp.sum(lane.changed)),
-                 msgs_bfs=float(lane.msgs_bfs),
-                 msgs_deep=float(lane.msgs_deep),
-                 best=float(lane.topk_w[0]))
+        collector.record(
+            frontier=int(jnp.sum(lane.changed)),
+            msgs_bfs=float(lane.msgs_bfs),
+            msgs_deep=float(lane.msgs_deep),
+            frozen=int(jnp.sum(state.done)),
+            best=float(lane.topk_w[0]),
         )
         if exit_hook is not None and exit_hook(lane):
             state = dataclasses.replace(
                 state, done=jnp.ones_like(state.done))
-    info = dict(timings=timings, history=history)
+    telemetry = collector.build()
+    info = dict(timings=timings, history=telemetry.rows(),
+                telemetry=telemetry)
     return lane_view(state, 0), info

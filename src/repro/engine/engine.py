@@ -58,7 +58,9 @@ import numpy as np
 
 from repro import INF, shardmap
 from repro.core.dks import DKSConfig, DKSState, run_dks_instrumented
-from repro.core.driver import lane_init, lane_superstep, lane_view
+from repro.core.driver import (lane_init, lane_superstep, lane_view,
+                               run_lanes_telemetry)
+from repro.obs.telemetry import SuperstepTelemetry
 from repro.core.reconstruct import collect_answers
 from repro.core.spa import nu_lower_bound, spa_cover_dp, spa_ratio
 from repro.engine.policy import ExecutionPolicy
@@ -223,9 +225,18 @@ class QueryEngine:
     # while-loop as one device program; query and query_batch) and
     # "stepwise" ((init, superstep) pair the host loops over; streaming
     # and deadline surfaces).  Legacy kind names from the four-executor
-    # era keep resolving for callers of trace_count.
+    # era keep resolving for callers of trace_count.  An engine built
+    # with ExecutionPolicy(telemetry=True) resolves "fused" to the
+    # telemetry-carrying variant, so callers asserting warm-cache
+    # behavior via trace_count need not know which one serves them.
     _KIND_ALIASES = {"single": "fused", "batch": "fused",
                      "stream": "stepwise", "driver": "stepwise"}
+
+    def _resolve_kind(self, kind: str) -> str:
+        kind = self._KIND_ALIASES.get(kind, kind)
+        if kind == "fused" and self.policy.telemetry:
+            return "fused-telemetry"
+        return kind
 
     def trace_count(self, m: int, k: int, kind: str = "fused",
                     **overrides) -> int:
@@ -233,7 +244,7 @@ class QueryEngine:
         1 after any number of same-shape *and same-lane-count* queries =
         the cache works (a new lane count is a new input shape, so it
         re-traces once, like any jit)."""
-        kind = self._KIND_ALIASES.get(kind, kind)
+        kind = self._resolve_kind(kind)
         key = (self._config(m, k, **overrides), self.policy.partition, kind)
         return self._trace_counts.get(key, 0)
 
@@ -244,6 +255,18 @@ class QueryEngine:
             "executables": len(self._executables),
             "traces": sum(self._trace_counts.values()),
         }
+
+    @property
+    def extraction_stats(self) -> dict[str, int]:
+        """Device-batched backtracer counters — ``device_resolved`` lanes
+        whose answer trees the batched device program reconstructed, vs
+        ``host_fallbacks`` ragged stragglers that re-ran the host search.
+        Zeros before the backtracer is first used (it builds lazily)."""
+        bt = self._answer_backtracer
+        if bt is None:
+            return {"device_resolved": 0, "host_fallbacks": 0}
+        return {"device_resolved": int(bt.device_resolved),
+                "host_fallbacks": int(bt.host_fallbacks)}
 
     @property
     def execute_count(self) -> int:
@@ -275,20 +298,34 @@ class QueryEngine:
         if overrides:
             self._check_overrides(overrides)
             policy = dataclasses.replace(policy, **overrides)
+        # Telemetry observes the run without changing the answer, so it
+        # must not fragment result caches: engines built from the same
+        # artifact share cache keys whether or not one of them watches
+        # its supersteps.
+        if policy.telemetry:
+            policy = dataclasses.replace(policy, telemetry=False)
         return (norm, int(k), policy, self.version)
 
     @staticmethod
     def _check_overrides(overrides: dict) -> None:
-        """Per-call overrides must not change the weight policy: the
+        """Per-call overrides must not change the weight policy (the
         device graph was packed with the build policy's effective weights,
         so a per-query ``weights=`` would silently rank on the wrong
-        vector.  Build a second engine instead."""
+        vector) nor toggle telemetry (the flag picks the compiled fused
+        variant at build; flipping it per call would double every entry
+        in the executable cache).  Build a second engine instead."""
         if "weights" in overrides:
             raise ValueError(
                 "the weight policy is fixed at engine build (the device "
                 "graph is packed with its effective weights) — build an "
                 "engine with ExecutionPolicy(weights=...) instead of "
                 "overriding per call")
+        if "telemetry" in overrides:
+            raise ValueError(
+                "telemetry is fixed at engine build (it selects the "
+                "compiled fused-driver variant) — build an engine with "
+                "ExecutionPolicy(telemetry=True) instead of overriding "
+                "per call")
 
     def node_label(self, v: int) -> str:
         """Entity string for a node: in-memory graph labels when present,
@@ -354,15 +391,15 @@ class QueryEngine:
         keywords = list(keywords)
         cfg = self._config(len(keywords), k, **overrides)
         masks, unmatched = self._masks(keywords, strict)
-        fn = self._executable(cfg, "fused")
         t0 = time.perf_counter()
         # The degenerate 1-lane case of the lane driver.
-        states = self._execute(fn, self.device_graph, jnp.asarray(masks[None]))
+        states, telemetry = self._run_fused(cfg, masks[None])
         dt = time.perf_counter() - t0
         return self._make_result(keywords, masks, lane_view(states, 0), cfg,
                                  dt, extract, keep_state,
                                  unmatched=unmatched, own_time_s=dt,
-                                 extract_pool=extract_pool)
+                                 extract_pool=extract_pool,
+                                 telemetry=telemetry)
 
     def query_batch(
         self,
@@ -412,9 +449,8 @@ class QueryEngine:
             cfg = self._config(m, k, **overrides)
             pairs = [self._masks(list(queries[i]), strict) for i in idxs]
             masks = np.stack([p[0] for p in pairs])
-            fn = self._executable(cfg, "fused")
             t0 = time.perf_counter()
-            states = self._execute(fn, self.device_graph, jnp.asarray(masks))
+            states, telemetry = self._run_fused(cfg, masks)
             dt = time.perf_counter() - t0
             pre: dict[int, tuple] = {}
             if extract and self.batched_extraction:
@@ -436,7 +472,8 @@ class QueryEngine:
                 results[i] = self._make_result(
                     list(queries[i]), masks[bi], lane_view(states, bi), cfg,
                     dt, extract, keep_state, unmatched=pairs[bi][1],
-                    extract_pool=extract_pool, answers_pre=pre.get(bi))
+                    extract_pool=extract_pool, answers_pre=pre.get(bi),
+                    telemetry=telemetry)
         return results  # type: ignore[return-value]
 
     def query_stream(
@@ -687,6 +724,13 @@ class QueryEngine:
             out.append((res, info))
         if overlap is not None:
             overlap.close()
+            # Bucket-wide extraction split (how many tree reconstructions
+            # hid behind device supersteps) — shared by every lane's info,
+            # like driver_supersteps.
+            ext = overlap.stats()
+            for pair in out:
+                if pair is not None:
+                    pair[1]["extraction"] = ext
         return out
 
     def _state_bounds(self, state: DKSState, cfg: DKSConfig):
@@ -794,7 +838,8 @@ class QueryEngine:
         dt = time.perf_counter() - t0
         res = self._make_result(keywords, masks, state, cfg, dt, extract,
                                 keep_state, unmatched=unmatched,
-                                own_time_s=dt)
+                                own_time_s=dt,
+                                telemetry=info.get("telemetry"))
         return res, info
 
     # ------------------------------------------------------------------
@@ -818,6 +863,24 @@ class QueryEngine:
         self._execute_count += 1
         with self._mesh_context():
             return jax.block_until_ready(fn(*args))
+
+    def _run_fused(self, cfg: DKSConfig, masks: np.ndarray):
+        """One fused-driver dispatch over lane-batched masks.  Returns
+        ``(final states, telemetry)`` where telemetry is the decoded
+        :class:`~repro.obs.SuperstepTelemetry` under
+        ``ExecutionPolicy(telemetry=True)`` and None otherwise — the
+        state trajectory is identical either way (the telemetry carry
+        only reads the state)."""
+        fn = self._executable(cfg, "fused")
+        if not self.policy.telemetry:
+            states = self._execute(fn, self.device_graph,
+                                   jnp.asarray(masks))
+            return states, None
+        states, buf, steps = self._execute(fn, self.device_graph,
+                                           jnp.asarray(masks))
+        telemetry = SuperstepTelemetry.from_buffer(np.asarray(buf),
+                                                   int(steps))
+        return states, telemetry
 
     def _config(self, m: int, k: int, **overrides) -> DKSConfig:
         if m < 1:
@@ -861,7 +924,7 @@ class QueryEngine:
         input shape; a serving layer pads buckets to keep the lane-count
         alphabet small.)
         """
-        kind = self._KIND_ALIASES.get(kind, kind)
+        kind = self._resolve_kind(kind)
         key = (cfg, self.policy.partition, kind)
         fn = self._executables.get(key)
         if fn is not None:
@@ -877,6 +940,14 @@ class QueryEngine:
                     state)
 
             fn = jax.jit(_run)
+        elif kind == "fused-telemetry":
+            # Same loop, same kernel, plus the bounded counter-buffer
+            # carry (repro.core.driver.run_lanes_telemetry).
+            def _run_tel(graph, masks):
+                self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+                return run_lanes_telemetry(graph, masks, cfg)
+
+            fn = jax.jit(_run_tel)
         elif kind == "stepwise":
             def _init(graph, masks):
                 self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
@@ -908,6 +979,7 @@ class QueryEngine:
         spa_hint: float | None = None,
         extract_pool: int | None = None,
         answers_pre: tuple | None = None,
+        telemetry: SuperstepTelemetry | None = None,
     ) -> QueryResult:
         weights = np.asarray(state.topk_w)
         roots = np.asarray(state.topk_root)
@@ -979,4 +1051,5 @@ class QueryEngine:
             answers_exhausted=answers_exhausted,
             answer_pool=answer_pool,
             pool_exhausted=pool_exhausted,
+            telemetry=telemetry,
         )

@@ -38,6 +38,16 @@ class ExecutionPolicy:
                   effective weights), so it cannot be overridden per query;
                   it rides inside ``cache_token`` so caches never cross
                   ranking semantics.
+      telemetry:  collect per-superstep counters (frontier size, message
+                  totals, frozen-lane count) inside the *fused* driver's
+                  while-loop, surfaced as ``QueryResult.telemetry``
+                  (:class:`repro.obs.SuperstepTelemetry`).  The carry is a
+                  bounded ``[T, 4]`` f32 device buffer written once per
+                  superstep — answers are bit-identical with it on or off
+                  (the buffer only reads the state), and the per-superstep
+                  cost is noise next to the relax phase (asserted by
+                  ``fig_telemetry``).  Excluded from ``cache_token``: a
+                  cached answer is valid regardless of who watched it run.
       max_supersteps / message_budget / frontier_frac / combine_passes:
                   forwarded to :class:`DKSConfig` (paper Sec. 5.4 budget and
                   forced-stop semantics).
@@ -52,6 +62,7 @@ class ExecutionPolicy:
     frontier_frac: float = 0.25
     combine_passes: int | None = None
     weights: WeightPolicy = WeightPolicy()
+    telemetry: bool = False
 
     def __post_init__(self) -> None:
         if self.backend not in ("jnp", "pallas"):

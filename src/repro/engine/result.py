@@ -12,6 +12,7 @@ import numpy as np
 from repro import INF
 from repro.core.dks import DKSState
 from repro.core.reconstruct import AnswerTree
+from repro.obs.telemetry import SuperstepTelemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +84,13 @@ class QueryResult:
                      size — True when the table holds fewer distinct trees
                      than the pool asked for (the pool is the complete
                      answer list; pagination past it cannot find more).
+      telemetry:     per-superstep counters
+                     (:class:`repro.obs.SuperstepTelemetry`) when the
+                     engine was built with
+                     ``ExecutionPolicy(telemetry=True)`` or the query ran
+                     on the instrumented surface; None otherwise.  Inside
+                     a ``query_batch`` bucket the object is shared by
+                     every lane of the bucket with lane-summed columns.
     """
 
     query: tuple
@@ -108,6 +116,7 @@ class QueryResult:
     answers_exhausted: bool = False
     answer_pool: list[AnswerTree] | None = None
     pool_exhausted: bool = False
+    telemetry: SuperstepTelemetry | None = None
 
     @property
     def found(self) -> bool:

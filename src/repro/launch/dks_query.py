@@ -9,6 +9,14 @@
 
 ``--stream`` prints per-superstep approximate answers with the paper's
 early-termination bound (SPA ratio) instead of just the final result.
+
+``--explain`` serves the query through a one-shot :class:`DKSService`
+and prints the request's span tree (admit -> queue -> dispatch ->
+extract, with durations) — the serving path's answer to "where did the
+latency go".  ``--telemetry`` runs the fused executor with the
+device-side per-superstep counters and prints the frontier/message
+table (no host round-trips during the run — the counters ride the
+while-loop carry; see :mod:`repro.obs.telemetry`).
 """
 
 from __future__ import annotations
@@ -101,12 +109,25 @@ def main() -> int:
     add_weight_policy_args(ap)
     ap.add_argument("--stream", action="store_true",
                     help="print per-superstep answers with SPA bounds")
+    ap.add_argument("--explain", action="store_true",
+                    help="serve the query through a one-shot DKSService "
+                         "and print its trace span tree with durations")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry per-superstep counters in the fused "
+                         "device loop and print the frontier/message "
+                         "table (bit-identical answers)")
     ap.add_argument("--extract", action="store_true",
                     help="print label-rendered answer trees (entity "
                          "strings from the artifact's label blob when "
                          "--artifact is given; node:<id> otherwise) "
                          "instead of raw int ids")
     args = ap.parse_args()
+    if args.explain and args.stream:
+        ap.error("--explain and --stream are mutually exclusive "
+                 "(streaming runs outside the serving path)")
+    if args.telemetry and args.stream:
+        ap.error("--telemetry and --stream are mutually exclusive "
+                 "(streaming is already per-superstep)")
 
     t0 = time.time()
     policy = ExecutionPolicy(
@@ -116,6 +137,7 @@ def main() -> int:
         max_supersteps=args.max_supersteps,
         message_budget=args.message_budget,
         weights=weight_policy_from_args(args),
+        telemetry=args.telemetry,
     )
     ds, engine = build_engine(args.dataset, policy,
                               artifact=args.artifact)
@@ -155,8 +177,30 @@ def main() -> int:
                   f"{'  [exit]' if upd.done else ''}")
 
         res = engine.query_streamed(query, k=args.k, on_update=show)
+    elif args.explain:
+        # One-shot service: the query takes the REAL serving path
+        # (admission, cache lookup, bucket dispatch, extraction), so the
+        # printed span tree is the same anatomy production traces have.
+        from repro.obs import render_span_tree
+        from repro.serve import DKSService, ServeConfig
+        with DKSService(engine, ServeConfig(
+                max_batch=1, max_wait_ms=0.0)) as svc:
+            served = svc.query(query, k=args.k)
+            trace = svc.trace(served.trace_id)
+        res = served.result
+        print("\n--- request trace ---")
+        print(render_span_tree(trace))
     else:
         res = engine.query(query, k=args.k)
+    if res.telemetry is not None:
+        tel = res.telemetry
+        print(f"\n--- superstep telemetry ({tel.n_steps} steps"
+              f"{', truncated' if tel.truncated else ''}) ---")
+        print("  step  frontier  msgs_bfs     msgs_deep    frozen")
+        for row in tel.rows():
+            print(f"  {row['step']:4d}  {row['frontier']:8d}  "
+                  f"{row['msgs_bfs']:11,.0f}  {row['msgs_deep']:11,.0f}  "
+                  f"{int(tel.frozen[row['step'] - 1]):6d}")
     print(f"\nDKS finished in {res.supersteps} supersteps, "
           f"{res.wall_time_s:.2f}s")
     print(f"messages: bfs={res.msgs_bfs:,.0f} deep={res.msgs_deep:,.0f} "

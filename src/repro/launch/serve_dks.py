@@ -15,21 +15,32 @@ either matches the direct engine result or carries ``approximate=True``
 with a valid SPA lower bound, and answer trees are servable end-to-end:
 a ``return_trees=True`` query yields >= k distinct keyword-covering
 trees and an identical follow-up is served warm from the tree-pool
-cache.
+cache.  The smoke also scrapes its own ``/metrics`` over HTTP
+(ephemeral port) and asserts the exposition parses, the request/dispatch
+counters match ``ServeStats``, and the recent traces carry dispatch
+spans.
+
+``--metrics-port`` serves Prometheus ``/metrics``, ``/healthz``, and
+recent traces as ``/traces`` JSONL for the duration of the replay;
+``--trace-sample`` / ``--trace-log`` control span sampling and the
+structured JSONL event log.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+import urllib.request
 
 import numpy as np
 
 from repro.engine import ExecutionPolicy
 from repro.launch.dks_query import (add_weight_policy_args, build_engine,
                                     weight_policy_from_args)
+from repro.obs import MetricsServer, parse_prometheus
 from repro.serve import DKSService, ServeConfig
-from repro.serve.loadgen import make_trace, replay
+from repro.serve.loadgen import latency_split, make_trace, replay
 
 
 def verify_served(engine, trace, served, atol=1e-5):
@@ -123,6 +134,50 @@ def verify_trees(svc, engine, trace, k=2):
         f"no unique trace query yielded k={k} distinct answer trees")
 
 
+def verify_metrics_scrape(svc, server):
+    """Smoke acceptance for the metrics surface: scrape ``/metrics`` over
+    real HTTP, assert the exposition parses, the serving counters equal
+    the ``ServeStats`` snapshot (the service is idle here, so the two
+    reads see the same state), dispatch counters are nonzero, and the
+    recent traces carry the dispatch spans.  Returns the parsed samples.
+    """
+    with urllib.request.urlopen(f"{server.url}/healthz", timeout=10) as r:
+        assert r.read().decode().strip() == "ok", "healthz not ok"
+    with urllib.request.urlopen(f"{server.url}/metrics", timeout=10) as r:
+        text = r.read().decode()
+    samples = parse_prometheus(text)  # malformed exposition raises
+    stats = svc.stats()
+    for name, want in [
+            ("dks_requests_total", stats.requests),
+            ("dks_batch_dispatches_total", stats.batch_dispatches),
+            ("dks_deadline_dispatches_total", stats.deadline_dispatches),
+            ("dks_cache_hits_total", stats.cache_hits),
+            ("dks_single_flight_hits_total", stats.single_flight_hits)]:
+        assert samples.get(name) == want, (
+            f"/metrics {name}={samples.get(name)} != stats {want}")
+    assert samples["dks_requests_total"] > 0, "no requests on /metrics"
+    assert samples["dks_batch_dispatches_total"] > 0, (
+        "no batch dispatches on /metrics")
+    assert samples["dks_engine_execute_count_total"] > 0, (
+        "engine execute counter never moved")
+    assert samples["dks_request_latency_ms_count"] == stats.requests, (
+        "latency histogram count diverged from requests")
+    reasons = sum(samples[f"dks_dispatch_reason_{r}_total"]
+                  for r in ("full", "window", "flush"))
+    assert reasons == stats.batch_dispatches + stats.deadline_dispatches, (
+        f"dispatch reasons {reasons} != total dispatches")
+    with urllib.request.urlopen(f"{server.url}/traces?n=16",
+                                timeout=10) as r:
+        lines = [json.loads(ln) for ln in
+                 r.read().decode().splitlines() if ln]
+    assert lines, "no finished traces on /traces"
+    span_names = {sp["name"] for tr in lines for sp in tr["spans"]}
+    for want in ("admit", "queue_wait", "coalesce", "device_dispatch"):
+        assert want in span_names, (
+            f"span {want!r} missing from recent traces: {span_names}")
+    return samples
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sec-rdfabout-cpu")
@@ -148,11 +203,22 @@ def main() -> int:
                     choices=["single", "sharded"])
     add_weight_policy_args(ap)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics, /healthz, and "
+                         "/traces on this port for the run (0 = "
+                         "ephemeral; --smoke scrapes it either way)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="fraction of requests whose trace records spans "
+                         "(deterministic per seed)")
+    ap.add_argument("--trace-log", default=None,
+                    help="append finished sampled traces to this path as "
+                         "JSONL (the structured event log)")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the direct-engine parity pass")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run + hard asserts on coalescing, "
-                         "cache hits, and answer parity")
+                         "cache hits, answer parity, and the /metrics "
+                         "scrape")
     args = ap.parse_args()
 
     if args.smoke:
@@ -181,23 +247,49 @@ def main() -> int:
         seed=args.seed)
     cfg = ServeConfig(max_batch=args.max_batch,
                       max_wait_ms=args.max_wait_ms,
-                      cache_size=args.cache_size)
+                      cache_size=args.cache_size,
+                      trace_sample=args.trace_sample,
+                      trace_log=args.trace_log,
+                      trace_seed=args.seed)
     print(f"replaying {len(trace)} requests ({args.unique} unique) through "
           f"{args.clients} clients; max_batch={cfg.max_batch} "
           f"max_wait_ms={cfg.max_wait_ms:g}")
 
+    # The smoke always scrapes its own endpoint (ephemeral port unless
+    # one was asked for), so CI exercises the HTTP surface end to end.
+    metrics_port = args.metrics_port
+    if args.smoke and metrics_port is None:
+        metrics_port = 0
+
     t0 = time.perf_counter()
     tree_check = None
+    scraped = None
     with DKSService(engine, cfg) as svc:
-        served = replay(svc, trace, n_clients=args.clients)
-        if args.smoke:
-            tree_check = verify_trees(svc, engine, trace,
-                                      k=max(2, args.k))
-        stats = svc.stats()
+        server = None
+        if metrics_port is not None:
+            server = MetricsServer(svc.registry, tracer=svc.tracer,
+                                   port=metrics_port).start()
+            print(f"metrics: {server.url}/metrics")
+        try:
+            served = replay(svc, trace, n_clients=args.clients)
+            if args.smoke:
+                tree_check = verify_trees(svc, engine, trace,
+                                          k=max(2, args.k))
+                scraped = verify_metrics_scrape(svc, server)
+                print(f"metrics scrape verified: {len(scraped)} samples "
+                      f"parsed, counters match ServeStats")
+            stats = svc.stats()
+        finally:
+            if server is not None:
+                server.stop()
     wall = time.perf_counter() - t0
 
     print(f"\n--- ServeStats ({wall:.2f}s wall) ---")
     print(stats.summary())
+    split = latency_split(served)
+    print(f"latency split  queue p95={split['queue_p95_ms']:.1f}ms over "
+          f"{split['n_queue']} dispatched; device "
+          f"p95={split['device_p95_ms']:.1f}ms")
 
     if not args.no_verify:
         n_exact, n_approx = verify_served(engine, trace, served)

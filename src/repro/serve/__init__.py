@@ -24,13 +24,20 @@ Public API:
                   request asked with return_trees=True: label-rendered,
                   diversity- or weight-ranked, cursor-paginated answer
                   trees backed by a tree-pool LRU keyed on cache_token).
-  ServeStats    — p50/p95 latency, throughput, batch-fill, cache-hit rate,
+  ServeStats    — p50/p95 latency (end-to-end plus queue-wait/device-time
+                  splits), throughput, batch-fill, cache-hit rate,
                   tree-request counters.
   ResultCache   — the LRU (exposed for direct use and tests).
   TreePage / RenderedTree / RenderedEdge — the served tree payloads
                   (re-exported from repro.answers).
   loadgen       — synthetic traces + concurrent replay clients
-                  (make_trace / replay / TraceRequest).
+                  (make_trace / replay / TraceRequest / latency_split).
+
+Observability (:mod:`repro.obs`): every admitted request carries a trace
+(``ServedResult.trace_id`` -> ``svc.trace(id)``), and ``svc.registry``
+exposes the ServeStats counters, engine executor/extraction counters,
+and latency histograms in Prometheus text format (``serve_dks
+--metrics-port`` serves it over HTTP).
 """
 
 from repro.answers import RenderedEdge, RenderedTree, TreePage  # noqa: F401

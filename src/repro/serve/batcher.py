@@ -48,6 +48,9 @@ class Request:
     deadline_t: float | None = None
     deadline_ms: float | None = None
     cache_key: Hashable = None
+    # The request's trace (repro.obs.Trace) — admission begins it, the
+    # resolve path finishes it.  Opaque to the batcher.
+    trace: Any = None
     # Answer-tree serving (DKSService.submit(return_trees=True)).  These
     # shape only host-side rendering, never the device program, so they
     # are NOT part of shape_key — tree and non-tree requests co-batch.
@@ -97,6 +100,13 @@ class MicroBatcher:
         self._queue: queue.Queue = queue.Queue()
         self._thread: threading.Thread | None = None
         self._stopping = False
+        # Why each bucket dispatched: "full" (hit max_batch), "window"
+        # (oldest member's admission window expired), "flush" (service
+        # stopping).  Counters are monotone; ``current_reason`` is valid
+        # inside a dispatch call (same thread, set right before it) and
+        # lets the service stamp the reason on the bucket's trace span.
+        self.dispatch_counts = {"full": 0, "window": 0, "flush": 0}
+        self.current_reason: str | None = None
         # Makes submit's running-check + enqueue atomic against stop():
         # any request admitted under the lock is enqueued before _STOP,
         # so the dispatcher always sees (and flushes) it before exiting.
@@ -205,12 +215,13 @@ class MicroBatcher:
             for key in list(pending):
                 group = pending[key]
                 while len(group) >= self.max_batch:
-                    self._safe_dispatch(group[: self.max_batch])
+                    self._safe_dispatch(group[: self.max_batch], "full")
                     del group[: self.max_batch]
                 if group and (stopping or
                               now - group[0].t_submit
                               >= self._window_s(group[0])):
-                    self._safe_dispatch(group)
+                    self._safe_dispatch(
+                        group, "flush" if stopping else "window")
                     group = []
                 if group:
                     pending[key] = group
@@ -244,10 +255,15 @@ class MicroBatcher:
         remaining = nearest - now
         return max(remaining, 0.0) if remaining > 1e-4 else 0
 
-    def _safe_dispatch(self, group: list[Request]) -> None:
+    def _safe_dispatch(self, group: list[Request],
+                       reason: str = "window") -> None:
+        self.dispatch_counts[reason] += 1
+        self.current_reason = reason
         try:
             self._dispatch(group)
         except BaseException as exc:  # noqa: BLE001 — must resolve futures
             for req in group:
                 if not req.future.done():
                     req.future.set_exception(exc)
+        finally:
+            self.current_reason = None

@@ -101,6 +101,35 @@ def make_trace(index, n_requests: int = 48, *, unique: int = 8,
     return trace
 
 
+def latency_split(results: list[ServedResult]) -> dict[str, float]:
+    """Aggregate the end-to-end / queue-wait / device-time latency split
+    over served results (milliseconds; p50/p95/mean per phase).
+
+    Results missing a phase are excluded from that phase's window —
+    cache hits and single-flight followers never queue or dispatch, so
+    ``n_queue``/``n_device`` say how many results each split covers.
+    Zeros (not NaN) when a window is empty, matching ``ServeStats``.
+    """
+    def summarize(values: list[float], tag: str) -> dict[str, float]:
+        arr = np.asarray(values, np.float64)
+        if not arr.size:
+            return {f"{tag}_p50_ms": 0.0, f"{tag}_p95_ms": 0.0,
+                    f"{tag}_mean_ms": 0.0}
+        return {f"{tag}_p50_ms": float(np.percentile(arr, 50)),
+                f"{tag}_p95_ms": float(np.percentile(arr, 95)),
+                f"{tag}_mean_ms": float(arr.mean())}
+
+    served = [r for r in results if r is not None]
+    queue = [r.queue_wait_ms for r in served if r.queue_wait_ms is not None]
+    device = [r.device_ms for r in served if r.device_ms is not None]
+    out = {"n": len(served), "n_queue": len(queue),
+           "n_device": len(device)}
+    out.update(summarize([r.latency_ms for r in served], "latency"))
+    out.update(summarize(queue, "queue"))
+    out.update(summarize(device, "device"))
+    return out
+
+
 def replay(service: DKSService, trace: list[TraceRequest], *,
            n_clients: int = 8) -> list[ServedResult]:
     """Replay ``trace`` through ``service`` with ``n_clients`` concurrent

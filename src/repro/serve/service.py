@@ -37,10 +37,24 @@ Usage::
 
 All device work happens on the service's single dispatcher thread; client
 threads only touch the cache, the admission queue, and their futures.
+
+**Observability** (:mod:`repro.obs`): every admitted request gets a trace
+(``ServedResult.trace_id``) whose spans walk the request's actual path —
+admit (with the cache lookup), queue wait, bucket coalesce (shape / fill /
+dispatch reason / deadline budget), device dispatch (compile-vs-warm,
+detected via the engine's trace counter), extraction (device-resolved vs
+host-fallback split), render/paginate, cache store.  Micro-batch riders
+and single-flight followers get their own trace with a ``coalesced_into``
+link to the bucket leader.  ``svc.registry`` exposes every ``ServeStats``
+counter (derived from the same snapshot at scrape time, so ``/metrics``
+can never drift from ``stats()``), engine executor counters, and
+latency/queue/device histograms in Prometheus text format —
+``serve_dks --metrics-port`` serves it over HTTP.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -49,9 +63,14 @@ from typing import Hashable, Sequence
 
 from repro.answers import TreePage, diversified_order, paginate
 from repro.engine import QueryEngine, QueryResult
+from repro.obs import MetricsRegistry, Tracer
 from repro.serve.batcher import MicroBatcher, Request
 from repro.serve.cache import ResultCache
 from repro.serve.stats import ServeStats, StatsCollector
+
+# Stand-in context manager for unsampled/traceless span sites (entering
+# it any number of times is safe — nullcontext keeps no state).
+_NULL_SPAN = contextlib.nullcontext()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +120,16 @@ class ServeConfig:
       diversify_lambda: the MMR relevance/diversity trade-off for
                    ``tree_ranking="diverse"`` (1 = pure weight order,
                    0 = pure diversification).
+      trace_sample: fraction of requests whose trace records spans
+                   (deterministic per ``(trace_seed, trace_id)`` — see
+                   :class:`repro.obs.Tracer`).  Unsampled requests still
+                   get a trace id on their :class:`ServedResult`.
+      trace_capacity: finished sampled traces kept in the in-memory ring
+                   (the ``/traces`` endpoint and ``recent_traces()``).
+      trace_seed:  seed for the sampling hash — the same seed samples the
+                   same trace ids on every run.
+      trace_log:   path to append finished sampled traces as JSONL (the
+                   structured event log); None disables.
     """
 
     max_batch: int = 8
@@ -114,6 +143,10 @@ class ServeConfig:
     tree_page_size: int = 5
     tree_pool_factor: int = 3
     diversify_lambda: float = 0.5
+    trace_sample: float = 1.0
+    trace_capacity: int = 256
+    trace_seed: int = 0
+    trace_log: str | None = None
 
     def __post_init__(self) -> None:
         if self.pad_batches not in ("pow2", "max", "none"):
@@ -126,6 +159,10 @@ class ServeConfig:
             raise ValueError("tree_pool_factor must be >= 1")
         if not 0.0 <= self.diversify_lambda <= 1.0:
             raise ValueError("diversify_lambda must be in [0, 1]")
+        if not 0.0 <= self.trace_sample <= 1.0:
+            raise ValueError("trace_sample must be in [0, 1]")
+        if self.trace_capacity < 1:
+            raise ValueError("trace_capacity must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +198,17 @@ class ServedResult:
                    trees (``return_trees=True`` requests only; None
                    otherwise).  For approximate results these are the
                    best-so-far trees, bounded by ``opt_lower_bound``.
+      trace_id:    id of this request's trace (every admitted request has
+                   one; whether spans were recorded depends on
+                   ``ServeConfig.trace_sample``).  Fetch the span tree
+                   with ``svc.trace(trace_id)`` while it is in the ring.
+      queue_wait_ms: time this request sat in the admission queue before
+                   its bucket dispatched (ms); None on resolve paths that
+                   never queue (cache hits, single-flight followers).
+      device_ms:   the compiled superstep program's wall time for the
+                   dispatch that served this request (ms; a shared bucket
+                   bills the same number to every rider); None when no
+                   device work happened.
     """
 
     result: QueryResult
@@ -172,6 +220,9 @@ class ServedResult:
     sound_opt_lower_bound: float | None = None
     coalesced: bool = False
     trees: TreePage | None = None
+    trace_id: int | None = None
+    queue_wait_ms: float | None = None
+    device_ms: float | None = None
 
     @property
     def weights(self):
@@ -216,8 +267,181 @@ class DKSService:
         # is already in the ResultCache, so there is no window where an
         # identical request re-executes).  Deadline requests never
         # participate — a best-so-far answer is budget-specific.
-        self._inflight: dict[Hashable, list[tuple[Future, float]]] = {}
+        # Follower tuples are (future, t_submit, trace); _inflight_traces
+        # remembers the leader's trace id so followers can link to it.
+        self._inflight: dict[Hashable, list] = {}
+        self._inflight_traces: dict[Hashable, int] = {}
         self._inflight_lock = threading.Lock()
+        # Observability: one trace per admitted request (the span trees
+        # behind ``--explain`` and ``/traces``) and a metrics registry
+        # whose serving counters are DERIVED from ``self.stats()`` at
+        # scrape time — /metrics equals ServeStats by construction.
+        self.tracer = Tracer(
+            capacity=self.config.trace_capacity,
+            sample=self.config.trace_sample,
+            seed=self.config.trace_seed,
+            log_path=self.config.trace_log)
+        self.registry = MetricsRegistry()
+        self._wire_metrics()
+
+    # ------------------------------------------------------------------
+    # Metrics
+    # ------------------------------------------------------------------
+
+    def _wire_metrics(self) -> None:
+        """Expose serving state on ``self.registry``.
+
+        Counters and gauges are scrape-time collectors over the SAME
+        snapshots ``stats()`` / ``engine.*`` / ``tracer.stats()`` serve,
+        so ``/metrics`` cannot drift from the Python-side reports.  Only
+        the latency histograms are direct instruments (a percentile
+        cannot be reconstructed at scrape time)."""
+        reg = self.registry
+        self._h_latency = reg.histogram(
+            "dks_request_latency_ms",
+            "End-to-end request latency (submit -> resolved future), ms.")
+        self._h_queue = reg.histogram(
+            "dks_queue_wait_ms",
+            "Admission-queue wait before bucket dispatch, ms "
+            "(dispatched requests only).")
+        self._h_device = reg.histogram(
+            "dks_device_time_ms",
+            "Compiled superstep program wall time billed to each "
+            "dispatched request, ms.")
+
+        _C, _G = "counter", "gauge"
+        serve_kinds = {
+            "dks_requests_total": _C,
+            "dks_failures_total": _C,
+            "dks_batch_dispatches_total": _C,
+            "dks_deadline_dispatches_total": _C,
+            "dks_batched_requests_total": _C,
+            "dks_deadline_batched_requests_total": _C,
+            "dks_deadline_driver_supersteps_total": _C,
+            "dks_deadline_lane_supersteps_total": _C,
+            "dks_cache_hits_total": _C,
+            "dks_cache_misses_total": _C,
+            "dks_cache_evictions_total": _C,
+            "dks_single_flight_hits_total": _C,
+            "dks_approximate_total": _C,
+            "dks_tree_requests_total": _C,
+            "dks_tree_cache_hits_total": _C,
+            "dks_mean_batch_fill": _G,
+            "dks_cache_hit_rate": _G,
+            "dks_throughput_rps": _G,
+            "dks_latency_p50_ms": _G,
+            "dks_latency_p95_ms": _G,
+            "dks_queue_p50_ms": _G,
+            "dks_queue_p95_ms": _G,
+            "dks_device_p50_ms": _G,
+            "dks_device_p95_ms": _G,
+        }
+
+        def collect_serve() -> dict[str, float]:
+            s = self.stats()
+            return {
+                "dks_requests_total": s.requests,
+                "dks_failures_total": s.failures,
+                "dks_batch_dispatches_total": s.batch_dispatches,
+                "dks_deadline_dispatches_total": s.deadline_dispatches,
+                "dks_batched_requests_total": s.batched_requests,
+                "dks_deadline_batched_requests_total":
+                    s.deadline_batched_requests,
+                "dks_deadline_driver_supersteps_total":
+                    s.deadline_driver_supersteps,
+                "dks_deadline_lane_supersteps_total":
+                    s.deadline_lane_supersteps,
+                "dks_cache_hits_total": s.cache_hits,
+                "dks_cache_misses_total": s.cache_misses,
+                "dks_cache_evictions_total": s.cache_evictions,
+                "dks_single_flight_hits_total": s.single_flight_hits,
+                "dks_approximate_total": s.approximate,
+                "dks_tree_requests_total": s.tree_requests,
+                "dks_tree_cache_hits_total": s.tree_cache_hits,
+                "dks_mean_batch_fill": s.mean_batch_fill,
+                "dks_cache_hit_rate": s.cache_hit_rate,
+                "dks_throughput_rps": s.throughput_rps,
+                "dks_latency_p50_ms": s.p50_ms,
+                "dks_latency_p95_ms": s.p95_ms,
+                "dks_queue_p50_ms": s.queue_p50_ms,
+                "dks_queue_p95_ms": s.queue_p95_ms,
+                "dks_device_p50_ms": s.device_p50_ms,
+                "dks_device_p95_ms": s.device_p95_ms,
+            }
+
+        reg.register_collector(collect_serve, kinds=serve_kinds, helps={
+            "dks_requests_total": "Requests served (cache hits included).",
+            "dks_failures_total": "Dispatched requests whose run raised.",
+        })
+
+        def collect_engine() -> dict[str, float]:
+            eng = self.engine  # follow set_engine swaps
+            extract = eng.extraction_stats
+            return {
+                "dks_engine_execute_count_total": eng.execute_count,
+                "dks_engine_traces_total": eng.cache_stats["traces"],
+                "dks_engine_executables": eng.cache_stats["executables"],
+                "dks_extract_device_resolved_total":
+                    extract["device_resolved"],
+                "dks_extract_host_fallbacks_total":
+                    extract["host_fallbacks"],
+            }
+
+        reg.register_collector(collect_engine, kinds={
+            "dks_engine_execute_count_total": _C,
+            "dks_engine_traces_total": _C,
+            "dks_engine_executables": _G,
+            "dks_extract_device_resolved_total": _C,
+            "dks_extract_host_fallbacks_total": _C,
+        }, helps={
+            "dks_engine_execute_count_total":
+                "Device dispatches through the compiled-executable cache.",
+            "dks_engine_traces_total":
+                "Executable compilations (jit traces) — warm serving "
+                "means this stays flat while execute_count climbs.",
+            "dks_extract_device_resolved_total":
+                "Lanes whose answer trees the batched device backtracer "
+                "reconstructed.",
+            "dks_extract_host_fallbacks_total":
+                "Ragged lanes re-run through the host tree search.",
+        })
+
+        def collect_tracer() -> dict[str, float]:
+            t = self.tracer.stats()
+            return {
+                "dks_traces_begun_total": t["begun"],
+                "dks_traces_finished_total": t["finished"],
+                "dks_traces_sampled_total": t["sampled"],
+                "dks_traces_buffered": t["buffered"],
+            }
+
+        reg.register_collector(collect_tracer, kinds={
+            "dks_traces_begun_total": _C,
+            "dks_traces_finished_total": _C,
+            "dks_traces_sampled_total": _C,
+            "dks_traces_buffered": _G,
+        }, helps={
+            "dks_traces_begun_total":
+                "Traces begun (one per admitted request); equal to "
+                "finished once the service drains.",
+        })
+
+        def collect_batcher() -> dict[str, float]:
+            counts = dict(self._batcher.dispatch_counts)
+            return {f"dks_dispatch_reason_{reason}_total": n
+                    for reason, n in counts.items()}
+
+        reg.register_collector(collect_batcher, kinds={
+            f"dks_dispatch_reason_{r}_total": _C
+            for r in ("full", "window", "flush")
+        }, helps={
+            "dks_dispatch_reason_full_total":
+                "Buckets dispatched because they reached max_batch.",
+            "dks_dispatch_reason_window_total":
+                "Buckets dispatched on admission-window expiry.",
+            "dks_dispatch_reason_flush_total":
+                "Buckets flushed at service stop.",
+        })
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -282,20 +506,33 @@ class DKSService:
         future: Future = Future()
         if not self._batcher.running:
             raise RuntimeError("service is not running")
+        # One trace per admitted request, finished on EVERY resolve path
+        # (finish() is idempotent) — the tracer's begun == finished
+        # counters are the completeness invariant the tests assert.
+        trace = self.tracer.begin(
+            "dks.request", m=len(keywords), k=k,
+            deadline_ms=deadline_ms, trees=return_trees)
+
+        def _reject(exc: BaseException) -> "Future[ServedResult]":
+            trace.add_span("admit", t_submit, time.perf_counter(),
+                           outcome="rejected")
+            trace.set(outcome="rejected", error=repr(exc))
+            trace.finish()
+            future.set_exception(exc)
+            return future
+
         if tree_ranking not in ("diverse", "weight"):
-            future.set_exception(ValueError(
+            return _reject(ValueError(
                 f"unknown tree_ranking {tree_ranking!r} "
                 "(expected 'diverse' or 'weight')"))
-            return future
         engine = self.engine  # snapshot: set_engine must not swap mid-flight
         if self.config.strict:
             missing = engine.index.missing_tokens(list(keywords))
             if missing:
                 # Admission-time validation: fail this request alone, not
                 # the co-batched dispatch it would have poisoned.
-                future.set_exception(KeyError(
+                return _reject(KeyError(
                     f"keywords matched no node in the index: {missing}"))
-                return future
         if overrides:
             # Normalize: an override equal to the engine's policy value is
             # no override at all — dropping it lets the request coalesce
@@ -308,9 +545,8 @@ class DKSService:
                              for name, value in overrides.items()
                              if getattr(engine.policy, name) != value}
             except AttributeError as exc:
-                future.set_exception(TypeError(
+                return _reject(TypeError(
                     f"unknown policy override: {exc}"))
-                return future
         # Counters only move for requests that will actually be served: a
         # hit counts on the spot (its serving is the set_result below); a
         # miss counts only after durable admission to the batcher, so a
@@ -322,13 +558,16 @@ class DKSService:
         except TypeError as exc:
             # An unhashable keyword or override value would otherwise blow
             # up on the dispatcher thread; fail this request alone.
-            future.set_exception(TypeError(
+            return _reject(TypeError(
                 f"unhashable query or override value: {exc}"))
-            return future
-        hit = self._cache.get(cache_key, count_miss=False)
+        with trace.span("cache_lookup") as lookup:
+            hit = self._cache.get(cache_key, count_miss=False)
+            lookup.set(hit=hit is not None)
         if hit is not None:
             if not return_trees:
-                self._resolve_cache_hit(future, hit, t_submit)
+                trace.add_span("admit", t_submit, time.perf_counter(),
+                               outcome="cache_hit")
+                self._resolve_cache_hit(future, hit, t_submit, trace=trace)
                 return future
             # A tree request needs the pool too: both caches must hit —
             # a result without its pool re-dispatches (the dense table is
@@ -336,10 +575,15 @@ class DKSService:
             pool_entry = self._tree_cache.get((cache_key, "trees"))
             if pool_entry is not None:
                 self._stats.record_tree_request(cache_hit=True)
-                page = self._render_page(
-                    pool_entry, engine, ranking=tree_ranking,
-                    cursor=tree_cursor, page_size=tree_page_size)
-                self._resolve_cache_hit(future, hit, t_submit, trees=page)
+                trace.add_span("admit", t_submit, time.perf_counter(),
+                               outcome="tree_cache_hit")
+                with trace.span("render", ranking=tree_ranking,
+                                cursor=tree_cursor):
+                    page = self._render_page(
+                        pool_entry, engine, ranking=tree_ranking,
+                        cursor=tree_cursor, page_size=tree_page_size)
+                self._resolve_cache_hit(future, hit, t_submit, trees=page,
+                                        trace=trace)
                 return future
         single_flight = deadline_ms is None and not return_trees
         if single_flight:
@@ -352,9 +596,15 @@ class DKSService:
             with self._inflight_lock:
                 followers = self._inflight.get(cache_key)
                 if followers is not None:
-                    followers.append((future, t_submit))
+                    leader_id = self._inflight_traces.get(cache_key)
+                    if leader_id is not None:
+                        trace.link(coalesced_into=leader_id)
+                    trace.add_span("admit", t_submit, time.perf_counter(),
+                                   outcome="attached")
+                    followers.append((future, t_submit, trace))
                     return future
                 self._inflight[cache_key] = []
+                self._inflight_traces[cache_key] = trace.trace_id
             # Leadership won — but the PREVIOUS leader may have resolved
             # between our cache check and the registration above (its
             # result cached, its inflight entry popped).  Re-check the
@@ -365,11 +615,20 @@ class DKSService:
             if hit is not None:
                 with self._inflight_lock:
                     followers = self._inflight.pop(cache_key, [])
-                self._resolve_cache_hit(future, hit, t_submit)
-                for fut, t_sub in followers:
+                    self._inflight_traces.pop(cache_key, None)
+                trace.add_span("admit", t_submit, time.perf_counter(),
+                               outcome="cache_hit")
+                self._resolve_cache_hit(future, hit, t_submit, trace=trace)
+                for fut, t_sub, f_trace in followers:
                     if fut.set_running_or_notify_cancel():
-                        self._resolve_cache_hit(fut, hit, t_sub)
+                        self._resolve_cache_hit(fut, hit, t_sub,
+                                                trace=f_trace)
+                    elif f_trace is not None:
+                        f_trace.set(outcome="cancelled")
+                        f_trace.finish()
                 return future
+        trace.add_span("admit", t_submit, time.perf_counter(),
+                       outcome="queued")
         try:
             self._batcher.submit(Request(
                 keywords=keywords, k=k,
@@ -379,11 +638,14 @@ class DKSService:
                             if deadline_ms is not None else None),
                 deadline_ms=deadline_ms,
                 cache_key=cache_key,
+                trace=trace,
                 return_trees=return_trees,
                 tree_ranking=tree_ranking,
                 tree_cursor=tree_cursor,
                 tree_page_size=tree_page_size))
         except BaseException as exc:
+            trace.set(outcome="error", error=repr(exc))
+            trace.finish()
             if single_flight:
                 self._abort_single_flight(cache_key, exc)
             raise
@@ -414,14 +676,21 @@ class DKSService:
 
     def _resolve_cache_hit(self, future: Future, hit: QueryResult,
                            t_submit: float,
-                           trees: TreePage | None = None) -> None:
+                           trees: TreePage | None = None,
+                           trace=None) -> None:
         """Resolve one future from a cached result (stats recorded)."""
         t_done = time.perf_counter()
         self._stats.record_request(t_submit, t_done)
+        self._h_latency.observe((t_done - t_submit) * 1e3)
+        trace_id = None
+        if trace is not None:
+            trace_id = trace.trace_id
+            trace.set(outcome="cache_hit")
+            trace.finish()
         future.set_result(ServedResult(
             result=hit, cache_hit=True, approximate=False,
             batch_size=0, latency_ms=(t_done - t_submit) * 1e3,
-            trees=trees))
+            trees=trees, trace_id=trace_id))
 
     # ------------------------------------------------------------------
     # Single-flight bookkeeping
@@ -432,6 +701,7 @@ class DKSService:
         """Leader resolved: fan its outcome out to attached followers."""
         with self._inflight_lock:
             followers = self._inflight.pop(cache_key, None)
+            self._inflight_traces.pop(cache_key, None)
         if not followers:
             return
         exc: BaseException | None
@@ -439,18 +709,31 @@ class DKSService:
             exc = CancelledError()
         else:
             exc = leader.exception()
-        for fut, t_sub in followers:
+        for fut, t_sub, f_trace in followers:
             if not fut.set_running_or_notify_cancel():
+                if f_trace is not None:
+                    f_trace.set(outcome="cancelled")
+                    f_trace.finish()
                 continue
             if exc is not None:
                 self._stats.record_failure(1)
+                if f_trace is not None:
+                    f_trace.set(outcome="error", error=repr(exc))
+                    f_trace.finish()
                 fut.set_exception(exc)
                 continue
             t_done = time.perf_counter()
             self._stats.record_request(t_sub, t_done)
             self._stats.record_single_flight()
+            self._h_latency.observe((t_done - t_sub) * 1e3)
+            trace_id = None
+            if f_trace is not None:
+                trace_id = f_trace.trace_id
+                f_trace.set(outcome="attached")
+                f_trace.finish()
             fut.set_result(dataclasses.replace(
-                leader.result(), coalesced=True,
+                leader.result(), coalesced=True, trace_id=trace_id,
+                queue_wait_ms=None, device_ms=None,
                 latency_ms=(t_done - t_sub) * 1e3))
 
     def _abort_single_flight(self, cache_key: Hashable,
@@ -459,7 +742,11 @@ class DKSService:
         in and free the key."""
         with self._inflight_lock:
             followers = self._inflight.pop(cache_key, None)
-        for fut, _t_sub in followers or ():
+            self._inflight_traces.pop(cache_key, None)
+        for fut, _t_sub, f_trace in followers or ():
+            if f_trace is not None:
+                f_trace.set(outcome="error", error=repr(exc))
+                f_trace.finish()
             if fut.set_running_or_notify_cancel():
                 fut.set_exception(exc)
 
@@ -506,6 +793,16 @@ class DKSService:
         throughput, batch-fill, cache-hit rate)."""
         return self._stats.report(self._cache.stats())
 
+    def trace(self, trace_id: int):
+        """The finished :class:`repro.obs.Trace` for a served request's
+        ``ServedResult.trace_id``, while it is still in the tracer ring
+        (None if evicted or unsampled)."""
+        return self.tracer.get(trace_id)
+
+    def recent_traces(self, n: int | None = None):
+        """Most recent finished sampled traces, newest last."""
+        return self.tracer.recent(n)
+
     # ------------------------------------------------------------------
     # Dispatcher-thread execution
     # ------------------------------------------------------------------
@@ -515,8 +812,14 @@ class DKSService:
         # client that cancelled while queued drops out here (saving its
         # lanes), and set_result below can no longer race a cancel —
         # which would poison the co-batched futures with InvalidStateError.
-        group = [req for req in group
-                 if req.future.set_running_or_notify_cancel()]
+        alive = []
+        for req in group:
+            if req.future.set_running_or_notify_cancel():
+                alive.append(req)
+            elif req.trace is not None:
+                req.trace.set(outcome="cancelled")
+                req.trace.finish()
+        group = alive
         if not group:
             return
         try:
@@ -524,12 +827,16 @@ class DKSService:
                 self._serve_deadline_batch(group)
             else:
                 self._serve_batch(group)
-        except BaseException:
+        except BaseException as exc:
             # The batcher resolves the still-pending futures with this
             # exception; count only those, so requests + failures equals
             # admitted load even if some of the group already resolved.
-            self._stats.record_failure(
-                sum(1 for req in group if not req.future.done()))
+            pending = [req for req in group if not req.future.done()]
+            self._stats.record_failure(len(pending))
+            for req in pending:
+                if req.trace is not None:
+                    req.trace.set(outcome="error", error=repr(exc))
+                    req.trace.finish()
             raise
 
     def _padded_len(self, n: int) -> int:
@@ -543,6 +850,27 @@ class DKSService:
             p *= 2
         return min(p, self.config.max_batch)
 
+    def _observe_dispatch(self, group: list[Request], n_lanes: int,
+                          t_dispatch: float, *,
+                          deadline_budget_ms: float | None = None) -> None:
+        """Queue-wait spans for every rider, a ``coalesce`` span +
+        ``coalesced_into`` links under the bucket leader (group[0])."""
+        for req in group:
+            if req.trace is not None:
+                req.trace.add_span("queue_wait", req.t_submit, t_dispatch)
+        leader = group[0].trace
+        if leader is not None:
+            attrs = dict(shape=f"m{len(group[0].keywords)}k{group[0].k}",
+                         fill=len(group), lanes=n_lanes,
+                         reason=self._batcher.current_reason)
+            if deadline_budget_ms is not None:
+                attrs["deadline_budget_ms"] = round(deadline_budget_ms, 3)
+            leader.add_span("coalesce", group[0].t_submit, t_dispatch,
+                            **attrs)
+            for req in group[1:]:
+                if req.trace is not None:
+                    req.trace.link(coalesced_into=leader.trace_id)
+
     def _serve_batch(self, group: list[Request]) -> None:
         cfg = self.config
         # The admitting engine build serves the group (a group never mixes
@@ -551,19 +879,47 @@ class DKSService:
         queries = [list(req.keywords) for req in group]
         n_real = len(queries)
         queries += [queries[-1]] * (self._padded_len(n_real) - n_real)
+        t_dispatch = time.perf_counter()
+        self._observe_dispatch(group, len(queries), t_dispatch)
+        leader = group[0].trace
         # Tree requests widen extraction to a ranked pool for the WHOLE
         # bucket (extraction is per-lane host work; the pool rides the
         # same device-batched backtrace pass either way) and force
         # extraction on even for weight-only configs.
         want_trees = any(req.return_trees for req in group)
         pool_n = group[0].k * cfg.tree_pool_factor if want_trees else None
+        # Compile-vs-warm split: the engine's trace counter moves exactly
+        # when this dispatch compiled a new executable for the shape.
+        overrides = dict(group[0].overrides)
+        m, k = len(group[0].keywords), group[0].k
+        traces_before = engine.trace_count(m, k, **overrides)
+        extract_before = engine.extraction_stats
         # n_real: padding lanes ride the device program for shape reuse
         # but skip host-side result construction in the engine.
         results = engine.query_batch(
-            queries, k=group[0].k, extract=cfg.extract or want_trees,
+            queries, k=k, extract=cfg.extract or want_trees,
             extract_pool=pool_n, strict=cfg.strict,
-            n_real=n_real, **dict(group[0].overrides))
+            n_real=n_real, **overrides)
         t_done = time.perf_counter()
+        compiled = engine.trace_count(m, k, **overrides) > traces_before
+        extract_after = engine.extraction_stats
+        # The engine's wall_time_s times the superstep loop alone; the
+        # rest of the dispatch interval is host-side extraction + result
+        # construction.  Splitting the interval at that boundary gives
+        # every rider an honest device span without a second clock read
+        # inside the engine.
+        device_ms = results[0].wall_time_s * 1e3 if results else 0.0
+        t_device_end = min(t_done, t_dispatch + device_ms / 1e3)
+        if leader is not None:
+            leader.add_span("device_dispatch", t_dispatch, t_device_end,
+                            compiled=compiled, lanes=len(queries))
+            leader.add_span(
+                "extract", t_device_end, t_done,
+                mode="device" if cfg.extract or want_trees else "skipped",
+                device_resolved=(extract_after["device_resolved"]
+                                 - extract_before["device_resolved"]),
+                host_fallbacks=(extract_after["host_fallbacks"]
+                                - extract_before["host_fallbacks"]))
         self._stats.record_dispatch(n_real, deadline=False)
         # After a set_engine swap, results of the old build are keyed
         # under its version — unreachable to every future lookup, so
@@ -571,24 +927,42 @@ class DKSService:
         cacheable = engine is self.engine
         for req, res in zip(group, results):
             if cacheable:
-                self._cache.put(req.cache_key, res)
-                if want_trees and res.answer_pool is not None:
-                    self._tree_cache.put(
-                        (req.cache_key, "trees"),
-                        (res.answer_pool, res.pool_exhausted))
+                with (req.trace.span("cache_store") if req.trace is not None
+                      else _NULL_SPAN):
+                    self._cache.put(req.cache_key, res)
+                    if want_trees and res.answer_pool is not None:
+                        self._tree_cache.put(
+                            (req.cache_key, "trees"),
+                            (res.answer_pool, res.pool_exhausted))
             trees = None
             if req.return_trees:
                 self._stats.record_tree_request(cache_hit=False)
-                trees = self._render_page(
-                    (res.answer_pool or [], res.pool_exhausted), engine,
-                    ranking=req.tree_ranking, cursor=req.tree_cursor,
-                    page_size=req.tree_page_size)
-            self._stats.record_request(req.t_submit, t_done)
+                with (req.trace.span("render", ranking=req.tree_ranking,
+                                     cursor=req.tree_cursor)
+                      if req.trace is not None else _NULL_SPAN):
+                    trees = self._render_page(
+                        (res.answer_pool or [], res.pool_exhausted), engine,
+                        ranking=req.tree_ranking, cursor=req.tree_cursor,
+                        page_size=req.tree_page_size)
+            t_res = time.perf_counter()
+            queue_ms = (t_dispatch - req.t_submit) * 1e3
+            self._stats.record_request(req.t_submit, t_res,
+                                       queue_wait_ms=queue_ms,
+                                       device_ms=device_ms)
+            self._h_latency.observe((t_res - req.t_submit) * 1e3)
+            self._h_queue.observe(queue_ms)
+            self._h_device.observe(device_ms)
+            trace_id = None
+            if req.trace is not None:
+                trace_id = req.trace.trace_id
+                req.trace.set(outcome="served", compiled=compiled)
+                req.trace.finish()
             req.future.set_result(ServedResult(
                 result=res, cache_hit=False, approximate=False,
                 batch_size=n_real,
-                latency_ms=(t_done - req.t_submit) * 1e3,
-                trees=trees))
+                latency_ms=(t_res - req.t_submit) * 1e3,
+                trees=trees, trace_id=trace_id,
+                queue_wait_ms=queue_ms, device_ms=device_ms))
 
     def _serve_deadline_batch(self, group: list[Request]) -> None:
         cfg = self.config
@@ -605,16 +979,39 @@ class DKSService:
         # per-lane bounds are computed once, at the end.  Queue wait
         # already counted against the deadline.
         deadline_t = min(req.deadline_t for req in group)
+        t_dispatch = time.perf_counter()
+        self._observe_dispatch(
+            group, len(queries), t_dispatch,
+            deadline_budget_ms=(deadline_t - t_dispatch) * 1e3)
+        leader = group[0].trace
         want_trees = any(req.return_trees for req in group)
         pool_n = group[0].k * cfg.tree_pool_factor if want_trees else None
+        overrides = dict(group[0].overrides)
+        m, k = len(group[0].keywords), group[0].k
+        traces_before = engine.trace_count(m, k, kind="stepwise",
+                                           **overrides)
         out = engine.query_deadline_batch(
-            queries, k=group[0].k, extract=cfg.extract or want_trees,
+            queries, k=k, extract=cfg.extract or want_trees,
             extract_pool=pool_n, strict=cfg.strict,
             deadline_s=deadline_t - time.perf_counter(), n_real=n_real,
-            **dict(group[0].overrides))
+            **overrides)
         t_done = time.perf_counter()
+        compiled = engine.trace_count(m, k, kind="stepwise",
+                                      **overrides) > traces_before
         driver_steps = out[0][1]["driver_supersteps"] if out else 0
         lane_steps = sum(res.supersteps for res, _ in out[:n_real])
+        device_ms = out[0][0].wall_time_s * 1e3 if out else 0.0
+        t_device_end = min(t_done, t_dispatch + device_ms / 1e3)
+        if leader is not None:
+            leader.add_span("device_dispatch", t_dispatch, t_device_end,
+                            compiled=compiled, lanes=len(queries),
+                            driver_supersteps=driver_steps)
+            extraction = (out[0][1].get("extraction", {})
+                          if out else {})
+            leader.add_span(
+                "extract", t_device_end, t_done,
+                mode="overlapped" if extraction else "inline",
+                **extraction)
         self._stats.record_dispatch(n_real, deadline=True,
                                     driver_steps=driver_steps,
                                     lane_steps=lane_steps)
@@ -627,27 +1024,45 @@ class DKSService:
                 # flight — the old-version key would be unreachable).
                 # Best-so-far results are budget-specific — never cached,
                 # and neither are their tree pools.
-                self._cache.put(req.cache_key, res)
-                if want_trees and res.answer_pool is not None:
-                    self._tree_cache.put(
-                        (req.cache_key, "trees"),
-                        (res.answer_pool, res.pool_exhausted))
+                with (req.trace.span("cache_store") if req.trace is not None
+                      else _NULL_SPAN):
+                    self._cache.put(req.cache_key, res)
+                    if want_trees and res.answer_pool is not None:
+                        self._tree_cache.put(
+                            (req.cache_key, "trees"),
+                            (res.answer_pool, res.pool_exhausted))
             trees = None
             if req.return_trees:
                 self._stats.record_tree_request(cache_hit=False)
                 # For interrupted lanes these are the BEST-SO-FAR trees,
                 # served alongside their lower bound — the paper's
                 # early-termination answer, now with explanations.
-                trees = self._render_page(
-                    (res.answer_pool or [], res.pool_exhausted), engine,
-                    ranking=req.tree_ranking, cursor=req.tree_cursor,
-                    page_size=req.tree_page_size)
+                with (req.trace.span("render", ranking=req.tree_ranking,
+                                     cursor=req.tree_cursor)
+                      if req.trace is not None else _NULL_SPAN):
+                    trees = self._render_page(
+                        (res.answer_pool or [], res.pool_exhausted), engine,
+                        ranking=req.tree_ranking, cursor=req.tree_cursor,
+                        page_size=req.tree_page_size)
+            queue_ms = (t_dispatch - req.t_submit) * 1e3
             self._stats.record_request(req.t_submit, t_done,
-                                       approximate=approximate)
+                                       approximate=approximate,
+                                       queue_wait_ms=queue_ms,
+                                       device_ms=device_ms)
+            self._h_latency.observe((t_done - req.t_submit) * 1e3)
+            self._h_queue.observe(queue_ms)
+            self._h_device.observe(device_ms)
+            trace_id = None
+            if req.trace is not None:
+                trace_id = req.trace.trace_id
+                req.trace.set(outcome="served", approximate=approximate,
+                              compiled=compiled)
+                req.trace.finish()
             req.future.set_result(ServedResult(
                 result=res, cache_hit=False, approximate=approximate,
                 batch_size=n_real,
                 latency_ms=(t_done - req.t_submit) * 1e3,
                 opt_lower_bound=info["opt_lower_bound"],
                 sound_opt_lower_bound=info["sound_opt_lower_bound"],
-                trees=trees))
+                trees=trees, trace_id=trace_id,
+                queue_wait_ms=queue_ms, device_ms=device_ms))

@@ -5,6 +5,15 @@ latency, throughput, batch-fill, cache-hit rate).
 Latencies are end-to-end client latencies — submit to resolved future —
 so they include queue wait and the micro-batching admission window, not
 just device time.  That is the number a latency budget is written against.
+The queue-wait and device-time splits (fed from the request traces, see
+:mod:`repro.obs`) break that end-to-end number down: a p95 blowup with a
+flat device split is an admission/queueing problem, not a kernel one.
+
+Every ``ServeStats`` field carries its unit in the name or docstring:
+``*_ms`` are milliseconds, ``window_s`` seconds, ``throughput_rps``
+requests/second; everything else is a dimensionless count or ratio.
+All fields are finite for any history, including the empty startup
+window (no NaN percentiles before the first request resolves).
 """
 
 from __future__ import annotations
@@ -21,29 +30,39 @@ import numpy as np
 LATENCY_WINDOW = 16384
 
 
+def _pct(values, q: float) -> float:
+    """Percentile that is 0.0 (not NaN) on an empty window."""
+    arr = np.asarray(values, np.float64)
+    return float(np.percentile(arr, q)) if arr.size else 0.0
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeStats:
     """Aggregate serving report (one snapshot of ``DKSService.stats()``).
 
-    Attributes:
-      requests:        requests served so far (cache hits included;
-                       admission-rejected submits are not counted and do
-                       not skew the window).
-      failures:        dispatched requests whose execution raised (their
-                       futures carry the exception).
-      batch_dispatches: device dispatches made by the micro-batcher.
-      deadline_dispatches: lane-driver dispatches for deadline-bounded
-                       requests (same-shape same-budget requests coalesce
-                       onto one stepwise driver and share supersteps).
-      batched_requests: requests served through batch dispatches.
-      mean_batch_fill: batched_requests / batch_dispatches — how many
-                       client requests each lane-driver program served
-                       (padding lanes are not counted; > 1 means the
-                       batcher is amortizing dispatch across clients).
+    Attributes (units: ``*_ms`` milliseconds, ``window_s`` seconds,
+    ``throughput_rps`` requests/second; all others counts or ratios):
+
+      requests:        count of requests served so far (cache hits
+                       included; admission-rejected submits are not
+                       counted and do not skew the window).
+      failures:        count of dispatched requests whose execution
+                       raised (their futures carry the exception).
+      batch_dispatches: count of device dispatches made by the
+                       micro-batcher.
+      deadline_dispatches: count of lane-driver dispatches for
+                       deadline-bounded requests (same-shape same-budget
+                       requests coalesce onto one stepwise driver and
+                       share supersteps).
+      batched_requests: count of requests served through batch dispatches.
+      mean_batch_fill: ratio batched_requests / batch_dispatches — how
+                       many client requests each lane-driver program
+                       served (padding lanes are not counted; > 1 means
+                       the batcher is amortizing dispatch across clients).
       deadline_batched_requests / mean_deadline_fill: the same pair for
                        deadline dispatches (> 1 mean fill means at least
                        one multi-lane deadline bucket rode one driver).
-      deadline_driver_supersteps: total supersteps the shared deadline
+      deadline_driver_supersteps: count of supersteps the shared deadline
                        drivers actually stepped.
       deadline_lane_supersteps: sum of the per-lane superstep counts those
                        drivers served (what solo serving would pay at
@@ -51,21 +70,32 @@ class ServeStats:
                        a bucket costs ~max(lane steps), not the sum.
       cache_hits / cache_misses / cache_evictions / cache_hit_rate:
                        result-cache counters (hit rate over hits+misses).
-      single_flight_hits: requests that attached to an identical request
-                       already in flight (cross-request single-flight) —
-                       served from the leader's result, no device work,
-                       not counted in the cache counters.
-      approximate:     requests answered best-so-far under a deadline.
-      tree_requests:   requests that asked for answer trees
+      single_flight_hits: count of requests that attached to an identical
+                       request already in flight (cross-request
+                       single-flight) — served from the leader's result,
+                       no device work, not counted in the cache counters.
+      approximate:     count of requests answered best-so-far under a
+                       deadline.
+      tree_requests:   count of requests that asked for answer trees
                        (``return_trees=True``).
       tree_cache_hits: tree requests served whole from the result cache
                        plus the tree-pool LRU — no device work, no
                        re-extraction (re-ranking/pagination only).
-      p50_ms / p95_ms / mean_ms / max_ms: end-to-end latency percentiles
-                       over the last ``LATENCY_WINDOW`` requests (exact
-                       until the window fills).
-      window_s:        first submit -> last resolve.
-      throughput_rps:  requests / window_s.
+      p50_ms / p95_ms / mean_ms / max_ms: end-to-end latency (submit ->
+                       resolved future, milliseconds) over the last
+                       ``LATENCY_WINDOW`` requests (exact until the
+                       window fills); 0.0 before the first request.
+      queue_p50_ms / queue_p95_ms / queue_mean_ms: queue-wait split
+                       (milliseconds): submit -> the dispatcher picking
+                       the request up, fed from the ``queue_wait`` trace
+                       span.  Cache hits and single-flight followers
+                       never enter the queue and are not in this window.
+      device_p50_ms / device_p95_ms / device_mean_ms: device-time split
+                       (milliseconds): the compiled superstep program's
+                       wall time attributed to each dispatched request
+                       (one bucket's device time counted once per rider).
+      window_s:        first submit -> last resolve, seconds.
+      throughput_rps:  requests / window_s, requests per second.
     """
 
     requests: int
@@ -92,6 +122,12 @@ class ServeStats:
     max_ms: float
     window_s: float
     throughput_rps: float
+    queue_p50_ms: float = 0.0
+    queue_p95_ms: float = 0.0
+    queue_mean_ms: float = 0.0
+    device_p50_ms: float = 0.0
+    device_p95_ms: float = 0.0
+    device_mean_ms: float = 0.0
 
     def summary(self) -> str:
         """Human-readable multi-line report (the CLI prints this)."""
@@ -103,6 +139,10 @@ class ServeStats:
             f" over {self.window_s:.2f}s\n"
             f"latency ms    p50={self.p50_ms:.1f} p95={self.p95_ms:.1f}"
             f" mean={self.mean_ms:.1f} max={self.max_ms:.1f}\n"
+            f"  queue ms    p50={self.queue_p50_ms:.1f}"
+            f" p95={self.queue_p95_ms:.1f} mean={self.queue_mean_ms:.1f}\n"
+            f"  device ms   p50={self.device_p50_ms:.1f}"
+            f" p95={self.device_p95_ms:.1f} mean={self.device_mean_ms:.1f}\n"
             f"batch-fill    {self.mean_batch_fill:.2f} mean over"
             f" {self.batch_dispatches} batch dispatches\n"
             f"deadline      {self.deadline_batched_requests} requests over"
@@ -131,6 +171,8 @@ class StatsCollector:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._lat_ms: deque[float] = deque(maxlen=LATENCY_WINDOW)
+        self._queue_ms: deque[float] = deque(maxlen=LATENCY_WINDOW)
+        self._device_ms: deque[float] = deque(maxlen=LATENCY_WINDOW)
         self._n_requests = 0
         self._t_first: float | None = None
         self._t_last: float | None = None
@@ -147,12 +189,21 @@ class StatsCollector:
         self._tree_cache_hits = 0
 
     def record_request(self, t_submit: float, t_done: float,
-                       approximate: bool = False) -> None:
+                       approximate: bool = False,
+                       queue_wait_ms: float | None = None,
+                       device_ms: float | None = None) -> None:
         """One served request.  The stats window (t_first..t_last) is
         derived here, from served requests only — so a rejected submit
-        never skews it and every snapshot is internally consistent."""
+        never skews it and every snapshot is internally consistent.
+        ``queue_wait_ms`` / ``device_ms`` feed the latency split windows
+        (None for resolve paths where the phase does not exist — cache
+        hits never queue, single-flight followers never dispatch)."""
         with self._lock:
             self._lat_ms.append((t_done - t_submit) * 1e3)
+            if queue_wait_ms is not None:
+                self._queue_ms.append(float(queue_wait_ms))
+            if device_ms is not None:
+                self._device_ms.append(float(device_ms))
             self._n_requests += 1
             if self._t_first is None or t_submit < self._t_first:
                 self._t_first = t_submit
@@ -198,6 +249,8 @@ class StatsCollector:
     def report(self, cache_stats: dict[str, int]) -> ServeStats:
         with self._lock:
             lat = np.asarray(self._lat_ms, np.float64)
+            queue = np.asarray(self._queue_ms, np.float64)
+            device = np.asarray(self._device_ms, np.float64)
             n = self._n_requests
             window = ((self._t_last - self._t_first)
                       if n and self._t_first is not None else 0.0)
@@ -227,10 +280,16 @@ class StatsCollector:
                 approximate=self._approximate,
                 tree_requests=self._tree_requests,
                 tree_cache_hits=self._tree_cache_hits,
-                p50_ms=float(np.percentile(lat, 50)) if n else 0.0,
-                p95_ms=float(np.percentile(lat, 95)) if n else 0.0,
-                mean_ms=float(lat.mean()) if n else 0.0,
-                max_ms=float(lat.max()) if n else 0.0,
+                p50_ms=_pct(lat, 50),
+                p95_ms=_pct(lat, 95),
+                mean_ms=float(lat.mean()) if lat.size else 0.0,
+                max_ms=float(lat.max()) if lat.size else 0.0,
                 window_s=window,
                 throughput_rps=n / window if window > 0 else 0.0,
+                queue_p50_ms=_pct(queue, 50),
+                queue_p95_ms=_pct(queue, 95),
+                queue_mean_ms=float(queue.mean()) if queue.size else 0.0,
+                device_p50_ms=_pct(device, 50),
+                device_p95_ms=_pct(device, 95),
+                device_mean_ms=float(device.mean()) if device.size else 0.0,
             )
