@@ -1,4 +1,5 @@
-"""Graph-store benchmarks: ingestion throughput and artifact open time.
+"""Graph-store benchmarks: ingestion throughput, artifact open time, and
+the live-graph delta path.
 
   fig_ingest — the store subsystem's reason to exist, measured:
   (a) ingest throughput (edges/s) for the synthetic from_graph path and
@@ -12,7 +13,18 @@
       manifest parsing, not a re-ingest) — and one query is checked
       bit-identical across the two engines while we're there.
 
-``python -m benchmarks.run`` writes the row to
+  fig_delta — the live-graph subsystem's reason to exist, measured:
+  appending the last ~10% of a dump as a delta artifact and opening the
+  merged chain versus re-ingesting the whole union from text.  The delta
+  path must win — that is the asserted acceptance criterion (a graph
+  update should cost time proportional to the *fragment*, not the
+  graph) — and the chain's merged weights are checked bit-identical to
+  the union re-ingest while we're there.  Chain-open vs base-open time
+  is recorded separately: the chain pays one merge (build_graph over the
+  union edges) per open, which is the number compaction exists to
+  reclaim.
+
+``python -m benchmarks.run`` writes the rows to
 ``experiments/BENCH_ingest.json`` (perf-trajectory file — compare across
 commits like BENCH_dks.json / BENCH_serve.json).
 """
@@ -102,4 +114,71 @@ def fig_ingest(dataset: str = "sec-rdfabout-cpu") -> dict:
             "engine_ready_open_s": round(t_open, 3),
             "engine_ready_rebuild_s": round(t_rebuild, 3),
             "open_speedup": round(t_rebuild / t_open, 2),
+        }
+
+
+def fig_delta(dataset: str = "sec-rdfabout-cpu",
+              delta_frac: float = 0.1) -> dict:
+    from repro.store import DeltaBuilder, open_chain
+
+    ds = DKS_CONFIGS[dataset]
+    g, _tokens = lod_like_graph(ds.n_nodes, ds.n_edges, seed=ds.seed,
+                                vocab=ds.vocab, tau=ds.tau)
+
+    with tempfile.TemporaryDirectory(prefix="repro-bench-delta-") as td:
+        td = Path(td)
+        n_base = int(round(g.n_edges_directed * (1.0 - delta_frac)))
+        write_tsv(td / "union.tsv", g.src, g.dst)
+        write_tsv(td / "base.tsv", g.src[:n_base], g.dst[:n_base])
+        write_tsv(td / "frag.tsv", g.src[n_base:], g.dst[n_base:])
+
+        base_result = ingest_tsv(td / "base.tsv", tau=ds.tau)
+        base = write_artifact(td / "base", base_result.graph,
+                              base_result.index, tau=ds.tau,
+                              stats=base_result.stats.as_dict(),
+                              names=base_result.names)
+
+        # -- full re-ingest: the whole union back through the reader ----
+        t0 = time.perf_counter()
+        union = ingest_tsv(td / "union.tsv", tau=ds.tau)
+        t_full = time.perf_counter() - t0
+
+        # -- delta path: fragment -> delta artifact -> merged chain -----
+        t0 = time.perf_counter()
+        builder = DeltaBuilder(base)
+        builder.add_file(td / "frag.tsv")
+        delta = builder.write(td / "delta")
+        t_build = time.perf_counter() - t0
+        chain = open_chain(base, delta)
+        chain_graph = chain.graph()
+        t_delta = time.perf_counter() - t0
+
+        np.testing.assert_array_equal(
+            chain_graph.w, union.graph.w,
+            err_msg="chain weights diverged from the union re-ingest")
+
+        assert t_delta < t_full, (
+            f"delta apply ({t_delta:.2f}s) not faster than full "
+            f"re-ingest ({t_full:.2f}s) — the live path lost its reason "
+            "to exist")
+
+        # -- open costs: merged chain vs plain base ----------------------
+        t0 = time.perf_counter()
+        open_chain(td / "base", td / "delta").graph()
+        t_chain_open = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        open_artifact(td / "base").graph()
+        t_base_open = time.perf_counter() - t0
+
+        return {
+            "dataset": ds.name,
+            "n_edges_base": n_base,
+            "n_edges_delta": int(g.n_edges_directed - n_base),
+            "new_nodes": delta.n_new_nodes,
+            "delta_build_s": round(t_build, 3),
+            "delta_apply_s": round(t_delta, 3),
+            "full_reingest_s": round(t_full, 3),
+            "delta_speedup": round(t_full / t_delta, 2),
+            "chain_open_s": round(t_chain_open, 3),
+            "base_open_s": round(t_base_open, 4),
         }

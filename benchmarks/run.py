@@ -116,6 +116,7 @@ def main() -> None:
            n_requests=12 if not args.full else 32,
            unique=4 if not args.full else 8)
     record("fig_ingest", ing.fig_ingest)
+    record("fig_delta", ing.fig_delta)
 
     print("\nname,us_per_call,derived")
     for bench_fn in (kb.bench_subset_combine, kb.bench_segment_topk,
@@ -136,7 +137,8 @@ def main() -> None:
     # writes it.  BENCH_serve holds a single figure, so it is written
     # whenever that figure ran in full.
     dks_figs = {k: v for k, v in fig_wall_s.items()
-                if k not in ("fig_serve_throughput", "fig_ingest")}
+                if k not in ("fig_serve_throughput", "fig_ingest",
+                             "fig_delta")}
     if dks_figs and args.only is None:
         bench_dks = {
             **stamp,
@@ -166,6 +168,7 @@ def main() -> None:
             "full": bool(args.full),
             "wall_s": fig_wall_s.get("fig_ingest"),
             "ingest": results["fig_ingest"],
+            "delta": results.get("fig_delta"),
         }
         (OUT / "BENCH_ingest.json").write_text(
             json.dumps(bench_ingest, indent=1))

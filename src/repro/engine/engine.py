@@ -149,12 +149,15 @@ class QueryEngine:
           matrix) or ``index`` — or neither, when ``graph.labels`` is set
           (then the index is built from the labels);
         - ``artifact=`` — a :class:`repro.store.GraphArtifact` (or a path
-          to one): graph, dst-sorted device layout, and the persisted
-          inverted index all come straight off the mmapped buffers — no
-          re-tokenizing, no edge re-sort — and the artifact's
-          ``content_hash`` becomes the engine ``version`` (so
-          ``cache_token`` keys are stable across rebuilds of the same
-          artifact and distinct for any other graph).
+          to one), or a :class:`repro.store.GraphChain` (a base plus
+          stacked delta artifacts — the live-graph path): graph, device
+          layout, and the persisted inverted index all come straight off
+          the mmapped buffers — no re-tokenizing, no edge re-sort — and
+          the artifact's ``content_hash`` (for a chain, the *chained*
+          hash) becomes the engine ``version`` (so ``cache_token`` keys
+          are stable across rebuilds of the same artifact, and distinct
+          for any other graph or chain depth — a cache can never serve a
+          stale build).
         """
         policy = policy or ExecutionPolicy()
         graph_hash = None

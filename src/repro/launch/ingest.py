@@ -9,7 +9,13 @@ mmap reopen -> verify roundtrip query parity.
     python -m repro.launch.ingest --input dump.nt.gz \
         --out artifacts/dump
 
+    # live graph: initialize once, then append fragments as deltas
+    python -m repro.launch.ingest --input dump.nt.gz --live live/
+    python -m repro.launch.ingest --live live/ --append edits-0042.nt
+    python -m repro.launch.ingest --live live/ --compact
+
     # CI smoke: tiny graph, temp dir, hard asserts on parity + checksums
+    # (includes the delta leg: base -> append -> chain parity vs union)
     python -m repro.launch.ingest --smoke
 
 The verification pass builds TWO engines — one from the reopened mmapped
@@ -38,6 +44,7 @@ from repro.store import (
     ingest_ntriples,
     ingest_tsv,
     open_artifact,
+    open_chain,
     write_artifact,
 )
 
@@ -123,7 +130,8 @@ def typed_smoke(tmp: Path, *, max_supersteps: int = 16) -> None:
     out = tmp / "typed-artifact"
     artifact = write_artifact(out, result.graph, result.index,
                               tau=result.tau,
-                              stats=result.stats.as_dict(), overwrite=True)
+                              stats=result.stats.as_dict(),
+                              names=result.names, overwrite=True)
     reopened = open_artifact(out, verify="full")
     assert reopened.format_version == 2, reopened.format_version
     assert reopened.typed
@@ -172,6 +180,93 @@ def typed_smoke(tmp: Path, *, max_supersteps: int = 16) -> None:
           f"edges ({len(res.answers)} trees checked)")
 
 
+def delta_smoke(tmp: Path, *, max_supersteps: int = 16) -> None:
+    """Smoke leg for live graphs: initialize a live dir from the typed
+    fixture, append TWO delta fragments (dictionary growth across
+    deltas: the second references entities only the first introduced),
+    and assert (a) the chain engine is bit-identical to a full union
+    re-ingest, (b) a post-delta-only keyword resolves through the lazy
+    chain index, (c) compaction reproduces the union artifact's
+    ``content_hash`` exactly, and (d) a mis-stacked delta fails loudly,
+    naming both hashes."""
+    from repro.live import LiveDir
+    from repro.store import ArtifactError, ChainIndex, LazyArtifactIndex
+
+    base_lines = _typed_fixture_lines()
+    frag1_lines = [
+        f"<http://x.example/e{i}> <http://p.example/mentions> "
+        f"<http://x.example/fresh{j}> 0.8 ."
+        for j, i in enumerate((0, 5, 11))]
+    frag2_lines = [   # fresh0 resolves to its delta-1 id; fresh3 is new
+        "<http://x.example/fresh0> <http://p.example/knows> "
+        "<http://x.example/fresh3> .",
+        "<http://x.example/fresh3> <http://p.example/cites> "
+        "<http://x.example/e2> 0.6 .",
+    ]
+    base_nt = tmp / "live-base.nt"
+    base_nt.write_text("\n".join(base_lines) + "\n", encoding="utf-8")
+    (tmp / "frag1.nt").write_text("\n".join(frag1_lines) + "\n",
+                                  encoding="utf-8")
+    (tmp / "frag2.nt").write_text("\n".join(frag2_lines) + "\n",
+                                  encoding="utf-8")
+    union_nt = tmp / "live-union.nt"
+    union_nt.write_text(
+        "\n".join(base_lines + frag1_lines + frag2_lines) + "\n",
+        encoding="utf-8")
+
+    live = LiveDir.initialize(tmp / "live-smoke", ingest_ntriples(base_nt))
+    d1 = live.append([tmp / "frag1.nt"])
+    d2 = live.append([tmp / "frag2.nt"])
+    assert d1 is not None and d2 is not None
+    assert d2.base_content_hash != d1.base_content_hash  # stacks on chain
+    chain = live.chain()
+    assert chain.depth == 2
+
+    union = ingest_ntriples(union_nt)
+    policy = ExecutionPolicy(max_supersteps=max_supersteps)
+    e_chain = QueryEngine.build(artifact=chain, policy=policy)
+    e_union = QueryEngine.build(union.graph, index=union.index,
+                                policy=policy)
+    queries = pick_queries(e_union.index) + [["fresh0", "e3"],
+                                             ["fresh3", "e10"]]
+    for q in queries:
+        r_c = e_chain.query(q, k=2, extract=False)
+        r_u = e_union.query(q, k=2, extract=False)
+        np.testing.assert_array_equal(
+            r_c.weights, r_u.weights,
+            err_msg=f"chain/union parity broke for query {q!r}")
+        assert r_c.supersteps == r_u.supersteps, q
+
+    # Post-delta-only keywords resolve through the lazy chain index.
+    assert isinstance(e_chain.index, ChainIndex)
+    assert isinstance(e_chain.index.base_index, LazyArtifactIndex)
+    assert e_chain.index.df("fresh3") == 1
+
+    # Compaction == union re-ingest, down to the content hash.
+    compacted = live.compact()
+    union_art = write_artifact(tmp / "live-union-artifact", union.graph,
+                               union.index, tau=union.tau,
+                               stats=union.stats.as_dict(),
+                               names=union.names)
+    assert compacted.content_hash == union_art.content_hash, \
+        "compacted chain is not bit-identical to the union re-ingest"
+
+    # Mis-stacked chains fail loudly, naming both hashes.
+    try:
+        open_chain(live.path / "base-000000", d2.path)
+    except ArtifactError as exc:
+        assert "mis-stacked" in str(exc), exc
+    else:
+        raise AssertionError("mis-stacked chain opened without error")
+    print(f"delta smoke invariants hold: 2 stacked deltas "
+          f"(+V={d1.n_new_nodes + d2.n_new_nodes}, "
+          f"+E={d1.n_new_edges + d2.n_new_edges}) bit-identical to the "
+          f"union re-ingest on {len(queries)} queries; post-delta "
+          f"keywords resolve lazily; compaction reproduced the union "
+          f"content hash {union_art.content_hash[:12]}…; mis-stacking "
+          f"rejected")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     src = ap.add_mutually_exclusive_group()
@@ -197,7 +292,21 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: tiny synthetic graph into a temp "
                          "dir, full-checksum reopen, hard parity asserts")
+    ap.add_argument("--live", default=None, metavar="DIR",
+                    help="live-graph directory: with --input, initialize "
+                         "it; with --append/--compact, grow/fold it")
+    ap.add_argument("--append", nargs="+", default=None, metavar="FRAG",
+                    help="fragment files to fold into ONE delta on the "
+                         "--live chain")
+    ap.add_argument("--compact", action="store_true",
+                    help="fold the --live chain into a fresh base "
+                         "artifact")
     args = ap.parse_args()
+
+    if args.append or args.compact:
+        if args.live is None:
+            ap.error("--append/--compact need --live DIR")
+        return _live_update(args)
 
     tmp_ctx = None
     if args.smoke:
@@ -243,11 +352,26 @@ def main() -> int:
         print(f"  requested {st.edges_requested:,} edges, produced "
               f"{st.edges_directed:,} (true counts)")
 
+    # ---- live-dir initialization -------------------------------------
+    if args.live is not None:
+        from repro.live import LiveDir
+        live = LiveDir.initialize(args.live, result,
+                                  overwrite=args.overwrite)
+        print(f"initialized {live}")
+        if args.verify_queries > 0:
+            n = verify_roundtrip(result, live.base(),
+                                 n_queries=args.verify_queries,
+                                 max_supersteps=args.max_supersteps)
+            print(f"verified: {n} queries bit-identical between the live "
+                  f"base artifact and the in-memory build")
+        return 0
+
     # ---- write artifact (atomic) -------------------------------------
     out = Path(args.out or (Path("experiments") / "artifacts" / name))
     t0 = time.perf_counter()
     artifact = write_artifact(out, result.graph, result.index,
                               tau=result.tau, stats=st.as_dict(),
+                              names=result.names,
                               overwrite=args.overwrite or args.smoke)
     t_write = time.perf_counter() - t0
     print(f"wrote {artifact} ({artifact.nbytes()/1e6:.1f} MB buffers, "
@@ -275,7 +399,32 @@ def main() -> int:
               "query parity, true edge counts")
         typed_smoke(Path(tmp_ctx.name),
                     max_supersteps=args.max_supersteps)
+        delta_smoke(Path(tmp_ctx.name),
+                    max_supersteps=args.max_supersteps)
         tmp_ctx.cleanup()
+    return 0
+
+
+def _live_update(args) -> int:
+    """``--live DIR --append frag…`` / ``--live DIR --compact``."""
+    from repro.live import LiveDir
+
+    live = LiveDir(args.live)
+    if args.append:
+        t0 = time.perf_counter()
+        delta = live.append(args.append)
+        dt = time.perf_counter() - t0
+        if delta is None:
+            print(f"no new statements in {len(args.append)} fragment(s) "
+                  f"— marked consumed, nothing published")
+        else:
+            print(f"published {delta} in {dt:.2f}s")
+            print(f"chain now: {live.chain()}")
+    if args.compact:
+        t0 = time.perf_counter()
+        art = live.compact()
+        dt = time.perf_counter() - t0
+        print(f"compacted chain into {art} in {dt:.2f}s")
     return 0
 
 

@@ -24,6 +24,19 @@ spans.
 recent traces as ``/traces`` JSONL for the duration of the replay;
 ``--trace-sample`` / ``--trace-log`` control span sampling and the
 structured JSONL event log.
+
+Live graphs: ``--live DIR`` serves the delta chain in a
+:class:`repro.live.LiveDir` (engine version = the chained hash);
+``--watch WATCH_DIR`` additionally tails a fragment directory for the
+duration of the replay, hot-swapping the engine on every published
+delta.  ``--smoke --swap-mid-run`` appends the swap-under-load leg:
+open-ended client load over a live ring graph, a fragment dropped
+mid-run, and hard asserts that zero requests fail, in-flight requests
+finish on their admitting build, post-swap requests see the new chained
+version (a shortcut edge collapses the probe weight, a post-delta-only
+keyword resolves), traces stay complete (begun == finished, ``dks.swap``
+carries build/warm/swap spans), and the swap counters land on
+``/metrics``.
 """
 
 from __future__ import annotations
@@ -178,6 +191,145 @@ def verify_metrics_scrape(svc, server):
     return samples
 
 
+def swap_smoke(args) -> None:
+    """The swap-under-load leg: a live ring graph served under
+    open-ended client load, one fragment dropped mid-run, one hot swap.
+
+    The ring makes the swap *observable in the answers*: the probe pair
+    sits 8 hops apart (tree weight 8.0) until the delta's shortcut edge
+    collapses it to 1.0 — so asserting every served probe weight is in
+    {8.0, 1.0} proves no request ever saw a half-swapped graph, and the
+    post-swap probes returning 1.0 prove the swap actually landed.
+    """
+    import tempfile
+    import threading
+    from pathlib import Path
+
+    from repro.engine import QueryEngine
+    from repro.live import EngineSwapper, GraphWatcher, LiveDir
+    from repro.store import ingest_tsv
+
+    def wait_for(cond, timeout, what):
+        deadline = time.monotonic() + timeout
+        while not cond():
+            assert time.monotonic() < deadline, f"timed out waiting: {what}"
+            time.sleep(0.02)
+
+    tmp = Path(tempfile.mkdtemp(prefix="repro-swap-smoke-"))
+    n, groups = 32, 4
+    lines = [f"e{i:03d} g{i % groups}\t"
+             f"e{(i + 1) % n:03d} g{(i + 1) % n % groups}\tknows\t1.0"
+             for i in range(n)]
+    base = tmp / "base.tsv"
+    base.write_text("\n".join(lines) + "\n")
+    live = LiveDir.initialize(tmp / "live", ingest_tsv(base))
+    watch_dir = tmp / "incoming"
+    watch_dir.mkdir()
+
+    policy = ExecutionPolicy(
+        backend=args.backend, partition=args.partition,
+        max_supersteps=max(args.max_supersteps, 12),
+        weights=weight_policy_from_args(args))
+    engine = QueryEngine.build(artifact=live.chain(), policy=policy)
+    old_version = engine.version
+    cfg = ServeConfig(max_batch=4, max_wait_ms=10.0, cache_size=64,
+                      trace_seed=args.seed)
+
+    probe = ["e000", "e008"]     # 8 hops apart until the shortcut lands
+    pool = [probe, ["e004", "g1"], ["e010", "g2"], ["e020", "g3"]]
+    probe_weights: list = []
+    failures: list = []
+    stop = threading.Event()
+
+    def client(i: int) -> None:
+        while not stop.is_set():
+            q = pool[i % len(pool)]
+            try:
+                srv = svc.query(list(q), k=1)
+                if q is probe:
+                    probe_weights.append(float(srv.result.weights[0]))
+            except BaseException as exc:
+                failures.append((q, exc))
+                return
+
+    with DKSService(engine, cfg) as svc:
+        swapper = EngineSwapper(svc)
+        swapper.wire_metrics()
+        watcher = GraphWatcher(live, watch_dir, poll_s=0.05,
+                               on_delta=swapper.on_delta).start()
+        threads = [threading.Thread(target=client, args=(i,), daemon=True)
+                   for i in range(4)]
+        try:
+            for t in threads:
+                t.start()
+            wait_for(lambda: svc.stats().requests >= 12, 120,
+                     "pre-swap load")
+
+            # Drop the fragment atomically; the watcher publishes the
+            # delta and the swapper rebuilds + swaps off the dispatcher.
+            frag_tmp = tmp / "frag.tsv.part"
+            frag_tmp.write_text(
+                "e000 g0\te008 g0\tshortcut\t1.0\n"
+                "zzz fresh\te000 g0\tmentions\t0.9\n")
+            import os
+            os.replace(frag_tmp, watch_dir / "frag-0001.tsv")
+            wait_for(lambda: swapper.swaps >= 1, 120, "the hot swap")
+            wait_for(lambda: len(failures) > 0 or
+                     svc.stats().requests >= 24, 120, "post-swap load")
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(30)
+            watcher.stop()
+
+        assert not failures, f"requests failed across the swap: {failures}"
+        chain = live.chain()
+        assert chain.depth == 1
+        assert svc.engine.version == f"artifact:{chain.content_hash}", \
+            "serving engine is not on the chained version"
+        assert svc.engine.version != old_version
+
+        # Post-swap answers: the shortcut collapsed the probe, and the
+        # delta-only keyword resolves.
+        post = svc.query(list(probe), k=1)
+        assert float(post.result.weights[0]) == 1.0, \
+            f"post-swap probe weight {post.result.weights[0]} != 1.0"
+        fresh = svc.query(["fresh", "g0"], k=1)
+        assert float(fresh.result.weights[0]) == 1.0, \
+            f"post-delta keyword probe weight {fresh.result.weights[0]}"
+        bad = [w for w in probe_weights if w not in (8.0, 1.0)]
+        assert not bad, (
+            f"probe weights outside {{8.0, 1.0}}: {sorted(set(bad))} — "
+            "a request saw a half-swapped graph")
+
+        stats = svc.stats()
+        assert stats.engine_swaps >= 1, stats.engine_swaps
+        samples = parse_prometheus(svc.registry.render())
+        assert samples["dks_engine_swaps_total"] == stats.engine_swaps
+        assert samples["dks_delta_applied_total"] >= 1
+        assert "dks_graph_staleness_seconds" in samples
+        assert samples["dks_graph_staleness_seconds"] == 0.0, \
+            "staleness gauge nonzero after the swap landed"
+
+        ts = svc.tracer.stats()
+        assert ts["begun"] == ts["finished"], (
+            f"trace completeness broke across the swap: {ts}")
+        swaps = [t for t in svc.recent_traces() if t.name == "dks.swap"]
+        assert swaps, "no dks.swap trace recorded"
+        span_names = [sp.name for sp in swaps[-1].spans]
+        for want in ("build", "warm", "swap"):
+            assert want in span_names, (
+                f"span {want!r} missing from dks.swap: {span_names}")
+        n_probe = len(probe_weights)
+    print(f"swap smoke invariants hold: {stats.requests} requests, 0 "
+          f"failures across {stats.engine_swaps} hot swap(s); probe "
+          f"weight 8.0 -> 1.0 ({n_probe} probes, no mixed-build "
+          f"answers); version {old_version[:21]}… -> "
+          f"{svc.engine.version[:21]}…; traces complete "
+          f"({ts['begun']} begun == finished), dks.swap spans "
+          f"{span_names}; warmed {len(swapper.last_warmed)} hot shapes")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="sec-rdfabout-cpu")
@@ -185,6 +337,17 @@ def main() -> int:
                     help="serve from a repro.store artifact (mmap-load; "
                          "the artifact content hash keys the result "
                          "cache, so answers can never cross graph builds)")
+    ap.add_argument("--live", default=None, metavar="DIR",
+                    help="serve a repro.live.LiveDir's delta chain "
+                         "(engine version = the chained hash)")
+    ap.add_argument("--watch", default=None, metavar="WATCH_DIR",
+                    help="with --live: tail this fragment directory "
+                         "during the replay, hot-swapping the engine on "
+                         "every published delta")
+    ap.add_argument("--swap-mid-run", action="store_true",
+                    help="append the swap-under-load smoke leg (live "
+                         "ring graph, fragment dropped mid-run, hard "
+                         "asserts on zero failures + build isolation)")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--unique", type=int, default=8,
@@ -228,14 +391,25 @@ def main() -> int:
         args.max_wait_ms = 50.0
         args.max_supersteps = min(args.max_supersteps, 12)
 
+    if args.watch is not None and args.live is None:
+        ap.error("--watch needs --live DIR")
+
     t0 = time.time()
     policy = ExecutionPolicy(
         backend=args.backend, partition=args.partition,
         max_supersteps=args.max_supersteps,
         weights=weight_policy_from_args(args))
-    ds, engine = build_engine(args.dataset, policy,
-                              artifact=args.artifact)
-    source = args.artifact if args.artifact else ds.name
+    live = None
+    if args.live is not None:
+        from repro.engine import QueryEngine
+        from repro.live import LiveDir
+        live = LiveDir(args.live)
+        engine = QueryEngine.build(artifact=live.chain(), policy=policy)
+        source = f"{live!r}"
+    else:
+        ds, engine = build_engine(args.dataset, policy,
+                                  artifact=args.artifact)
+        source = args.artifact if args.artifact else ds.name
     print(f"loaded {source}: V={engine.n_nodes:,} E_sym={engine.n_edges:,} "
           f"({time.time()-t0:.1f}s)")
     if not policy.weights.is_default:
@@ -266,6 +440,15 @@ def main() -> int:
     scraped = None
     with DKSService(engine, cfg) as svc:
         server = None
+        watcher = None
+        if args.watch is not None:
+            from repro.live import EngineSwapper, GraphWatcher
+            swapper = EngineSwapper(svc)
+            swapper.wire_metrics()
+            watcher = GraphWatcher(live, args.watch,
+                                   on_delta=swapper.on_delta).start()
+            print(f"watching {args.watch} for fragments (hot swap on "
+                  f"every delta)")
         if metrics_port is not None:
             server = MetricsServer(svc.registry, tracer=svc.tracer,
                                    port=metrics_port).start()
@@ -282,6 +465,8 @@ def main() -> int:
         finally:
             if server is not None:
                 server.stop()
+            if watcher is not None:
+                watcher.stop()
     wall = time.perf_counter() - t0
 
     print(f"\n--- ServeStats ({wall:.2f}s wall) ---")
@@ -328,6 +513,9 @@ def main() -> int:
               f"{stats.deadline_lane_supersteps} lane supersteps); "
               f"trees: {n_keys} distinct covering trees for {kw}, "
               f"{stats.tree_cache_hits}/{stats.tree_requests} warm")
+
+    if args.swap_mid_run:
+        swap_smoke(args)
     return 0
 
 

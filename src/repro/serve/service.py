@@ -335,6 +335,7 @@ class DKSService:
             "dks_queue_p95_ms": _G,
             "dks_device_p50_ms": _G,
             "dks_device_p95_ms": _G,
+            "dks_engine_swaps_total": _C,
         }
 
         def collect_serve() -> dict[str, float]:
@@ -367,6 +368,7 @@ class DKSService:
                 "dks_queue_p95_ms": s.queue_p95_ms,
                 "dks_device_p50_ms": s.device_p50_ms,
                 "dks_device_p95_ms": s.device_p95_ms,
+                "dks_engine_swaps_total": s.engine_swaps,
             }
 
         reg.register_collector(collect_serve, kinds=serve_kinds, helps={
@@ -603,7 +605,14 @@ class DKSService:
                                    outcome="attached")
                     followers.append((future, t_submit, trace))
                     return future
-                self._inflight[cache_key] = []
+                # The follower LIST OBJECT is captured by this leader's
+                # closures below: resolution paths pop the dict entry only
+                # if it is still this exact list (identity guard), so a
+                # set_engine swap can retire pre-swap entries wholesale
+                # without a stale leader later adopting (and answering
+                # with the OLD build) followers who attached post-swap.
+                entry: list = []
+                self._inflight[cache_key] = entry
                 self._inflight_traces[cache_key] = trace.trace_id
             # Leadership won — but the PREVIOUS leader may have resolved
             # between our cache check and the registration above (its
@@ -614,12 +623,13 @@ class DKSService:
             hit = self._cache.get(cache_key, count_miss=False)
             if hit is not None:
                 with self._inflight_lock:
-                    followers = self._inflight.pop(cache_key, [])
-                    self._inflight_traces.pop(cache_key, None)
+                    if self._inflight.get(cache_key) is entry:
+                        self._inflight.pop(cache_key)
+                        self._inflight_traces.pop(cache_key, None)
                 trace.add_span("admit", t_submit, time.perf_counter(),
                                outcome="cache_hit")
                 self._resolve_cache_hit(future, hit, t_submit, trace=trace)
-                for fut, t_sub, f_trace in followers:
+                for fut, t_sub, f_trace in entry:
                     if fut.set_running_or_notify_cancel():
                         self._resolve_cache_hit(fut, hit, t_sub,
                                                 trace=f_trace)
@@ -647,7 +657,7 @@ class DKSService:
             trace.set(outcome="error", error=repr(exc))
             trace.finish()
             if single_flight:
-                self._abort_single_flight(cache_key, exc)
+                self._abort_single_flight(cache_key, entry, exc)
             raise
         if single_flight:
             # The callback runs when the dispatcher resolves the leader —
@@ -656,7 +666,8 @@ class DKSService:
             # after the pop is caught by the cache (the leadership
             # re-check above closes the remaining pre-put window).
             future.add_done_callback(
-                lambda fut: self._finish_single_flight(cache_key, fut))
+                lambda fut: self._finish_single_flight(cache_key, entry,
+                                                       fut))
         self._cache.count_miss()
         return future
 
@@ -696,12 +707,22 @@ class DKSService:
     # Single-flight bookkeeping
     # ------------------------------------------------------------------
 
-    def _finish_single_flight(self, cache_key: Hashable,
+    def _finish_single_flight(self, cache_key: Hashable, entry: list,
                               leader: "Future[ServedResult]") -> None:
-        """Leader resolved: fan its outcome out to attached followers."""
+        """Leader resolved: fan its outcome out to attached followers.
+
+        ``entry`` is the leader's own follower list (captured at
+        registration).  The dict entry is popped only if it is still that
+        exact list — after a ``set_engine`` swap retired it (or a newer
+        leader registered), the current entry belongs to someone else and
+        must not be touched.  Either way no new follower can attach to
+        ``entry`` once this runs: it is out of the dict, so the local
+        fan-out below is complete."""
         with self._inflight_lock:
-            followers = self._inflight.pop(cache_key, None)
-            self._inflight_traces.pop(cache_key, None)
+            if self._inflight.get(cache_key) is entry:
+                self._inflight.pop(cache_key)
+                self._inflight_traces.pop(cache_key, None)
+        followers = entry
         if not followers:
             return
         exc: BaseException | None
@@ -736,14 +757,16 @@ class DKSService:
                 queue_wait_ms=None, device_ms=None,
                 latency_ms=(t_done - t_sub) * 1e3))
 
-    def _abort_single_flight(self, cache_key: Hashable,
+    def _abort_single_flight(self, cache_key: Hashable, entry: list,
                              exc: BaseException) -> None:
         """Leader never reached the batcher: fail any follower that raced
-        in and free the key."""
+        in and free the key (same identity guard as
+        :meth:`_finish_single_flight`)."""
         with self._inflight_lock:
-            followers = self._inflight.pop(cache_key, None)
-            self._inflight_traces.pop(cache_key, None)
-        for fut, _t_sub, f_trace in followers or ():
+            if self._inflight.get(cache_key) is entry:
+                self._inflight.pop(cache_key)
+                self._inflight_traces.pop(cache_key, None)
+        for fut, _t_sub, f_trace in entry:
             if f_trace is not None:
                 f_trace.set(outcome="error", error=repr(exc))
                 f_trace.finish()
@@ -779,14 +802,30 @@ class DKSService:
             label_fn=engine.node_label, graph=engine.graph)
 
     def set_engine(self, engine: QueryEngine) -> None:
-        """Swap in a rebuilt engine (graph update) and invalidate the
-        cache.  In-flight requests snapshot their admitting engine, so
-        they are answered by the previous build (its version rides on the
-        batcher shape key — a dispatch never mixes builds); their results
-        are keyed under that version and can never be served to post-swap
-        clients."""
+        """Swap in a rebuilt engine (graph update) — zero-downtime.
+
+        In-flight requests snapshot their admitting engine, so they are
+        answered by the previous build (its version rides on the batcher
+        shape key — a dispatch never mixes builds).  The swap then:
+
+        - invalidates the result cache AND the tree-pool LRU (both keyed
+          under the outgoing version; version-keyed lookups would miss
+          anyway, but retiring them frees the memory immediately);
+        - retires every in-flight single-flight entry, so a pre-swap
+          leader can no longer adopt post-swap followers — post-swap
+          submits of the same query become their own leaders on the new
+          build, while retired leaders still resolve their already-
+          attached followers through the list object captured in their
+          closures (identity-guarded, see ``_finish_single_flight``);
+        - counts the swap in ``ServeStats.engine_swaps`` (exported as
+          ``dks_engine_swaps_total``).
+        """
         self.engine = engine
         self.invalidate_cache()
+        with self._inflight_lock:
+            self._inflight.clear()
+            self._inflight_traces.clear()
+        self._stats.record_engine_swap()
 
     def stats(self) -> ServeStats:
         """Aggregate :class:`ServeStats` snapshot (p50/p95 latency,
@@ -920,7 +959,8 @@ class DKSService:
                                  - extract_before["device_resolved"]),
                 host_fallbacks=(extract_after["host_fallbacks"]
                                 - extract_before["host_fallbacks"]))
-        self._stats.record_dispatch(n_real, deadline=False)
+        self._stats.record_dispatch(n_real, deadline=False,
+                                    shape=(m, k, len(queries)))
         # After a set_engine swap, results of the old build are keyed
         # under its version — unreachable to every future lookup, so
         # caching them would only evict live entries.
@@ -1014,7 +1054,8 @@ class DKSService:
                 **extraction)
         self._stats.record_dispatch(n_real, deadline=True,
                                     driver_steps=driver_steps,
-                                    lane_steps=lane_steps)
+                                    lane_steps=lane_steps,
+                                    shape=(m, k, len(queries)))
         cacheable = engine is self.engine
         for req, (res, info) in zip(group, out):
             approximate = info["interrupted"]

@@ -96,6 +96,15 @@ class ServeStats:
                        (one bucket's device time counted once per rider).
       window_s:        first submit -> last resolve, seconds.
       throughput_rps:  requests / window_s, requests per second.
+      engine_swaps:    count of hot engine swaps (``set_engine``) this
+                       service has performed — every swap invalidates the
+                       result/tree caches and retires in-flight
+                       single-flight leadership.
+      hot_shapes:      dispatch shape histogram, hottest first:
+                       ``(((m, k, lanes), count), ...)`` over every device
+                       dispatch — what an engine swap pre-compiles so the
+                       successor takes no cold-compile hit on the traffic
+                       actually being served.
     """
 
     requests: int
@@ -128,10 +137,14 @@ class ServeStats:
     device_p50_ms: float = 0.0
     device_p95_ms: float = 0.0
     device_mean_ms: float = 0.0
+    engine_swaps: int = 0
+    hot_shapes: tuple = ()
 
     def summary(self) -> str:
         """Human-readable multi-line report (the CLI prints this)."""
         failed = f", {self.failures} failed" if self.failures else ""
+        swaps = (f"\nengine swaps  {self.engine_swaps}"
+                 if self.engine_swaps else "")
         return (
             f"requests      {self.requests}"
             f"  ({self.approximate} approximate under deadline{failed})\n"
@@ -157,6 +170,7 @@ class ServeStats:
             f" single-flight={self.single_flight_hits}\n"
             f"trees         {self.tree_requests} requests,"
             f" {self.tree_cache_hits} served from the tree cache"
+            f"{swaps}"
         )
 
 
@@ -187,6 +201,8 @@ class StatsCollector:
         self._single_flight = 0
         self._tree_requests = 0
         self._tree_cache_hits = 0
+        self._engine_swaps = 0
+        self._shape_counts: dict[tuple, int] = {}
 
     def record_request(self, t_submit: float, t_done: float,
                        approximate: bool = False,
@@ -231,11 +247,14 @@ class StatsCollector:
                 self._tree_cache_hits += 1
 
     def record_dispatch(self, n_requests: int, deadline: bool,
-                        driver_steps: int = 0, lane_steps: int = 0) -> None:
+                        driver_steps: int = 0, lane_steps: int = 0,
+                        shape: tuple | None = None) -> None:
         """One device dispatch serving ``n_requests`` real lanes.  For
         deadline dispatches, ``driver_steps`` is what the shared driver
         stepped and ``lane_steps`` the sum of its lanes' own counters —
-        the coalescing win is driver << lanes."""
+        the coalescing win is driver << lanes.  ``shape`` is the
+        dispatched ``(m, k, lanes)`` bucket; the histogram is what an
+        engine swap warms on the successor."""
         with self._lock:
             if deadline:
                 self._deadline_dispatches += 1
@@ -245,6 +264,14 @@ class StatsCollector:
             else:
                 self._batch_dispatches += 1
                 self._batched_requests += n_requests
+            if shape is not None:
+                key = tuple(int(x) for x in shape)
+                self._shape_counts[key] = self._shape_counts.get(key, 0) + 1
+
+    def record_engine_swap(self) -> None:
+        """One hot engine swap performed by ``set_engine``."""
+        with self._lock:
+            self._engine_swaps += 1
 
     def report(self, cache_stats: dict[str, int]) -> ServeStats:
         with self._lock:
@@ -292,4 +319,7 @@ class StatsCollector:
                 device_p50_ms=_pct(device, 50),
                 device_p95_ms=_pct(device, 95),
                 device_mean_ms=float(device.mean()) if device.size else 0.0,
+                engine_swaps=self._engine_swaps,
+                hot_shapes=tuple(sorted(self._shape_counts.items(),
+                                        key=lambda kv: (-kv[1], kv[0]))),
             )

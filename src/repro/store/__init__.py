@@ -21,6 +21,19 @@ buffer, ``verify="full"`` re-checks), written atomically, and carry a
 ``version``/``cache_token`` — a serving result cache can never cross two
 different graph builds.
 
+Live graphs stack **delta artifacts** on a base instead of re-ingesting:
+
+    append (seconds, proportional to the fragment)
+        b = DeltaBuilder(open_artifact("artifacts/dump"))
+        b.add_file("edits-0042.nt")
+        delta = b.write("artifacts/dump-delta-0001")
+
+    open the chain (merged, engine-ready, chained-hash versioned)
+        chain = open_chain("artifacts/dump", "artifacts/dump-delta-0001")
+        engine = QueryEngine.build(artifact=chain)   # version = chained hash
+        compact_chain(chain, "artifacts/dump-v2")    # == union re-ingest,
+                                                     # bit-identical
+
 Public API:
   ingest_ntriples / ingest_tsv — streaming readers (dictionary-encoded
                   entities, chunked edge accumulation, degree weights at
@@ -28,10 +41,14 @@ Public API:
   from_graph    — the synthetic-graph path into the same envelope.
   StreamIngestor / IngestResult / IngestStats — the pieces behind them.
   write_artifact / open_artifact / GraphArtifact — the on-disk format.
+  DeltaBuilder / open_delta / DeltaArtifact — edge/node adds stacked on a
+                  base ``content_hash`` (repro.store.delta).
+  open_chain / GraphChain / compact_chain — merged live view + folding.
   ArtifactError / FormatVersionError / ChecksumError — validation errors.
 
 CLI: ``python -m repro.launch.ingest`` (generate-or-read -> ingest ->
-write -> reopen -> verify query parity; ``--smoke`` for CI).
+write -> reopen -> verify query parity; ``--smoke`` for CI;
+``--live DIR --append frag…`` for delta publication).
 """
 
 from repro.store.artifact import (  # noqa: F401
@@ -44,6 +61,17 @@ from repro.store.artifact import (  # noqa: F401
     LazyArtifactIndex,
     open_artifact,
     write_artifact,
+)
+from repro.store.delta import (  # noqa: F401
+    DELTA_FORMAT_VERSION,
+    ChainIndex,
+    DeltaArtifact,
+    DeltaBuilder,
+    GraphChain,
+    chained_hash,
+    compact_chain,
+    open_chain,
+    open_delta,
 )
 from repro.store.ingest import (  # noqa: F401
     IngestResult,

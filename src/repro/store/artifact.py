@@ -23,6 +23,9 @@ A :class:`GraphArtifact` is a directory of raw ``.npy`` buffers plus a
                                token_bytes.npy (utf-8 str tokens)
       label_offsets.npy        optional node label text (utf-8 blob +
       label_bytes.npy          int64[V+1] offsets)
+      ent_offsets.npy          optional entity-name table (same layout):
+      ent_bytes.npy            the ingest dictionary keys in id order —
+                               the substrate delta artifacts stack on
 
 Buffers are opened with ``np.load(mmap_mode="r")`` — nothing is read until
 touched, so opening a multi-GB artifact costs a manifest parse, not a
@@ -63,11 +66,18 @@ from repro.graph.index import InvertedIndex
 from repro.graph.structure import Graph
 
 MAGIC = "repro-graph-artifact"
+# Magic of a *delta* artifact (repro.store.delta) — named here so the base
+# reader can say "that's a delta, open the chain" instead of a generic
+# magic mismatch when the two get confused for each other.
+DELTA_MAGIC = "repro-graph-delta"
 # v1: untyped single-weight artifacts.  v2 adds the optional typed channel
 # (pred/conf buffers + manifest "predicates") — pure superset: a v2
 # artifact of an untyped graph differs from v1 only in the version field,
 # and this reader opens both (v1 artifacts keep serving bit-identical
-# results under the default WeightPolicy).
+# results under the default WeightPolicy).  The optional entity-name table
+# (``ent_offsets``/``ent_bytes``, the live-graph delta substrate) is a
+# further pure superset within v2: readers load only the buffers the
+# manifest lists, so artifacts without it open unchanged.
 FORMAT_VERSION = 2
 SUPPORTED_VERSIONS = (1, 2)
 _MANIFEST = "manifest.json"
@@ -202,13 +212,10 @@ class LazyArtifactIndex(InvertedIndex):
                 np.asarray(self._nodes, np.int32))
 
 
-class GraphArtifact:
-    """An opened artifact: manifest metadata + lazily mmapped buffers.
-
-    Use :func:`open_artifact` (or :func:`write_artifact`, which returns the
-    reopened artifact) rather than constructing directly.  ``graph()`` and
-    ``index()`` build the engine-facing objects on top of the mmapped
-    buffers without re-tokenizing or re-sorting anything.
+class BufferDir:
+    """Shared plumbing for a directory of manifest-described ``.npy``
+    buffers: lazy mmap access plus layered validation.  Base class of
+    :class:`GraphArtifact` and :class:`repro.store.delta.DeltaArtifact`.
     """
 
     def __init__(self, path: Path, manifest: dict[str, Any]) -> None:
@@ -220,10 +227,6 @@ class GraphArtifact:
                               sha256=spec["sha256"])
             for name, spec in manifest["buffers"].items()}
         self._arrays: dict[str, np.ndarray] = {}
-        self._graph: Graph | None = None
-        self._index: InvertedIndex | None = None
-
-    # -- manifest metadata ---------------------------------------------
 
     @property
     def format_version(self) -> int:
@@ -234,52 +237,14 @@ class GraphArtifact:
         return self.manifest["content_hash"]
 
     @property
-    def n_nodes(self) -> int:
-        return int(self.manifest["n_nodes"])
-
-    @property
-    def n_edges_directed(self) -> int:
-        return int(self.manifest["n_edges_directed"])
-
-    @property
-    def n_edges_sym(self) -> int:
-        return int(self.manifest["n_edges_sym"])
-
-    @property
-    def tau(self) -> int:
-        return int(self.manifest["tau"])
-
-    @property
-    def token_kind(self) -> str:
-        return self.manifest["token_kind"]  # "int" | "str"
-
-    @property
     def stats(self) -> dict[str, Any]:
         """Ingestion stats recorded at write time (true counts etc.)."""
         return self.manifest.get("stats", {})
-
-    @property
-    def has_labels(self) -> bool:
-        return "label_offsets" in self._buffers
-
-    @property
-    def typed(self) -> bool:
-        """True when the artifact persists the per-edge (pred, conf)
-        channel (format v2 typed graphs)."""
-        return "csr_pred" in self._buffers
-
-    @property
-    def predicates(self) -> list[str]:
-        """Predicate dictionary recorded at write time (empty when
-        untyped — v1 artifacts never have one)."""
-        return list(self.manifest.get("predicates", []))
 
     def nbytes(self) -> int:
         """Total on-disk buffer bytes (payload, excluding npy headers)."""
         return sum(int(np.prod(spec.shape)) * np.dtype(spec.dtype).itemsize
                    for spec in self._buffers.values())
-
-    # -- buffers --------------------------------------------------------
 
     def buffer(self, name: str) -> np.ndarray:
         """Memory-mapped view of one buffer (cached, read-only)."""
@@ -312,6 +277,66 @@ class GraphArtifact:
                     f"buffer {name!r} hash mismatch in {self.path}: "
                     f"{digest[:16]}… != recorded {spec.sha256[:16]}… "
                     "(artifact corrupted or truncated)")
+
+
+class GraphArtifact(BufferDir):
+    """An opened artifact: manifest metadata + lazily mmapped buffers.
+
+    Use :func:`open_artifact` (or :func:`write_artifact`, which returns the
+    reopened artifact) rather than constructing directly.  ``graph()`` and
+    ``index()`` build the engine-facing objects on top of the mmapped
+    buffers without re-tokenizing or re-sorting anything.
+    """
+
+    def __init__(self, path: Path, manifest: dict[str, Any]) -> None:
+        super().__init__(path, manifest)
+        self._graph: Graph | None = None
+        self._index: InvertedIndex | None = None
+
+    # -- manifest metadata ---------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.manifest["n_nodes"])
+
+    @property
+    def n_edges_directed(self) -> int:
+        return int(self.manifest["n_edges_directed"])
+
+    @property
+    def n_edges_sym(self) -> int:
+        return int(self.manifest["n_edges_sym"])
+
+    @property
+    def tau(self) -> int:
+        return int(self.manifest["tau"])
+
+    @property
+    def token_kind(self) -> str:
+        return self.manifest["token_kind"]  # "int" | "str"
+
+    @property
+    def has_labels(self) -> bool:
+        return "label_offsets" in self._buffers
+
+    @property
+    def has_names(self) -> bool:
+        """True when the entity-name table is persisted.  Names are the
+        ingest-time dictionary keys (e.g. full URIs), distinct from the
+        display labels — deltas need them to resolve existing entities."""
+        return "ent_offsets" in self._buffers
+
+    @property
+    def typed(self) -> bool:
+        """True when the artifact persists the per-edge (pred, conf)
+        channel (format v2 typed graphs)."""
+        return "csr_pred" in self._buffers
+
+    @property
+    def predicates(self) -> list[str]:
+        """Predicate dictionary recorded at write time (empty when
+        untyped — v1 artifacts never have one)."""
+        return list(self.manifest.get("predicates", []))
 
     # -- engine-facing objects -----------------------------------------
 
@@ -380,10 +405,42 @@ class GraphArtifact:
         return blob[int(offsets[i]):int(offsets[i + 1])].tobytes() \
             .decode("utf-8")
 
+    def entity_names(self) -> list[str]:
+        """Decode the entity-name table (ingest dictionary keys, id order).
+
+        Raises :class:`ArtifactError` when the table wasn't persisted —
+        only reader-produced artifacts written by this version carry it,
+        and without it a delta cannot resolve existing entities."""
+        if not self.has_names:
+            raise ArtifactError(
+                f"artifact has no entity-name table ({self.path}) — "
+                "re-ingest the source with this version to enable delta "
+                "stacking")
+        return _decode_strings(np.asarray(self.buffer("ent_offsets")),
+                               self.buffer("ent_bytes"))
+
+    def entity_name(self, i: int) -> str:
+        """Decode ONE entity name straight off the mmapped blob."""
+        if not self.has_names:
+            raise ArtifactError(f"artifact has no entity-name table "
+                                f"({self.path})")
+        offsets = self.buffer("ent_offsets")
+        if not 0 <= i < len(offsets) - 1:
+            raise IndexError(f"entity index {i} out of range "
+                             f"[0, {len(offsets) - 1})")
+        blob = self.buffer("ent_bytes")
+        return blob[int(offsets[i]):int(offsets[i + 1])].tobytes() \
+            .decode("utf-8")
+
     def __repr__(self) -> str:
+        chain = ""
+        st = self.manifest.get("stats") or {}
+        if "compacted_from_chain" in st:
+            chain = (f", compacted[chain={str(st['compacted_from_chain'])[:12]}…"
+                     f", depth={st.get('chain_depth')}]")
         return (f"GraphArtifact({str(self.path)!r}, V={self.n_nodes:,}, "
                 f"E_sym={self.n_edges_sym:,}, "
-                f"hash={self.content_hash[:12]}…)")
+                f"hash={self.content_hash[:12]}…{chain})")
 
 
 def _content_hash(meta: dict[str, Any],
@@ -405,6 +462,7 @@ def write_artifact(
     tau: int = 1001,
     stats: dict[str, Any] | None = None,
     labels: list[str] | None = None,
+    names: list[str] | None = None,
     overwrite: bool = False,
 ) -> GraphArtifact:
     """Write ``(graph, index)`` as a versioned artifact and reopen it.
@@ -412,9 +470,12 @@ def write_artifact(
     Atomic: buffers and manifest land in a temp sibling directory which is
     renamed onto ``path`` last — readers never observe a partial write.
     ``stats`` (e.g. ``IngestStats.as_dict()``) is recorded verbatim in the
-    manifest.  ``labels`` defaults to ``graph.labels``.  Returns the
-    artifact *reopened from disk*, so the caller's engine build exercises
-    the same mmap path a later process will.
+    manifest.  ``labels`` defaults to ``graph.labels``.  ``names`` is the
+    optional entity-name table (ingest dictionary keys in id order, e.g.
+    full URIs) — persisting it makes the artifact a valid base for delta
+    stacking (:mod:`repro.store.delta`).  Returns the artifact *reopened
+    from disk*, so the caller's engine build exercises the same mmap path
+    a later process will.
     """
     path = Path(path)
     if path.exists() and not overwrite:
@@ -426,7 +487,7 @@ def write_artifact(
     tmp.mkdir(parents=True)
     try:
         _write_buffers(tmp, graph, index, tau=tau, stats=stats,
-                       labels=labels)
+                       labels=labels, names=names)
     except BaseException:
         # Never leave half-written debris behind: only the atomic rename
         # below publishes state.
@@ -447,6 +508,7 @@ def _write_buffers(
     tau: int,
     stats: dict[str, Any] | None,
     labels: list[str] | None,
+    names: list[str] | None = None,
 ) -> None:
     labels = graph.labels if labels is None else labels
     tokens, post_offsets, post_nodes = index.to_postings()
@@ -484,9 +546,13 @@ def _write_buffers(
         arrays["token_offsets"] = tok_off
         arrays["token_bytes"] = tok_blob
     if labels is not None:
-        lab_off, lab_blob = _encode_strings(labels)
+        lab_off, lab_blob = _encode_strings(list(labels))
         arrays["label_offsets"] = lab_off
         arrays["label_bytes"] = lab_blob
+    if names is not None:
+        ent_off, ent_blob = _encode_strings(list(names))
+        arrays["ent_offsets"] = ent_off
+        arrays["ent_bytes"] = ent_blob
 
     buffers: dict[str, dict[str, Any]] = {}
     for name, arr in arrays.items():
@@ -545,6 +611,12 @@ def open_artifact(path: str | Path,
     except json.JSONDecodeError as exc:
         raise ArtifactError(f"unreadable manifest in {path}: {exc}") from exc
     if manifest.get("magic") != MAGIC:
+        if manifest.get("magic") == DELTA_MAGIC:
+            raise FormatVersionError(
+                f"{path} is a delta artifact stacking on base "
+                f"{str(manifest.get('base_content_hash'))[:12]}… at depth "
+                f"{manifest.get('base_depth', 0) + 1} — open it with "
+                "repro.store.open_chain(base, …), not open_artifact()")
         raise FormatVersionError(
             f"{path} is not a {MAGIC} (magic={manifest.get('magic')!r})")
     version = manifest.get("format_version")

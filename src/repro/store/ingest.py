@@ -84,12 +84,18 @@ class IngestStats:
 
 @dataclasses.dataclass
 class IngestResult:
-    """What an ingestion run hands to :func:`repro.store.write_artifact`."""
+    """What an ingestion run hands to :func:`repro.store.write_artifact`.
+
+    ``names`` is the entity dictionary in id order (full URIs / raw TSV
+    endpoint strings) — present for reader-based ingests, ``None`` for
+    synthetic ``from_graph`` sources.  Persisting it (``write_artifact``'s
+    ``names=``) is what makes the artifact a valid delta base."""
 
     graph: Graph
     index: InvertedIndex
     stats: IngestStats
     tau: int
+    names: list[str] | None = None
 
 
 class StreamIngestor:
@@ -162,6 +168,16 @@ class StreamIngestor:
     def pred_names(self) -> list[str]:
         return list(self._pred_ids)
 
+    @property
+    def entity_names(self) -> list[str]:
+        """The entity dictionary keys in id order (materializes O(V))."""
+        return list(self._ids)
+
+    @property
+    def node_labels(self) -> list[str]:
+        """Display/keyword text per node, id order (materializes O(V))."""
+        return list(self._labels)
+
     # -- accumulation --------------------------------------------------
 
     def add_edge(self, src: str, dst: str,
@@ -230,6 +246,12 @@ class StreamIngestor:
         assert pos == self._n_edges
         return src, dst, pred, conf_bits.view(np.float32)
 
+    def edges(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Materialize the accumulated directed edges as
+        ``(src, dst, pred, conf)`` without finalizing — the delta writer's
+        access path (O(E); predicate ids stay raw: -1 = untyped)."""
+        return self._edges()
+
     # -- finalization --------------------------------------------------
 
     def finalize(self, stats: IngestStats, *, tau: int = 1001,
@@ -280,7 +302,8 @@ class StreamIngestor:
         stats.chunks = len(self._chunks)
         stats.spilled_chunks = self._n_spilled
         stats.ingest_s += time.perf_counter() - t0
-        return IngestResult(graph=graph, index=index, stats=stats, tau=tau)
+        return IngestResult(graph=graph, index=index, stats=stats, tau=tau,
+                            names=self.entity_names if self._ids else None)
 
 
 # ----------------------------------------------------------------------
@@ -384,6 +407,44 @@ def _term_confidence(term: str) -> float | None:
     return c if c > 0 else None
 
 
+def feed_nt_line(ing: StreamIngestor, line: str) -> bool:
+    """Parse + accumulate one stripped N-Triples statement line.
+
+    Returns False for a malformed line (nothing accumulated).  This is
+    the ONE statement→edge mapping shared by the bulk reader and the
+    delta builder, so a fragment appended as a delta and the same lines
+    in a full re-ingest produce identical dictionary growth, labels, and
+    edge rows."""
+    terms = _nt_terms(line)
+    if terms is None:
+        return False
+    s, p, o = terms[:3]
+    conf = _term_confidence(terms[3]) if len(terms) == 4 else None
+    ing.add_edge(s, o, display_text(s), display_text(o),
+                 pred=display_text(p),
+                 conf=1.0 if conf is None else conf)
+    return True
+
+
+def feed_tsv_line(ing: StreamIngestor, line: str) -> bool:
+    """Parse + accumulate one stripped TSV edge row (see
+    :func:`ingest_tsv` for the column convention).  Returns False for a
+    malformed line.  Shared by the bulk reader and the delta builder."""
+    cols = line.split("\t") if "\t" in line else line.split()
+    if len(cols) < 2 or not cols[0] or not cols[1]:
+        return False
+    pred, conf = None, None
+    if len(cols) >= 3 and cols[2].strip():
+        conf = _term_confidence(cols[2].strip())
+        if conf is None:
+            pred = cols[2].strip()
+            if len(cols) >= 4 and cols[3].strip():
+                conf = _term_confidence(cols[3].strip())
+    ing.add_edge(cols[0].strip(), cols[1].strip(),
+                 pred=pred, conf=1.0 if conf is None else conf)
+    return True
+
+
 def ingest_ntriples(
     path: str | Path,
     *,
@@ -414,20 +475,14 @@ def ingest_ntriples(
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
-            terms = _nt_terms(line)
-            if terms is None:
+            if not feed_nt_line(ing, line):
                 if on_error == "raise":
                     raise ValueError(
                         f"malformed N-Triples line {stats.lines_read} "
                         f"in {path}: {line[:120]!r}")
                 stats.malformed_lines += 1
                 continue
-            s, p, o = terms[:3]
-            conf = _term_confidence(terms[3]) if len(terms) == 4 else None
             stats.statements += 1
-            ing.add_edge(s, o, display_text(s), display_text(o),
-                         pred=display_text(p),
-                         conf=1.0 if conf is None else conf)
     stats.n_predicates = ing.n_predicates
     stats.ingest_s = time.perf_counter() - t0
     return ing.finalize(stats, tau=tau)
@@ -458,24 +513,14 @@ def ingest_tsv(
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
-            cols = line.split("\t") if "\t" in line else line.split()
-            if len(cols) < 2 or not cols[0] or not cols[1]:
+            if not feed_tsv_line(ing, line):
                 if on_error == "raise":
                     raise ValueError(
                         f"malformed TSV line {stats.lines_read} in {path}: "
                         f"{line[:120]!r}")
                 stats.malformed_lines += 1
                 continue
-            pred, conf = None, None
-            if len(cols) >= 3 and cols[2].strip():
-                conf = _term_confidence(cols[2].strip())
-                if conf is None:
-                    pred = cols[2].strip()
-                    if len(cols) >= 4 and cols[3].strip():
-                        conf = _term_confidence(cols[3].strip())
             stats.statements += 1
-            ing.add_edge(cols[0].strip(), cols[1].strip(),
-                         pred=pred, conf=1.0 if conf is None else conf)
     stats.n_predicates = ing.n_predicates
     stats.ingest_s = time.perf_counter() - t0
     return ing.finalize(stats, tau=tau)

@@ -1,0 +1,342 @@
+"""Live graphs: delta artifacts bit-identical to union re-ingest (dense
+and 1-shard sharded, including answer-tree keys), compaction hash
+identity, dictionary growth across stacked deltas through the lazy chain
+index, mis-stack/open-guard error surfaces, the fragment watcher, and
+zero-downtime engine swaps into DKSService (hardened set_engine, hot
+shapes, swap-under-inflight-load completeness)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.engine import ExecutionPolicy, QueryEngine
+from repro.live import EngineSwapper, GraphWatcher, LiveDir
+from repro.obs import parse_prometheus
+from repro.serve import DKSService, ServeConfig
+from repro.store import (
+    ArtifactError,
+    ChainIndex,
+    DeltaBuilder,
+    FormatVersionError,
+    LazyArtifactIndex,
+    chained_hash,
+    compact_chain,
+    from_graph,
+    ingest_ntriples,
+    ingest_tsv,
+    open_artifact,
+    open_chain,
+    open_delta,
+    write_artifact,
+)
+
+BASE_LINES = []
+for i in range(23):
+    conf = " 0.9" if i % 2 else ""
+    BASE_LINES.append(f"<http://x.example/e{i}> <http://p.example/knows> "
+                      f"<http://x.example/e{i + 1}>{conf} .")
+for i in range(0, 18, 3):
+    BASE_LINES.append(f"<http://x.example/e{i}> <http://p.example/cites> "
+                      f"<http://x.example/e{i + 6}> 0.5 .")
+FRAG1_LINES = [
+    f"<http://x.example/e{i}> <http://p.example/mentions> "
+    f"<http://x.example/fresh{j}> 0.8 ."
+    for j, i in enumerate((0, 5, 11))]
+FRAG2_LINES = [   # fresh0 resolves to its delta-1 id; fresh3 is new
+    "<http://x.example/fresh0> <http://p.example/knows> "
+    "<http://x.example/fresh3> .",
+    "<http://x.example/fresh3> <http://p.example/cites> "
+    "<http://x.example/e2> 0.6 .",
+]
+
+
+@pytest.fixture(scope="module")
+def setup(tmp_path_factory):
+    """A LiveDir with two stacked deltas, plus the union re-ingest."""
+    tmp = tmp_path_factory.mktemp("live")
+    for name, lines in [("base.nt", BASE_LINES), ("frag1.nt", FRAG1_LINES),
+                        ("frag2.nt", FRAG2_LINES),
+                        ("union.nt", BASE_LINES + FRAG1_LINES
+                         + FRAG2_LINES)]:
+        (tmp / name).write_text("\n".join(lines) + "\n", encoding="utf-8")
+    live = LiveDir.initialize(tmp / "live", ingest_ntriples(tmp / "base.nt"))
+    d1 = live.append([tmp / "frag1.nt"])
+    d2 = live.append([tmp / "frag2.nt"])
+    union = ingest_ntriples(tmp / "union.nt")
+    return tmp, live, (d1, d2), union
+
+
+def _policy(partition="single", max_supersteps=24):
+    return ExecutionPolicy(
+        max_supersteps=max_supersteps, partition=partition,
+        n_shards=1 if partition == "sharded" else None,
+        frontier_frac=1.0 if partition == "sharded" else 0.25)
+
+
+QUERIES = [["e3", "e7"], ["fresh0", "e3"], ["fresh3", "e10"],
+           ["e1", "e5", "fresh1"]]
+
+
+@pytest.mark.parametrize("partition", ["single", "sharded"])
+def test_chain_parity_with_union_reingest(setup, partition):
+    tmp, live, _deltas, union = setup
+    policy = _policy(partition)
+    e_chain = QueryEngine.build(artifact=live.chain(), policy=policy)
+    e_union = QueryEngine.build(union.graph, index=union.index,
+                                policy=policy)
+    for q in QUERIES:
+        r_c = e_chain.query(q, k=2)
+        r_u = e_union.query(q, k=2)
+        np.testing.assert_array_equal(r_c.weights, r_u.weights,
+                                      err_msg=f"weights diverged for {q}")
+        np.testing.assert_array_equal(r_c.roots, r_u.roots)
+        assert r_c.supersteps == r_u.supersteps
+        # Answer-tree identity, not just scores.
+        assert [(a.root, a.weight, tuple(sorted(a.edges)))
+                for a in r_c.answers] == \
+               [(a.root, a.weight, tuple(sorted(a.edges)))
+                for a in r_u.answers], q
+
+
+def test_chain_version_is_chained_hash(setup):
+    tmp, live, (d1, d2), _union = setup
+    base = live.base()
+    chain = live.chain()
+    expect = chained_hash(chained_hash(base.content_hash, d1.content_hash),
+                          d2.content_hash)
+    assert chain.content_hash == expect
+    assert chain.depth == 2
+    # Delta 2 stacks on the chain *above* delta 1, not on the raw base.
+    assert d2.base_content_hash == chained_hash(base.content_hash,
+                                                d1.content_hash)
+    engine = QueryEngine.build(artifact=chain)
+    assert engine.version == f"artifact:{expect}"
+    # No deltas: the chain degrades to the base version (shared caches).
+    assert open_chain(base).content_hash == base.content_hash
+
+
+def test_compaction_bit_identical_to_union(setup, tmp_path):
+    tmp, live, _deltas, union = setup
+    compacted = compact_chain(live.chain(), tmp_path / "compacted")
+    union_art = write_artifact(tmp_path / "union-art", union.graph,
+                               union.index, tau=union.tau,
+                               stats=union.stats.as_dict(),
+                               names=union.names)
+    assert compacted.content_hash == union_art.content_hash
+    assert "compacted[chain=" in repr(compacted)
+    assert compacted.stats["chain_depth"] == 2
+
+
+def test_live_dir_compact_resets_chain(setup, tmp_path):
+    tmp = tmp_path
+    (tmp / "b.nt").write_text("\n".join(BASE_LINES) + "\n")
+    (tmp / "f.nt").write_text("\n".join(FRAG1_LINES) + "\n")
+    live = LiveDir.initialize(tmp / "live", ingest_ntriples(tmp / "b.nt"))
+    live.append([tmp / "f.nt"])
+    before = live.chain().content_hash
+    art = live.compact()
+    assert live.depth == 0
+    assert live.chain_hash == art.content_hash
+    assert art.stats["compacted_from_chain"] == before
+    # Reattach from disk: the rewritten CHAIN.json round-trips.
+    again = LiveDir(tmp / "live")
+    assert again.chain().content_hash == art.content_hash
+
+
+def test_dictionary_growth_through_lazy_chain_index(setup):
+    tmp, live, (d1, d2), _union = setup
+    chain = live.chain()
+    engine = QueryEngine.build(artifact=chain)
+    idx = engine.index
+    assert isinstance(idx, ChainIndex)
+    assert isinstance(idx.base_index, LazyArtifactIndex)
+    # fresh3 exists only in delta 2; fresh0 was minted by delta 1 and
+    # re-referenced by delta 2 without a second id.
+    assert idx.df("fresh3") == 1
+    assert idx.df("fresh0") == 1
+    assert "fresh3" in idx.vocabulary()
+    assert engine.node_label(int(idx.lookup("fresh3")[0])) == "fresh3"
+    names = chain.entity_names()
+    assert names.count("<http://x.example/fresh0>") == 1
+    assert d2.new_names() == ["<http://x.example/fresh3>"]
+
+
+def test_mis_stacked_delta_names_both_hashes(setup):
+    tmp, live, (d1, d2), _union = setup
+    with pytest.raises(ArtifactError, match="mis-stacked"):
+        open_chain(live.base_path, d2.path)   # skips delta 1
+    try:
+        open_chain(live.base_path, d2.path)
+    except ArtifactError as exc:
+        msg = str(exc)
+        assert d2.base_content_hash[:12] in msg
+        assert live.base().content_hash[:12] in msg
+        assert "depth 1" in msg
+
+
+def test_open_guards_route_to_the_right_opener(setup):
+    tmp, live, (d1, _d2), _union = setup
+    with pytest.raises(FormatVersionError, match="open_chain"):
+        open_artifact(d1.path)
+    with pytest.raises(FormatVersionError, match="open_artifact"):
+        open_delta(live.base_path)
+    assert f"base={d1.base_content_hash[:12]}" in repr(d1)
+    assert "depth=1" in repr(d1)
+
+
+def test_tau_mismatch_and_empty_delta_refused(setup, tmp_path):
+    tmp, live, _deltas, _union = setup
+    other = ingest_ntriples(tmp / "base.nt", tau=7)
+    write_artifact(tmp_path / "tau7", other.graph, other.index,
+                   tau=other.tau, names=other.names)
+    b = DeltaBuilder(open_artifact(tmp_path / "tau7"))
+    with pytest.raises(ArtifactError, match="empty delta"):
+        b.write(tmp_path / "never")
+    b.add_statement("<http://x.example/e0>", "<http://x.example/zz>")
+    d = b.write(tmp_path / "tau7-delta")
+    with pytest.raises(ArtifactError, match="tau"):
+        open_chain(live.base_path, d.path)
+
+
+def test_initialize_requires_entity_names(tmp_path):
+    from repro.graph.generators import lod_like_graph
+    g, tokens = lod_like_graph(64, 128, seed=3, vocab=32)
+    result = from_graph(g, tokens=tokens)
+    with pytest.raises(ArtifactError, match="names"):
+        LiveDir.initialize(tmp_path / "live", result)
+
+
+def test_watcher_run_once_marks_consumed(tmp_path):
+    (tmp_path / "b.nt").write_text("\n".join(BASE_LINES) + "\n")
+    live = LiveDir.initialize(tmp_path / "live",
+                              ingest_ntriples(tmp_path / "b.nt"))
+    incoming = tmp_path / "incoming"
+    incoming.mkdir()
+    (incoming / "frag-01.nt").write_text("\n".join(FRAG1_LINES) + "\n")
+    (incoming / "notes.json").write_text("{}")   # unrecognized: ignored
+    seen = []
+    watcher = GraphWatcher(live, incoming,
+                           on_delta=lambda lv, d: seen.append(d))
+    assert [p.name for p in watcher.pending()] == ["frag-01.nt"]
+    delta = watcher.run_once()
+    assert delta is not None and seen == [delta]
+    assert watcher.published == 1
+    assert watcher.run_once() is None            # consumed; no re-publish
+    # A fresh LiveDir attached to the same directory sees the consumed
+    # set (CHAIN.json round-trip), so a restarted watcher skips it too.
+    assert "frag-01.nt" in LiveDir(tmp_path / "live").consumed
+    # A fragment with no well-formed statements is consumed, not
+    # published.
+    (incoming / "frag-02.nt").write_text("not a triple\n")
+    assert watcher.run_once() is None
+    assert "frag-02.nt" in live.consumed
+    assert live.depth == 1
+
+
+def test_watcher_thread_publishes(tmp_path):
+    (tmp_path / "b.nt").write_text("\n".join(BASE_LINES) + "\n")
+    live = LiveDir.initialize(tmp_path / "live",
+                              ingest_ntriples(tmp_path / "b.nt"))
+    incoming = tmp_path / "incoming"
+    incoming.mkdir()
+    published = threading.Event()
+    watcher = GraphWatcher(live, incoming, poll_s=0.02,
+                           on_delta=lambda lv, d: published.set()).start()
+    try:
+        (incoming / "frag-01.nt").write_text("\n".join(FRAG1_LINES) + "\n")
+        assert published.wait(60), "watcher never published the delta"
+    finally:
+        watcher.stop()
+    assert watcher.published == 1 and live.depth == 1
+
+
+def _small_engines(tmp_path):
+    """Two engines over the same live dir: chain depth 0 and depth 1."""
+    (tmp_path / "b.nt").write_text("\n".join(BASE_LINES) + "\n")
+    (tmp_path / "f.nt").write_text("\n".join(FRAG1_LINES) + "\n")
+    live = LiveDir.initialize(tmp_path / "live",
+                              ingest_ntriples(tmp_path / "b.nt"))
+    policy = _policy(max_supersteps=12)
+    e0 = QueryEngine.build(artifact=live.chain(), policy=policy)
+    return live, e0
+
+
+def test_set_engine_hardening(tmp_path):
+    live, e0 = _small_engines(tmp_path)
+    cfg = ServeConfig(max_batch=2, max_wait_ms=1.0, cache_size=16)
+    with DKSService(e0, cfg) as svc:
+        q = ["e3", "e7"]
+        svc.query(q, k=1, return_trees=True)     # seeds result+tree pools
+        assert svc.query(q, k=1, return_trees=True).cache_hit
+        live.append([tmp_path / "f.nt"])
+        e1 = QueryEngine.build(artifact=live.chain(), policy=e0.policy)
+        svc.set_engine(e1)
+        assert svc.engine is e1
+        # Both caches were evicted with the outgoing build.
+        cold = svc.query(q, k=1, return_trees=True)
+        assert not cold.cache_hit
+        stats = svc.stats()
+        assert stats.engine_swaps == 1
+        assert "engine swaps" in stats.summary()
+        samples = parse_prometheus(svc.registry.render())
+        assert samples["dks_engine_swaps_total"] == 1
+
+
+def test_hot_shapes_recorded(tmp_path):
+    _live, e0 = _small_engines(tmp_path)
+    with DKSService(e0, ServeConfig(max_batch=2, max_wait_ms=1.0,
+                                    cache_size=0)) as svc:
+        for _ in range(3):
+            svc.query(["e3", "e7"], k=1)
+        hot = svc.stats().hot_shapes
+    assert hot, "no hot shapes recorded"
+    (shape, count), = [(s, c) for s, c in hot if c == max(c for _, c in hot)]
+    m, k, lanes = shape
+    assert (m, k) == (2, 1) and lanes >= 1 and count >= 1
+
+
+def test_swap_under_inflight_load(tmp_path):
+    live, e0 = _small_engines(tmp_path)
+    incoming = tmp_path / "incoming"
+    incoming.mkdir()
+    cfg = ServeConfig(max_batch=4, max_wait_ms=20.0, cache_size=0)
+    with DKSService(e0, cfg) as svc:
+        swapper = EngineSwapper(svc)
+        swapper.wire_metrics()
+        watcher = GraphWatcher(live, incoming, on_delta=swapper.on_delta)
+        old_version = svc.engine.version
+        # Requests in flight while the swap happens on this thread.
+        futures = [svc.submit(q, k=1)
+                   for q in (["e3", "e7"], ["e2", "e10"], ["e1", "e5"])]
+        (incoming / "frag-01.nt").write_text("\n".join(FRAG1_LINES) + "\n")
+        assert watcher.run_once() is not None    # publish + swap, inline
+        served = [f.result(timeout=300) for f in futures]
+        assert all(s.result.weights[0] > 0 for s in served)
+        assert swapper.swaps == 1 and swapper.deltas_applied == 1
+        assert svc.engine.version == \
+            f"artifact:{live.chain().content_hash}" != old_version
+        post = svc.query(["fresh0", "e3"], k=1)  # delta-only keyword
+        assert post.result.weights[0] > 0
+        samples = parse_prometheus(svc.registry.render())
+        assert samples["dks_delta_applied_total"] == 1
+        assert samples["dks_graph_staleness_seconds"] == 0.0
+        swaps = [t for t in svc.recent_traces() if t.name == "dks.swap"]
+        assert [sp.name for sp in swaps[-1].spans] == \
+            ["build", "warm", "swap"]
+    ts = svc.tracer.stats()
+    assert ts["begun"] == ts["finished"], ts
+
+
+def test_tsv_and_gz_fragments(tmp_path):
+    lines = [f"a{i} left\ta{i + 1} right\tknows\t1.0" for i in range(6)]
+    (tmp_path / "b.tsv").write_text("\n".join(lines) + "\n")
+    live = LiveDir.initialize(tmp_path / "live",
+                              ingest_tsv(tmp_path / "b.tsv"))
+    import gzip
+    with gzip.open(tmp_path / "f.tsv.gz", "wt") as f:
+        f.write("a6 right\ta7 tail\tcites\t0.5\n")
+    delta = live.append([tmp_path / "f.tsv.gz"])
+    assert delta.n_new_nodes == 1 and delta.new_predicates == ["cites"]
+    engine = QueryEngine.build(artifact=live.chain())
+    assert engine.query(["tail", "a0"], k=1, extract=False).weights[0] > 0
