@@ -150,48 +150,66 @@ def fig15_parallel_efficiency(dataset="sec-rdfabout-cpu",
     return rows
 
 
-def fig15_sharded_vs_single(dataset="sec-rdfabout-cpu", k=1, n_queries=4):
+def fig15_sharded_vs_single(dataset="sec-rdfabout-cpu", k=1, n_queries=4,
+                            shard_counts=None):
     """Paper Fig. 15's axis, *executed*: the same queries served by the
     dense single-program engine and the frontier-compressed shard_map
-    engine (sharded over whatever devices this host exposes; runs on any
-    jax via repro.shardmap).  On the CPU container this measures the
-    shard_map machinery's overhead at n_shards=|local devices|; on a pod
-    the identical code path is the scaling curve.  Parity of the top-K
-    weights is asserted per query — the benchmark doubles as an
-    end-to-end correctness check of the revived sharded path."""
+    engine at every shard count in ``shard_counts`` (default: one point
+    at n_shards=|local devices|; ``benchmarks.run --shards N`` sweeps
+    1..N — on CPU expose extra devices first with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  On one
+    core per shard this measures the shard_map machinery's overhead; on
+    a pod the identical code path is the scaling curve.  Parity of the
+    top-K weights is asserted per query and per shard count — the
+    benchmark doubles as an end-to-end correctness check of the revived
+    sharded path.  Shard counts beyond the visible device count are
+    recorded as skipped rows, never silently dropped."""
+    import jax
+
     bench = load(dataset)
-    sharded = QueryEngine.build(
-        bench.g, index=bench.index,
-        policy=ExecutionPolicy(partition="sharded", max_supersteps=32,
-                               frontier_frac=1.0))
+    n_dev = jax.local_device_count()
+    if shard_counts is None:
+        shard_counts = (n_dev,)
     queries = bench.queries[:n_queries]
-    # Untimed warm-up, one query per (m, k) shape on each engine: the timed
-    # rows must measure execution, not the first-trace compilation.
+    # Untimed warm-up, one query per (m, k) shape on the dense engine:
+    # the timed rows must measure execution, not first-trace compilation.
     for m in sorted({len(q) for q in queries}):
         warm = next(q for q in queries if len(q) == m)
         bench.engine.query(warm, k=k, extract=False)
-        sharded.query(warm, k=k, extract=False)
     rows = []
-    for q in queries:
-        rs = bench.engine.query(q, k=k, extract=False)
-        rh = sharded.query(q, k=k, extract=False)
-        # Tolerant parity check: on multi-device meshes shard-order float
-        # reductions may differ in the last ulp; a real divergence still
-        # aborts loudly.
-        match = bool(np.allclose(rs.weights, rh.weights,
-                                 rtol=1e-5, atol=1e-5))
-        assert match, (
-            f"sharded/single top-K diverged for {q}: "
-            f"{rh.weights} vs {rs.weights}")
-        rows.append({
-            "m": rs.m,
-            "n_shards": sharded.device_graph.n_shards,
-            "single_s": round(rs.wall_time_s, 4),
-            "sharded_s": round(rh.wall_time_s, 4),
-            "speedup": round(rs.wall_time_s / max(rh.wall_time_s, 1e-9), 3),
-            "weights_match": match,
-            "supersteps": rh.supersteps,
-        })
+    for n_shards in shard_counts:
+        if n_shards > n_dev:
+            rows.append({"n_shards": n_shards, "skipped":
+                         f"only {n_dev} local device(s) visible"})
+            continue
+        sharded = QueryEngine.build(
+            bench.g, index=bench.index,
+            policy=ExecutionPolicy(partition="sharded", n_shards=n_shards,
+                                   max_supersteps=32, frontier_frac=1.0))
+        for m in sorted({len(q) for q in queries}):
+            warm = next(q for q in queries if len(q) == m)
+            sharded.query(warm, k=k, extract=False)
+        for q in queries:
+            rs = bench.engine.query(q, k=k, extract=False)
+            rh = sharded.query(q, k=k, extract=False)
+            # Tolerant parity check: on multi-device meshes shard-order
+            # float reductions may differ in the last ulp; a real
+            # divergence still aborts loudly.
+            match = bool(np.allclose(rs.weights, rh.weights,
+                                     rtol=1e-5, atol=1e-5))
+            assert match, (
+                f"sharded/single top-K diverged for {q} at "
+                f"n_shards={n_shards}: {rh.weights} vs {rs.weights}")
+            rows.append({
+                "m": rs.m,
+                "n_shards": sharded.device_graph.n_shards,
+                "single_s": round(rs.wall_time_s, 4),
+                "sharded_s": round(rh.wall_time_s, 4),
+                "speedup": round(
+                    rs.wall_time_s / max(rh.wall_time_s, 1e-9), 3),
+                "weights_match": match,
+                "supersteps": rh.supersteps,
+            })
     return rows
 
 

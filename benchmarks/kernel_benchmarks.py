@@ -86,6 +86,83 @@ def bench_segment_topk(e=200_000, v=20_000, f=16, k=2):
              "derived": f"rounds={k}"}]
 
 
+def fig_lane_kernel(v=800, e=3200, m=3, k=2, lane_counts=(1, 4, 8)):
+    """The fused pallas lane-superstep kernel vs the vmapped jnp
+    superstep chain: per-superstep wall time at several lane counts,
+    parity-checked bit-identically at every point.
+
+    The timed unit is ONE jitted ``lane_superstep`` call — the body both
+    the fused while-loop and the stepwise drivers repeat — so the ratio
+    is the whole-query ratio minus host overhead.  On CPU the kernel
+    runs in interpret mode (``interpret=True`` in the result): those
+    wall times measure the emulation, not the kernel — the row is a
+    trend/parity record there, and a device measurement on TPU/GPU.
+    Structural economy is measured either way: ``jaxpr_eqns`` counts
+    equations in each path's jaxpr and ``pallas_calls`` asserts the
+    fused path is exactly one launch."""
+    from repro.core.driver import lane_init, lane_superstep
+    from repro.engine import ExecutionPolicy, QueryEngine
+    from repro.graph.generators import lod_like_graph
+    from repro.graph.index import InvertedIndex, mid_df_tokens
+    from repro.kernels.lane_superstep import interpret_default
+
+    g, tokens = lod_like_graph(v, e, seed=0, vocab=60, tau=1001)
+    index = InvertedIndex.from_token_matrix(tokens)
+    ej = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+        backend="jnp", max_supersteps=16))
+    ep = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+        backend="pallas", max_supersteps=16))
+    cfg_j = ej.policy.dks_config(m, k)
+    cfg_p = ep.policy.dks_config(m, k)
+    mid = mid_df_tokens(index)
+    queries = [list(mid[i:i + m]) for i in range(max(lane_counts))]
+
+    def all_eqns(jaxpr):
+        out = list(jaxpr.eqns)
+        for eq in jaxpr.eqns:
+            for p in eq.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    out += all_eqns(getattr(inner, "jaxpr", inner))
+        return out
+
+    step_j = jax.jit(lambda s: lane_superstep(ej.device_graph, s, cfg_j))
+    step_p = jax.jit(lambda s: lane_superstep(
+        ep.device_graph, s, cfg_p, csr=ep.lane_csr))
+
+    rows = []
+    jaxpr_eqns = pallas_calls = None
+    for lanes in lane_counts:
+        masks = jnp.asarray(np.stack(
+            [ej._masks(q)[0] for q in queries[:lanes]]))
+        st = lane_init(ej.device_graph, masks, cfg_j)
+        if jaxpr_eqns is None:
+            ej_eqns = all_eqns(jax.make_jaxpr(step_j)(st).jaxpr)
+            ep_eqns = all_eqns(jax.make_jaxpr(step_p)(st).jaxpr)
+            pallas_calls = sum(1 for q in ep_eqns
+                               if q.primitive.name == "pallas_call")
+            assert pallas_calls == 1, pallas_calls
+            jaxpr_eqns = {"jnp": len(ej_eqns), "pallas": len(ep_eqns)}
+        us_j, out_j = _time(step_j, st)
+        us_p, out_p = _time(step_p, st)
+        if not np.array_equal(np.asarray(out_j.S), np.asarray(out_p.S)):
+            raise AssertionError(f"kernel parity broke at lanes={lanes}")
+        rows.append({
+            "lanes": lanes,
+            "jnp_us_per_step": round(us_j, 1),
+            "pallas_us_per_step": round(us_p, 1),
+            "speedup": round(us_j / us_p, 3) if us_p else None,
+            "parity": "bit-identical",
+        })
+    return {
+        "graph": {"v": v, "e": e, "m": m, "k": k},
+        "interpret": interpret_default(),
+        "jaxpr_eqns": jaxpr_eqns,
+        "pallas_calls_per_superstep": pallas_calls,
+        "rows": rows,
+    }
+
+
 def bench_attention(b=1, s=512, h=8, dh=64):
     from repro.models.attention import attention
     rng = np.random.default_rng(0)

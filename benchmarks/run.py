@@ -67,6 +67,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--shards", type=int, default=None,
+        help="sweep fig15_sharded_vs_single over shard counts 1..N "
+             "(expose CPU devices first with "
+             "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import dks_benchmarks as dks
@@ -78,8 +83,17 @@ def main() -> None:
     rows = []
     fig_wall_s = {}
 
+    def selected(name):
+        if args.only is None:
+            return True
+        if args.only == "kernels":
+            # The kernel surface spans differently-named figures and
+            # micro-benches; a plain substring match would select none.
+            return name == "fig_lane_kernel" or name.startswith("bench_")
+        return args.only in name
+
     def record(name, fn, *fargs, **fkw):
-        if args.only and args.only not in name:
+        if not selected(name):
             return
         t0 = time.perf_counter()
         out = fn(*fargs, **fkw)
@@ -103,7 +117,9 @@ def main() -> None:
            n_queries=3 if not args.full else 10)
     record("fig15_parallel_efficiency", dks.fig15_parallel_efficiency)
     record("fig15_sharded_vs_single", dks.fig15_sharded_vs_single,
-           n_queries=2 if not args.full else 8)
+           n_queries=2 if not args.full else 8,
+           shard_counts=(tuple(range(1, args.shards + 1))
+                         if args.shards else None))
     record("fig_sharded_batch", dks.fig_sharded_batch)
     record("fig_weighted_relax", dks.fig_weighted_relax)
     record("fig_extract", dks.fig_extract,
@@ -117,11 +133,13 @@ def main() -> None:
            unique=4 if not args.full else 8)
     record("fig_ingest", ing.fig_ingest)
     record("fig_delta", ing.fig_delta)
+    record("fig_lane_kernel", kb.fig_lane_kernel,
+           lane_counts=(1, 4) if not args.full else (1, 4, 8, 16))
 
     print("\nname,us_per_call,derived")
     for bench_fn in (kb.bench_subset_combine, kb.bench_segment_topk,
                      kb.bench_attention):
-        if args.only and args.only not in bench_fn.__name__:
+        if not selected(bench_fn.__name__):
             continue
         for r in bench_fn():
             rows.append((r["name"], r["us_per_call"], r["derived"]))
@@ -138,7 +156,7 @@ def main() -> None:
     # whenever that figure ran in full.
     dks_figs = {k: v for k, v in fig_wall_s.items()
                 if k not in ("fig_serve_throughput", "fig_ingest",
-                             "fig_delta")}
+                             "fig_delta", "fig_lane_kernel")}
     if dks_figs and args.only is None:
         bench_dks = {
             **stamp,
@@ -162,6 +180,20 @@ def main() -> None:
         (OUT / "BENCH_serve.json").write_text(
             json.dumps(bench_serve, indent=1))
         print(f"wrote {OUT / 'BENCH_serve.json'}")
+    if "fig_lane_kernel" in results:
+        # Single-figure trajectory file, like BENCH_serve: written
+        # whenever the fig ran (including under --only kernels).  The
+        # record carries the interpret flag — CPU rows measure the
+        # interpreter and are trend/parity data, not device numbers.
+        bench_kernels = {
+            **stamp,
+            "full": bool(args.full),
+            "wall_s": fig_wall_s.get("fig_lane_kernel"),
+            "lane_kernel": results["fig_lane_kernel"],
+        }
+        (OUT / "BENCH_kernels.json").write_text(
+            json.dumps(bench_kernels, indent=1))
+        print(f"wrote {OUT / 'BENCH_kernels.json'}")
     if "fig_ingest" in results:
         bench_ingest = {
             **stamp,

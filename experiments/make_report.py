@@ -85,10 +85,52 @@ def telemetry_section() -> str | None:
     return "\n".join(lines)
 
 
+def kernel_section() -> str | None:
+    """Markdown table for the fig_lane_kernel record in
+    BENCH_kernels.json — fused pallas lane-superstep kernel vs the
+    vmapped jnp chain, per superstep.  Returns None when the file (a
+    pre-kernel BENCH set, or a --only run that skipped it) is absent,
+    so the report degrades instead of crashing."""
+    path = HERE / "BENCH_kernels.json"
+    if not path.exists():
+        return None
+    bench = json.loads(path.read_text())
+    fig = bench.get("lane_kernel")
+    if not fig:
+        return None
+    interp = fig.get("interpret")
+    eqns = fig.get("jaxpr_eqns", {})
+    lines = [
+        "## Fused lane-superstep kernel (fig_lane_kernel)",
+        "",
+        f"One `pallas_call` per superstep "
+        f"(vs {eqns.get('jnp', '?')} jaxpr equations on the jnp chain, "
+        f"{eqns.get('pallas', '?')} fused), commit "
+        f"`{bench.get('commit', '?')}`, platform "
+        f"`{bench.get('platform', '?')}`"
+        + (" — **interpret mode**: wall times measure the emulation, "
+           "not the kernel; read the parity column and the equation "
+           "counts, not the speedup." if interp else "."),
+        "",
+        "| lanes | jnp us/step | pallas us/step | speedup | parity |",
+        "|---|---|---|---|---|",
+    ]
+    for r in fig.get("rows", []):
+        lines.append(
+            f"| {r['lanes']} | {r['jnp_us_per_step']} |"
+            f" {r['pallas_us_per_step']} | {r['speedup']} |"
+            f" {r['parity']} |")
+    return "\n".join(lines)
+
+
 def main():
     tel = telemetry_section()
     if tel:
         print(tel)
+        print()
+    ker = kernel_section()
+    if ker:
+        print(ker)
         print()
     base_s = load_dir(HERE / "dryrun_baseline" / "pod16x16")
     base_m = load_dir(HERE / "dryrun_baseline" / "multipod2x16x16")

@@ -70,7 +70,8 @@ def lane_init(graph: Any, kw_masks: jax.Array, cfg: DKSConfig) -> DKSState:
 freeze_lanes = freeze_finished
 
 
-def lane_superstep(graph: Any, state: DKSState, cfg: DKSConfig) -> DKSState:
+def lane_superstep(graph: Any, state: DKSState, cfg: DKSConfig,
+                   csr: Any = None) -> DKSState:
     """One Pregel superstep for every lane at once, finished lanes frozen.
 
     The single kernel behind every engine executor: dense lanes ride a
@@ -78,6 +79,18 @@ def lane_superstep(graph: Any, state: DKSState, cfg: DKSConfig) -> DKSState:
     frontier exchange inside the ``shard_map``
     (:func:`~repro.core.dks_sharded.relax_frontier_lanes`) with the
     node-local tail vmapped over lanes.
+
+    ``csr``: a :class:`~repro.kernels.lane_superstep.LaneCSR` layout makes
+    this the real ``backend="pallas"`` path on dense graphs — the whole
+    inner loop (relax + hub merge + receive + combine + per-lane freeze)
+    runs as ONE fused kernel launch over the lane axis
+    (:func:`~repro.kernels.lane_superstep.fused_lane_superstep`),
+    bit-identical to the vmapped jnp superstep.  The engine builds the
+    layout once per graph (``QueryEngine.build``) and threads it here.
+    Sharded graphs never take the fused path: the shard_map body keeps
+    jnp (``ExecutionPolicy`` rejects the combination up front; see
+    NotImplementedError there — fusing the sharded body is the remaining
+    ROADMAP item).
     """
     if is_frontier_graph(graph):
         from repro.core.dks_sharded import frontier_tail, relax_frontier_lanes
@@ -86,6 +99,10 @@ def lane_superstep(graph: Any, state: DKSState, cfg: DKSConfig) -> DKSState:
         nxt = jax.vmap(
             lambda st, r, ov: frontier_tail(graph, st, r, ov, cfg)
         )(state, R, overflow)
+    elif csr is not None and cfg.relax_impl == "pallas":
+        from repro.kernels.lane_superstep import fused_lane_superstep
+
+        nxt = fused_lane_superstep(graph, csr, state, cfg)
     else:
         nxt = jax.vmap(lambda st: superstep(graph, st, cfg))(state)
     if state.done.shape[0] == 1:
@@ -138,7 +155,7 @@ def telemetry_row(state: DKSState) -> jax.Array:
 
 
 def run_lanes_telemetry(
-    graph: Any, kw_masks: jax.Array, cfg: DKSConfig,
+    graph: Any, kw_masks: jax.Array, cfg: DKSConfig, csr: Any = None,
 ) -> tuple[DKSState, jax.Array, jax.Array]:
     """The fused driver with a telemetry carry: the while-loop threads
     ``(state, buf, i)`` and writes one :func:`telemetry_row` per superstep
@@ -161,7 +178,7 @@ def run_lanes_telemetry(
 
     def body(carry):
         st, buf, i = carry
-        nxt = lane_superstep(graph, st, cfg)
+        nxt = lane_superstep(graph, st, cfg, csr=csr)
         buf = buf.at[jnp.minimum(i, T - 1)].set(telemetry_row(nxt))
         return nxt, buf, i + 1
 

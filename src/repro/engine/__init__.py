@@ -30,6 +30,10 @@ Public API:
 """
 
 from repro.engine.engine import QueryEngine  # noqa: F401
-from repro.engine.policy import ExecutionPolicy  # noqa: F401
+from repro.engine.policy import (  # noqa: F401
+    AdaptiveLanePolicy,
+    ExecutionPolicy,
+    LaneDecision,
+)
 from repro.engine.result import QueryResult, StreamUpdate  # noqa: F401
 from repro.graph.weights import WeightPolicy  # noqa: F401

@@ -127,6 +127,11 @@ class QueryEngine:
         self._answer_backtracer: Any = None
         self.artifact: Any = None
         self.batched_extraction = True
+        # backend="pallas": the fused lane-superstep kernel's padded-CSR
+        # layout, built once per graph by ``build`` (None on jnp/sharded
+        # engines).  Executables close over it and thread it into
+        # ``lane_superstep`` — layout cost is paid at build, not per query.
+        self.lane_csr: Any = None
 
     # ------------------------------------------------------------------
     # Construction
@@ -205,6 +210,14 @@ class QueryEngine:
         engine = cls(graph, index, policy, device_graph, mesh=mesh,
                      graph_hash=graph_hash)
         engine.artifact = artifact
+        if policy.backend == "pallas":
+            # Dense-only by construction (the policy rejects
+            # sharded+pallas).  The layout reads the DeviceGraph's
+            # *effective* weights, so any WeightPolicy above already
+            # flowed into the kernel's weight table.
+            from repro.kernels.lane_superstep import (
+                lane_csr_from_device_graph)
+            engine.lane_csr = lane_csr_from_device_graph(device_graph)
         return engine
 
     # ------------------------------------------------------------------
@@ -933,13 +946,18 @@ class QueryEngine:
         if fn is not None:
             return fn
 
+        # The fused pallas layout (None on jnp/sharded engines) rides the
+        # executor closures as a trace-time constant — same graph, same
+        # layout, for the engine's whole lifetime.
+        csr = self.lane_csr
+
         if kind == "fused":
             def _run(graph, masks):
                 self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
                 state = lane_init(graph, masks, cfg)
                 return jax.lax.while_loop(
                     lambda st: ~jnp.all(st.done),
-                    lambda st: lane_superstep(graph, st, cfg),
+                    lambda st: lane_superstep(graph, st, cfg, csr=csr),
                     state)
 
             fn = jax.jit(_run)
@@ -948,7 +966,7 @@ class QueryEngine:
             # carry (repro.core.driver.run_lanes_telemetry).
             def _run_tel(graph, masks):
                 self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
-                return run_lanes_telemetry(graph, masks, cfg)
+                return run_lanes_telemetry(graph, masks, cfg, csr=csr)
 
             fn = jax.jit(_run_tel)
         elif kind == "stepwise":
@@ -958,7 +976,7 @@ class QueryEngine:
 
             def _step(graph, st):
                 self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
-                return lane_superstep(graph, st, cfg)
+                return lane_superstep(graph, st, cfg, csr=csr)
 
             # A cached stepwise pair counts 2 traces (init + superstep).
             fn = (jax.jit(_init), jax.jit(_step))

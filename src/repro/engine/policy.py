@@ -69,6 +69,17 @@ class ExecutionPolicy:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.partition not in ("single", "sharded"):
             raise ValueError(f"unknown partition {self.partition!r}")
+        if self.backend == "pallas" and self.partition == "sharded":
+            # Refuse up front rather than silently running jnp: the fused
+            # lane-superstep kernel is dense-only — the sharded path keeps
+            # jnp inside its shard_map body (fusing it is the remaining
+            # ROADMAP item).
+            raise NotImplementedError(
+                'backend="pallas" with partition="sharded" is not '
+                "implemented: the frontier-compressed shard_map body "
+                "still runs the jnp relax/combine ops.  Use "
+                'backend="jnp" for sharded engines, or '
+                'partition="single" for the fused pallas kernel.')
         if self.exit_mode not in ("sound", "none"):
             raise ValueError(f"unknown exit_mode {self.exit_mode!r}")
         if not isinstance(self.weights, WeightPolicy):
@@ -88,3 +99,153 @@ class ExecutionPolicy:
             combine_passes=self.combine_passes,
             frontier_frac=self.frontier_frac,
         )
+
+
+# --------------------------------------------------------------------------
+# Adaptive lane occupancy
+# --------------------------------------------------------------------------
+
+
+def _pow2_ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneDecision:
+    """One padding decision: the lane count a bucket dispatches at, why,
+    and (when measurements exist) the estimated device cost."""
+
+    lanes: int
+    reason: str                  # "exact" | "warm" | "pow2" | "cap"
+    est_ms: float | None = None
+
+
+class AdaptiveLanePolicy:
+    """Pick bucket lane counts from MEASURED per-lane superstep cost and
+    the serve layer's observed shape histogram, instead of blind pow2/max
+    padding.
+
+    The tradeoff it arbitrates: padding a bucket of ``n`` real requests
+    up to a lane count ``c > n`` wastes ``(c - n)`` lanes of device time
+    every dispatch, but dispatching at a *new* lane count pays a jit
+    retrace + compile (the engine caches executables per lane count).
+    Blind pow2 padding optimizes only the second term; with measurements
+    this policy scores both::
+
+        score(c) = measured_ms(c)            if c was dispatched before
+                   per_lane_ms * c + retrace if c is cold
+
+    and picks the cheapest count >= n (capped at ``max_lanes``).  Until
+    the first measurement arrives it degrades to exactly the old pow2
+    behavior, so an idle service is indistinguishable from the blind
+    padder.  ``ServeStats.hot_shapes`` lane counts join the candidate
+    set so a swapped-in engine (whose executable cache is cold but whose
+    traffic histogram survives) keeps choosing the counts the workload
+    actually uses.
+
+    Thread-safe; the serve layer exports :meth:`snapshot` through the
+    metrics registry (``dks_lane_policy_*``).
+    """
+
+    def __init__(self, max_lanes: int, retrace_cost_ms: float = 200.0,
+                 ema: float = 0.3) -> None:
+        import threading
+
+        if max_lanes < 1:
+            raise ValueError("max_lanes must be >= 1")
+        self.max_lanes = int(max_lanes)
+        self.retrace_cost_ms = float(retrace_cost_ms)
+        self._ema = float(ema)
+        self._lock = threading.Lock()
+        self._cost_ms: dict[int, float] = {}     # lanes -> EMA device ms
+        self._uses: dict[int, int] = {}          # lanes -> dispatch count
+        self._decisions: dict[str, int] = {}     # reason -> count
+        self._last: LaneDecision | None = None
+
+    # -- measurement ---------------------------------------------------
+
+    def observe(self, lanes: int, device_ms: float) -> None:
+        """Record one dispatch's device time at a lane count."""
+        if lanes < 1 or device_ms < 0:
+            return
+        with self._lock:
+            prev = self._cost_ms.get(lanes)
+            self._cost_ms[lanes] = (
+                device_ms if prev is None
+                else (1 - self._ema) * prev + self._ema * device_ms)
+            self._uses[lanes] = self._uses.get(lanes, 0) + 1
+
+    def per_lane_ms(self) -> float | None:
+        """Use-weighted mean device cost per lane (None until measured)."""
+        with self._lock:
+            tot_ms = sum(self._cost_ms[c] / c * self._uses[c]
+                         for c in self._cost_ms)
+            tot_uses = sum(self._uses.values())
+        return tot_ms / tot_uses if tot_uses else None
+
+    # -- decisions -----------------------------------------------------
+
+    def lanes_for(self, n_real: int, hot_shapes: tuple = ()) -> LaneDecision:
+        """The lane count a bucket of ``n_real`` requests should dispatch
+        at.  ``hot_shapes``: ``ServeStats.hot_shapes`` (``(((m, k,
+        lanes), count), ...)``) — its lane counts are candidate targets
+        even when this policy instance has no measurement for them yet."""
+        n = max(1, min(int(n_real), self.max_lanes))
+        pow2 = min(_pow2_ceil(n), self.max_lanes)
+        with self._lock:
+            warm = dict(self._cost_ms)
+        per_lane = self.per_lane_ms()
+
+        if per_lane is None:
+            decision = LaneDecision(lanes=pow2, reason="pow2")
+        else:
+            hot = {lanes for (_m, _k, lanes), _cnt in hot_shapes
+                   if isinstance(lanes, int)}
+            cands = {n, pow2, self.max_lanes}
+            cands |= {c for c in warm if c >= n}
+            cands |= {c for c in hot if n <= c <= self.max_lanes}
+            best, best_score = None, None
+            for c in sorted(c for c in cands if n <= c <= self.max_lanes):
+                if c in warm:
+                    score = warm[c]
+                else:
+                    score = per_lane * c + self.retrace_cost_ms
+                if best_score is None or score < best_score:
+                    best, best_score = c, score
+            reason = ("exact" if best == n
+                      else "warm" if best in warm
+                      else "pow2" if best == pow2
+                      else "cap")
+            decision = LaneDecision(lanes=best, reason=reason,
+                                    est_ms=round(best_score, 3))
+        with self._lock:
+            self._decisions[decision.reason] = (
+                self._decisions.get(decision.reason, 0) + 1)
+            self._last = decision
+        return decision
+
+    def target_fill(self) -> int:
+        """The bucket size worth waiting for: the most-dispatched warm
+        lane count (a bucket that reaches it pads zero lanes and hits a
+        compiled executable), or ``max_lanes`` before any traffic."""
+        with self._lock:
+            if not self._uses:
+                return self.max_lanes
+            return max(self._uses, key=lambda c: (self._uses[c], c))
+
+    # -- export --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Point-in-time view for metrics/debugging."""
+        with self._lock:
+            return {
+                "decisions": dict(self._decisions),
+                "last_lanes": self._last.lanes if self._last else 0,
+                "last_reason": self._last.reason if self._last else "",
+                "observed_counts": dict(self._uses),
+                "cost_ms": {c: round(v, 3)
+                            for c, v in self._cost_ms.items()},
+            }

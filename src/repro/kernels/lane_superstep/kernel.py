@@ -1,0 +1,144 @@
+"""Pallas kernel: ONE launch for the whole per-superstep inner loop.
+
+The lane driver's jnp superstep lowers to a long XLA op chain per
+superstep: an edge gather, ``K`` rounds of segment-min scatter
+(``semiring.segment_topk_min``), a sorted-unique merge, and a
+``ceil(log2 m)``-pass subset-combine scan — each op re-streaming the
+``S[L, V, 2^m, K]`` table through HBM.  This kernel fuses the chain into
+a single ``pallas_call`` whose grid is ``(lanes, row blocks)``:
+
+  1. **relax reduce** — per padded-CSR virtual row, the top-K distinct
+     min-plus candidates (``kernels/segment_minplus``'s reduce, inlined);
+  2. **hub merge** — a segmented Hillis–Steele merge along the row axis
+     folds a hub's split rows (rows of one node are contiguous and the
+     layout builder never lets them straddle a block);
+  3. **receive** — merge with the node's previous table (``topk_merge``);
+  4. **combine** — the unrolled popcount-ordered split-pair sweep from
+     ``kernels/subset_combine``, reaching full closure in one pass while
+     the table stays in VMEM;
+  5. **freeze** — a finished lane writes its old table back (per-lane
+     freeze masking; ragged frontiers cost nothing — an empty-frontier
+     lane just produces all-INF candidates).
+
+Layout (hardware adaptation, same choice as ``subset_combine``): virtual
+rows ride the minor 128-wide lane axis — ``cand[L, 2^m, dmax*K, Vv]``,
+``S0/out [L, 2^m, K, Vv]`` — so every min/add/select is a full-width
+vector op.  VMEM per block: ``2^m * dmax * K * BV * 4B`` for the
+candidate tile (m=4, dmax=16, K=2, BV=128 -> 256 KiB).
+
+Bit-identity to the jnp path holds because every stage reduces the same
+candidate multiset with the same distinct-top-K semantics: the combine
+dependency graph is acyclic in popcount, so the one-sweep closure equals
+the jnp scan's ``ceil(log2 m)``-pass fixpoint, float rounding included
+(each candidate is a single f32 add of fixpoint values on both paths).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro import INF
+from repro.core.spa import split_pairs
+
+
+def _topk_distinct(cand: jnp.ndarray, k: int, axis: int) -> jnp.ndarray:
+    """K rounds of (min, mask-equal) along ``axis``: the k smallest
+    *distinct* values, sorted ascending, INF-padded — exactly
+    ``semiring.segment_topk_min``'s per-cell semantics, vectorized."""
+    outs = []
+    for _ in range(k):
+        cur = jnp.minimum(jnp.min(cand, axis=axis), INF)
+        outs.append(cur)
+        cand = jnp.where(cand <= jnp.expand_dims(cur, axis), INF, cand)
+    return jnp.stack(outs, axis=axis)
+
+
+def _merge2(a: jnp.ndarray, b: jnp.ndarray, k: int) -> jnp.ndarray:
+    """topk_merge of two [..., K, BV] tables along the K axis."""
+    return _topk_distinct(jnp.concatenate([a, b], axis=-2), k, axis=-2)
+
+
+def _lane_step_kernel(seg_ref, done_ref, cand_ref, s0_ref, out_ref,
+                      *, m: int, k: int, bv: int):
+    """One (lane, row-block) grid step.
+
+    seg_ref:  i32[1, BV]   node id per virtual row (-1 on pad rows)
+    done_ref: i32[1, 1]    this lane's freeze flag
+    cand_ref: f32[1, 2^m, dmax*K, BV]  min-plus candidates
+    s0_ref:   f32[1, 2^m, K, BV]       pre-relax table, gathered per row
+    out_ref:  f32[1, 2^m, K, BV]       post-combine table (valid at each
+                                       node's tail row)
+    """
+    cand = cand_ref[0]                              # [F, C, BV]
+    s0 = s0_ref[0]                                  # [F, K, BV]
+    seg = seg_ref[0]                                # [BV]
+
+    # 1) per-row relax reduce: top-K distinct over the candidate axis.
+    r = _topk_distinct(cand, k, axis=1)             # [F, K, BV]
+
+    # 2) segmented hub merge along rows.  The merge is associative and
+    #    idempotent, so an inclusive Hillis–Steele scan leaves the full
+    #    per-node merge at each segment's LAST row (the tail row the
+    #    host gathers).  Pad rows (seg == -1) never join a segment.
+    shift = 1
+    while shift < bv:
+        prev = jnp.concatenate(
+            [jnp.full(r.shape[:-1] + (shift,), INF, r.dtype),
+             r[..., :-shift]], axis=-1)
+        pseg = jnp.concatenate(
+            [jnp.full((shift,), -2, seg.dtype), seg[:-shift]], axis=0)
+        same = (seg == pseg) & (seg >= 0)           # [BV]
+        r = jnp.where(same[None, None, :], _merge2(r, prev, k), r)
+        shift *= 2
+
+    # 3) receive: merge what arrived with the node's previous table.
+    s = _merge2(r, s0, k)                           # [F, K, BV]
+
+    # 4) subset-combine sweep (popcount order -> closure in one pass).
+    for t, a, b in split_pairs(m):
+        pair = s[a][:, None, :] + s[b][None, :, :]  # [K, K, BV]
+        pair = jnp.minimum(pair, INF)
+        cand_t = jnp.concatenate(
+            [s[t], pair.reshape(k * k, -1)], axis=0)  # [K+K^2, BV]
+        s = s.at[t].set(_topk_distinct(cand_t, k, axis=0))
+
+    # 5) per-lane freeze: a finished lane keeps its pre-step table.
+    frozen = done_ref[0, 0] != 0
+    out_ref[0] = jnp.where(frozen, s0, s)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "block_v", "interpret"))
+def fused_lane_step(
+    cand_t: jax.Array,   # f32[L, 2^m, dmax*K, Vv]
+    s0_t: jax.Array,     # f32[L, 2^m, K, Vv]
+    seg: jax.Array,      # i32[1, Vv]
+    done: jax.Array,     # i32[L, 1]
+    m: int,
+    block_v: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """The fused superstep body as ONE pallas launch over
+    ``grid = (lanes, Vv / block_v)``.  Returns f32[L, 2^m, K, Vv]."""
+    lanes, n_sets, c, vv = cand_t.shape
+    k = s0_t.shape[2]
+    assert n_sets == 1 << m and vv % block_v == 0
+    grid = (lanes, vv // block_v)
+    return pl.pallas_call(
+        functools.partial(_lane_step_kernel, m=m, k=k, bv=block_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_v), lambda l, i: (0, i)),
+            pl.BlockSpec((1, 1), lambda l, i: (l, 0)),
+            pl.BlockSpec((1, n_sets, c, block_v), lambda l, i: (l, 0, 0, i)),
+            pl.BlockSpec((1, n_sets, k, block_v), lambda l, i: (l, 0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, n_sets, k, block_v),
+                               lambda l, i: (l, 0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((lanes, n_sets, k, vv), cand_t.dtype),
+        interpret=interpret,
+    )(seg, done, cand_t, s0_t)

@@ -1,0 +1,184 @@
+"""Host-facing wrapper for the fused lane-superstep kernel.
+
+Two pieces:
+
+- :class:`LaneCSR` / :func:`lane_csr_from_device_graph` — the padded-CSR
+  layout the kernel consumes, built ONCE per graph on the host (numpy)
+  and cached by ``QueryEngine.build``.  It is ``segment_minplus``'s
+  ``PaddedCSR`` idea (per-destination padded rows, hubs split into
+  ``ceil(d / dmax)`` virtual rows) with one extra invariant: a node's
+  rows are **block-aligned** — they never straddle a ``block_v``
+  boundary — so the kernel's in-block segmented scan always produces the
+  complete hub merge at the node's tail row, and no second-level jnp
+  merge is needed.
+
+- :func:`fused_lane_superstep` — the drop-in replacement for the lane
+  driver's vmapped :func:`~repro.core.dks.superstep` on dense graphs:
+  XLA gathers build the candidate tensor (weights straight from the
+  ``DeviceGraph``, so :class:`~repro.graph.weights.WeightPolicy`
+  effective weights flow in untouched), ONE ``pallas_call`` runs
+  relax + hub merge + receive + combine + per-lane freeze
+  (:mod:`.kernel`), and the shared jnp tail
+  (:func:`~repro.core.dks.finish_superstep`) recomputes the frontier,
+  aggregators, and exit check — bit-identical to the jnp superstep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import INF
+from repro.core import semiring
+from repro.core.dks import DKSConfig, DKSState, finish_superstep
+from repro.kernels.lane_superstep.kernel import fused_lane_step
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LaneCSR:
+    """Block-aligned padded CSR over the *symmetrized padded* node space.
+
+    Attributes:
+      src_pad: i32[Vv, dmax] source node per candidate slot (0 on pads).
+      w_pad:   f32[Vv, dmax] effective edge weight (INF on pads).
+      gather_of: i32[Vv] owning real node per virtual row (0 on pad
+        rows — their candidates are all INF, so the gathered table is
+        never consumed).
+      seg:     i32[Vv] owning real node per row, -1 on pad rows (the
+        kernel's segment ids; distinct from ``gather_of`` so pad rows
+        never join a real segment).
+      tail_row: i32[v_pad] LAST virtual row of each node — where the
+        kernel's segmented scan leaves the complete merge.
+      dmax / block_v / n_rows: static layout parameters.
+    """
+
+    src_pad: jax.Array
+    w_pad: jax.Array
+    gather_of: jax.Array
+    seg: jax.Array
+    tail_row: jax.Array
+    dmax: int = dataclasses.field(metadata=dict(static=True))
+    block_v: int = dataclasses.field(metadata=dict(static=True))
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+
+
+def lane_csr_from_device_graph(graph, dmax: int = 16,
+                               block_v: int = 128) -> LaneCSR:
+    """Build the kernel layout from a dense :class:`DeviceGraph`.
+
+    Host-side numpy, paid once per ``QueryEngine.build``.  ``dmax``
+    auto-bumps so every node fits in at most ``block_v`` virtual rows
+    (the block-alignment invariant is unconditional).
+    """
+    valid = np.asarray(graph.valid)
+    src = np.asarray(graph.src)[valid].astype(np.int64)
+    dst = np.asarray(graph.dst)[valid].astype(np.int64)
+    w = np.asarray(graph.w)[valid].astype(np.float32)
+    n = int(graph.v_pad)
+
+    deg = np.bincount(dst, minlength=n).astype(np.int64)
+    max_deg = int(deg.max()) if deg.size else 0
+    if max_deg > dmax * block_v:
+        dmax = int(np.ceil(max_deg / block_v))
+    rows = np.maximum(1, -(-deg // dmax))           # ceil, >= 1 row/node
+
+    # Block-aligned row starts: advance to the next block boundary when a
+    # node's rows would straddle it.
+    row0 = np.zeros(n, np.int64)
+    cur = 0
+    for v in range(n):
+        if (cur % block_v) + rows[v] > block_v:
+            cur = (cur // block_v + 1) * block_v
+        row0[v] = cur
+        cur += rows[v]
+    n_rows = max(block_v, int(np.ceil(cur / block_v)) * block_v)
+
+    seg = np.full(n_rows, -1, np.int32)
+    starts = np.cumsum(rows) - rows
+    row_idx = np.repeat(row0, rows) + (np.arange(rows.sum()) -
+                                       np.repeat(starts, rows))
+    seg[row_idx] = np.repeat(np.arange(n, dtype=np.int32), rows)
+    tail_row = (row0 + rows - 1).astype(np.int32)
+
+    src_pad = np.zeros((n_rows, dmax), np.int32)
+    w_pad = np.full((n_rows, dmax), INF, np.float32)
+    order = np.argsort(dst, kind="stable")
+    ds, ss, ws = dst[order], src[order], w[order]
+    estart = np.cumsum(deg) - deg
+    within = np.arange(ds.size) - estart[ds]
+    r, c = row0[ds] + within // dmax, within % dmax
+    src_pad[r, c] = ss.astype(np.int32)
+    w_pad[r, c] = ws
+
+    return LaneCSR(
+        src_pad=jnp.asarray(src_pad), w_pad=jnp.asarray(w_pad),
+        gather_of=jnp.asarray(np.maximum(seg, 0).astype(np.int32)),
+        seg=jnp.asarray(seg), tail_row=jnp.asarray(tail_row),
+        dmax=int(dmax), block_v=int(block_v), n_rows=int(n_rows),
+    )
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode unless a real TPU backs the default device
+    (same auto-detection as the other kernel packages).  Benchmarks
+    record this flag so CPU rows are never mistaken for device rows."""
+    return jax.default_backend() != "tpu"
+
+
+def fused_lane_superstep(graph, csr: LaneCSR, state: DKSState,
+                         cfg: DKSConfig,
+                         interpret: bool | None = None) -> DKSState:
+    """One superstep for every lane, inner loop as ONE kernel launch.
+
+    ``state``: lane-batched (``S[L, V, 2^m, K]``, ``done[L]``, ...).
+    Returns the stepped state *without* the driver's cross-lane freeze
+    select — :func:`~repro.core.driver.lane_superstep` applies
+    ``freeze_lanes`` exactly as on the jnp path (the kernel's own
+    per-lane freeze keeps a finished lane's table; the driver select
+    keeps its counters).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    S0 = state.S                                    # [L, V, F, K]
+    lanes = S0.shape[0]
+    f, k = cfg.n_sets, cfg.k
+
+    deg = graph.out_degree.astype(jnp.float32)
+    n_bfs = jnp.sum(jnp.where(state.first_fire, deg, 0.0), axis=1)
+    n_deep = jnp.sum(
+        jnp.where(state.changed & ~state.first_fire, deg, 0.0), axis=1)
+
+    # Candidate gather (XLA): cand[l, row, slot] = S0[l, src] + w, masked
+    # by the sender's active flag — identical candidate multiset to the
+    # jnp relax (invalid edges carry w=INF and bump to INF either way).
+    src_flat = csr.src_pad.reshape(-1)              # [Vv*dmax]
+    fire = jnp.take(state.changed, src_flat, axis=1)
+    cand = (jnp.take(S0, src_flat, axis=1)
+            + csr.w_pad.reshape(-1)[None, :, None, None])
+    cand = jnp.where(fire[:, :, None, None], cand, INF)
+    cand = semiring.bump_to_inf(cand)
+    cand = cand.reshape(lanes, csr.n_rows, csr.dmax, f, k)
+    cand_t = cand.transpose(0, 3, 2, 4, 1).reshape(
+        lanes, f, csr.dmax * k, csr.n_rows)
+
+    s0_t = jnp.take(S0, csr.gather_of, axis=1).transpose(0, 2, 3, 1)
+    done_i = state.done.astype(jnp.int32).reshape(lanes, 1)
+
+    out_t = fused_lane_step(cand_t, s0_t, csr.seg[None, :], done_i,
+                            m=cfg.m, block_v=csr.block_v,
+                            interpret=interpret)   # [L, F, K, Vv]
+    S1 = jnp.take(out_t, csr.tail_row, axis=3).transpose(0, 3, 1, 2)
+
+    nxt = dataclasses.replace(
+        state,
+        S=S1,
+        msgs_bfs=state.msgs_bfs + n_bfs,
+        msgs_deep=state.msgs_deep + n_deep,
+        step=state.step + 1,
+    )
+    return jax.vmap(
+        lambda s0, st: finish_superstep(graph, s0, st, cfg))(S0, nxt)

@@ -121,6 +121,10 @@ def main() -> int:
                          "strings from the artifact's label blob when "
                          "--artifact is given; node:<id> otherwise) "
                          "instead of raw int ids")
+    ap.add_argument("--parity", action="store_true",
+                    help="with --backend pallas: build a jnp twin engine "
+                         "and assert bit-identical top-K weights and "
+                         "superstep count (the CI interpret-mode smoke)")
     args = ap.parse_args()
     if args.explain and args.stream:
         ap.error("--explain and --stream are mutually exclusive "
@@ -210,6 +214,29 @@ def main() -> int:
         print(f"budget hit: SPA-ratio={res.spa_ratio:.3f}")
     elif res.capped:
         print(f"superstep cap hit: SPA-ratio={res.spa_ratio:.3f}")
+
+    if args.parity:
+        import dataclasses as _dc
+
+        import numpy as np
+        if args.backend != "pallas":
+            ap.error("--parity needs --backend pallas (it builds the "
+                     "jnp twin to compare against)")
+        _, twin = build_engine(
+            args.dataset, _dc.replace(policy, backend="jnp"),
+            artifact=args.artifact)
+        ref = twin.query(query, k=args.k)
+        if not np.array_equal(np.asarray(res.weights),
+                              np.asarray(ref.weights)):
+            raise AssertionError(
+                f"pallas/jnp weights diverged: {res.weights} "
+                f"vs {ref.weights}")
+        if res.supersteps != ref.supersteps:
+            raise AssertionError(
+                f"pallas/jnp superstep counts diverged: "
+                f"{res.supersteps} vs {ref.supersteps}")
+        print(f"\nparity: pallas == jnp bit-identical "
+              f"(top-{args.k} weights, {res.supersteps} supersteps)")
 
     print("\ntop answers (weights):", [w for w in res.weights if w < 1e8])
     if args.extract:

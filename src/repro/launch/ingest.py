@@ -301,11 +301,19 @@ def main() -> int:
     ap.add_argument("--compact", action="store_true",
                     help="fold the --live chain into a fresh base "
                          "artifact")
+    ap.add_argument("--gc", action="store_true",
+                    help="after any --append/--compact, delete "
+                         "base-*/delta-* directories CHAIN.json no "
+                         "longer references")
+    ap.add_argument("--gc-keep", type=int, default=1, metavar="N",
+                    help="unreferenced directories to retain as an "
+                         "in-flight-reader grace window (default 1; "
+                         "0 deletes all)")
     args = ap.parse_args()
 
-    if args.append or args.compact:
+    if args.append or args.compact or args.gc:
         if args.live is None:
-            ap.error("--append/--compact need --live DIR")
+            ap.error("--append/--compact/--gc need --live DIR")
         return _live_update(args)
 
     tmp_ctx = None
@@ -425,6 +433,14 @@ def _live_update(args) -> int:
         art = live.compact()
         dt = time.perf_counter() - t0
         print(f"compacted chain into {art} in {dt:.2f}s")
+    if args.gc:
+        deleted = live.gc(keep_last=args.gc_keep)
+        if deleted:
+            print(f"gc: deleted {len(deleted)} superseded "
+                  f"director{'y' if len(deleted) == 1 else 'ies'}: "
+                  f"{', '.join(deleted)}")
+        else:
+            print("gc: nothing to delete")
     return 0
 
 

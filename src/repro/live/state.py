@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import time
 from pathlib import Path
 from typing import Iterable
@@ -78,6 +79,12 @@ class LiveDir:
                 f"live-dir state v{state.get('version')} at {self.path}; "
                 f"this reader supports v{_STATE_VERSION}")
         self._state = state
+        # True while append/compact is between "directory being written"
+        # and "state file updated" — the window where a new base/delta
+        # directory exists on disk but CHAIN.json does not reference it
+        # yet.  :meth:`gc` refuses to run during it (same process —
+        # e.g. a GraphWatcher thread mid-publish on this instance).
+        self._publishing = False
 
     # -- creation ------------------------------------------------------
 
@@ -164,15 +171,19 @@ class LiveDir:
             self.mark_consumed(f.name for f in fragments)
             return None
         seq = self.depth + 1
-        delta = builder.write(self.path / f"delta-{seq:06d}")
-        state = dict(self._state)
-        state["deltas"] = state["deltas"] + [delta.path.name]
-        state["chain_hash"] = delta.chain_hash
-        state["consumed"] = sorted(
-            self.consumed | {f.name for f in fragments})
-        state["updated_unix"] = time.time()
-        _write_state(self.path, state)
-        self._state = state
+        self._publishing = True
+        try:
+            delta = builder.write(self.path / f"delta-{seq:06d}")
+            state = dict(self._state)
+            state["deltas"] = state["deltas"] + [delta.path.name]
+            state["chain_hash"] = delta.chain_hash
+            state["consumed"] = sorted(
+                self.consumed | {f.name for f in fragments})
+            state["updated_unix"] = time.time()
+            _write_state(self.path, state)
+            self._state = state
+        finally:
+            self._publishing = False
         return delta
 
     def mark_consumed(self, names: Iterable[str]) -> None:
@@ -190,16 +201,59 @@ class LiveDir:
         chain = self.chain()
         seq = int(self._state.get("base_seq", 0)) + 1
         base_name = f"base-{seq:06d}"
-        art = compact_chain(chain, self.path / base_name)
-        state = dict(self._state)
-        state["base"] = base_name
-        state["base_seq"] = seq
-        state["deltas"] = []
-        state["chain_hash"] = art.content_hash
-        state["updated_unix"] = time.time()
-        _write_state(self.path, state)
-        self._state = state
+        self._publishing = True
+        try:
+            art = compact_chain(chain, self.path / base_name)
+            state = dict(self._state)
+            state["base"] = base_name
+            state["base_seq"] = seq
+            state["deltas"] = []
+            state["chain_hash"] = art.content_hash
+            state["updated_unix"] = time.time()
+            _write_state(self.path, state)
+            self._state = state
+        finally:
+            self._publishing = False
         return art
+
+    # -- cleanup -------------------------------------------------------
+
+    def gc(self, keep_last: int = 1) -> list[str]:
+        """Delete ``base-*``/``delta-*`` directories the state file no
+        longer references (superseded by :meth:`compact`, or orphaned by
+        a crashed publish).  Returns the deleted directory names,
+        oldest-first.
+
+        ``keep_last``: retain that many of the *newest* unreferenced
+        directories as a grace window for in-flight readers that opened
+        the previous chain just before a compact (0 = delete all).
+
+        Refuses with :class:`RuntimeError` while a publish is mid-flight
+        on this instance (e.g. a :class:`~repro.live.GraphWatcher`
+        thread inside :meth:`append`/:meth:`compact`): in that window a
+        new directory exists on disk that ``CHAIN.json`` does not
+        reference yet, and gc would delete it.
+        """
+        if keep_last < 0:
+            raise ValueError("keep_last must be >= 0")
+        if self._publishing:
+            raise RuntimeError(
+                f"refusing to gc {self.path}: a publish is in progress "
+                "on this LiveDir (its new directory is not referenced "
+                "by CHAIN.json yet) — retry after it completes")
+        referenced = {self._state["base"], *self._state["deltas"]}
+        stale = [p for p in self.path.iterdir()
+                 if p.is_dir() and p.name not in referenced
+                 and (p.name.startswith("base-")
+                      or p.name.startswith("delta-"))]
+        stale.sort(key=lambda p: (p.stat().st_mtime, p.name))
+        if keep_last:
+            stale = stale[:-keep_last] or []
+        deleted = []
+        for p in stale:
+            shutil.rmtree(p)
+            deleted.append(p.name)
+        return deleted
 
     def __repr__(self) -> str:
         return (f"LiveDir({str(self.path)!r}, base={self._state['base']}, "

@@ -91,11 +91,19 @@ class MicroBatcher:
     """
 
     def __init__(self, dispatch: Callable[[list[Request]], None], *,
-                 max_batch: int = 8, max_wait_ms: float = 5.0) -> None:
+                 max_batch: int = 8, max_wait_ms: float = 5.0,
+                 max_batch_for: Callable[[], int] | None = None) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._dispatch = dispatch
         self.max_batch = int(max_batch)
+        # Optional dynamic fill target (adaptive lane policy): consulted
+        # per drain cycle, clamped to [1, max_batch].  A bucket that
+        # reaches the target dispatches immediately — the policy's
+        # "bucket size worth waiting for" — while the window expiry
+        # still bounds the wait for partial buckets.  None = fixed
+        # max_batch, the classic behavior.
+        self._max_batch_for = max_batch_for
         self.max_wait_s = float(max_wait_ms) / 1e3
         self._queue: queue.Queue = queue.Queue()
         self._thread: threading.Thread | None = None
@@ -212,11 +220,18 @@ class MicroBatcher:
                 else:
                     pending.setdefault(req.shape_key, []).append(req)
             now = time.perf_counter()
+            fill = self.max_batch
+            if self._max_batch_for is not None:
+                try:
+                    fill = max(1, min(int(self._max_batch_for()),
+                                      self.max_batch))
+                except Exception:  # noqa: BLE001 — policy must not wedge
+                    fill = self.max_batch
             for key in list(pending):
                 group = pending[key]
-                while len(group) >= self.max_batch:
-                    self._safe_dispatch(group[: self.max_batch], "full")
-                    del group[: self.max_batch]
+                while len(group) >= fill:
+                    self._safe_dispatch(group[:fill], "full")
+                    del group[:fill]
                 if group and (stopping or
                               now - group[0].t_submit
                               >= self._window_s(group[0])):

@@ -62,7 +62,7 @@ from concurrent.futures import CancelledError, Future
 from typing import Hashable, Sequence
 
 from repro.answers import TreePage, diversified_order, paginate
-from repro.engine import QueryEngine, QueryResult
+from repro.engine import AdaptiveLanePolicy, QueryEngine, QueryResult
 from repro.obs import MetricsRegistry, Tracer
 from repro.serve.batcher import MicroBatcher, Request
 from repro.serve.cache import ResultCache
@@ -92,13 +92,20 @@ class ServeConfig:
                    repeating the last query, so the lane driver sees few
                    distinct lane counts (each new count re-traces):
                    "pow2" (next power of two, the default), "max" (always
-                   ``max_batch`` lanes), or "none".  Padding lanes burn
-                   device FLOPs only — the engine skips host-side result
-                   construction for them (``n_real=``) — and batch-fill
-                   stats count real requests only.  Applies on both
-                   partitionings (sharded lanes live inside the
-                   shard_map, so a padding lane is a free-ish extra lane
-                   there too) and to deadline buckets.
+                   ``max_batch`` lanes), "none", or "adaptive" — an
+                   :class:`~repro.engine.AdaptiveLanePolicy` that scores
+                   candidate lane counts from MEASURED per-dispatch device
+                   time and the ``ServeStats.hot_shapes`` histogram
+                   instead of blind rounding (it degrades to exactly
+                   "pow2" until the first measurement lands; decisions
+                   are exported as ``dks_lane_policy_*`` metrics).
+                   Padding lanes burn device FLOPs only — the engine
+                   skips host-side result construction for them
+                   (``n_real=``) — and batch-fill stats count real
+                   requests only.  Applies on both partitionings (sharded
+                   lanes live inside the shard_map, so a padding lane is
+                   a free-ish extra lane there too) and to deadline
+                   buckets.
       default_deadline_ms: deadline applied when a request sets none.
                    Deadline requests coalesce with same-shape same-budget
                    requests onto one stepwise lane driver, but they are
@@ -137,7 +144,7 @@ class ServeConfig:
     cache_size: int = 1024
     extract: bool = True
     strict: bool = True
-    pad_batches: str = "pow2"   # "pow2" | "max" | "none"
+    pad_batches: str = "pow2"   # "pow2" | "max" | "none" | "adaptive"
     default_deadline_ms: float | None = None
     tree_cache_size: int = 256
     tree_page_size: int = 5
@@ -149,7 +156,7 @@ class ServeConfig:
     trace_log: str | None = None
 
     def __post_init__(self) -> None:
-        if self.pad_batches not in ("pow2", "max", "none"):
+        if self.pad_batches not in ("pow2", "max", "none", "adaptive"):
             raise ValueError(f"unknown pad_batches {self.pad_batches!r}")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -257,9 +264,17 @@ class DKSService:
         # entry serves every cursor/page-size/ranking combination.
         self._tree_cache = ResultCache(self.config.tree_cache_size)
         self._stats = StatsCollector()
+        # Lane-occupancy policy: always constructed (its snapshot feeds
+        # the metrics surface either way) but consulted for padding
+        # decisions only under pad_batches="adaptive".  Both dispatch
+        # paths feed it per-dispatch device time.
+        self.lane_policy = AdaptiveLanePolicy(self.config.max_batch)
         self._batcher = MicroBatcher(
             self._dispatch, max_batch=self.config.max_batch,
-            max_wait_ms=self.config.max_wait_ms)
+            max_wait_ms=self.config.max_wait_ms,
+            max_batch_for=(self.lane_policy.target_fill
+                           if self.config.pad_batches == "adaptive"
+                           else None))
         # Cross-request single-flight: cache_token -> follower list of an
         # identical request currently in flight.  A second identical miss
         # attaches here instead of executing again; the leader's done
@@ -426,6 +441,38 @@ class DKSService:
             "dks_traces_begun_total":
                 "Traces begun (one per admitted request); equal to "
                 "finished once the service drains.",
+        })
+
+        def collect_lane_policy() -> dict[str, float]:
+            snap = self.lane_policy.snapshot()
+            out = {
+                "dks_lane_policy_last_lanes": snap["last_lanes"],
+                "dks_lane_policy_target_fill":
+                    self.lane_policy.target_fill(),
+            }
+            for reason in ("exact", "warm", "pow2", "cap"):
+                out[f"dks_lane_policy_decision_{reason}_total"] = (
+                    snap["decisions"].get(reason, 0))
+            return out
+
+        reg.register_collector(collect_lane_policy, kinds=dict(
+            {"dks_lane_policy_last_lanes": _G,
+             "dks_lane_policy_target_fill": _G},
+            **{f"dks_lane_policy_decision_{r}_total": _C
+               for r in ("exact", "warm", "pow2", "cap")},
+        ), helps={
+            "dks_lane_policy_last_lanes":
+                "Lane count of the most recent padding decision "
+                "(pad_batches='adaptive').",
+            "dks_lane_policy_target_fill":
+                "Bucket size the adaptive policy considers worth waiting "
+                "for (most-dispatched warm lane count).",
+            "dks_lane_policy_decision_exact_total":
+                "Decisions that dispatched at the real request count "
+                "(zero padding lanes).",
+            "dks_lane_policy_decision_warm_total":
+                "Decisions that padded up to an already-measured lane "
+                "count (compiled executable, no retrace).",
         })
 
         def collect_batcher() -> dict[str, float]:
@@ -884,6 +931,9 @@ class DKSService:
             return n
         if mode == "max":
             return self.config.max_batch
+        if mode == "adaptive":
+            return self.lane_policy.lanes_for(
+                n, hot_shapes=self.stats().hot_shapes).lanes
         p = 1
         while p < n:
             p *= 2
@@ -959,6 +1009,7 @@ class DKSService:
                                  - extract_before["device_resolved"]),
                 host_fallbacks=(extract_after["host_fallbacks"]
                                 - extract_before["host_fallbacks"]))
+        self.lane_policy.observe(len(queries), device_ms)
         self._stats.record_dispatch(n_real, deadline=False,
                                     shape=(m, k, len(queries)))
         # After a set_engine swap, results of the old build are keyed
@@ -1052,6 +1103,7 @@ class DKSService:
                 "extract", t_device_end, t_done,
                 mode="overlapped" if extraction else "inline",
                 **extraction)
+        self.lane_policy.observe(len(queries), device_ms)
         self._stats.record_dispatch(n_real, deadline=True,
                                     driver_steps=driver_steps,
                                     lane_steps=lane_steps,

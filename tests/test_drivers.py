@@ -91,3 +91,14 @@ def test_serve_dks_cli_smoke():
     assert "batch-fill" in out and "cache" in out
     assert "verified:" in out
     assert "smoke invariants hold" in out
+
+
+def test_dks_query_cli_pallas_parity():
+    """The CI interpret-mode smoke as a tier-1 test: one query through
+    the fused pallas kernel with --parity building the jnp twin and
+    asserting bit-identical weights + superstep count."""
+    out = run_cli(["-m", "repro.launch.dks_query",
+                   "--dataset", "sec-rdfabout-cpu", "--backend", "pallas",
+                   "--parity", "--m", "2", "--k", "1",
+                   "--max-supersteps", "12"])
+    assert "parity: pallas == jnp bit-identical" in out

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro import INF
 from repro.core import DKSConfig, extract_answers, run_dks
-from repro.engine import ExecutionPolicy, QueryEngine
+from repro.engine import ExecutionPolicy, QueryEngine, WeightPolicy
 from repro.graph.generators import lod_like_graph
 from repro.graph.index import InvertedIndex
 
@@ -391,3 +391,187 @@ def test_sharded_query_instrumented(setup, sharded_setup):
     assert all(v >= 0 for v in info["timings"].values())
     assert res.supersteps == len(info["history"])
     assert info["history"][-1]["best"] == ref.best_weight
+
+
+# ----------------------------------------------------------------------
+# Fused pallas lane-superstep kernel (interpret mode on CPU)
+# ----------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pallas_setup():
+    """A jnp engine and its pallas twin over one graph, small enough for
+    the interpret-mode kernel to stay CI-speed."""
+    g, tokens = lod_like_graph(300, 1200, seed=7, vocab=80)
+    index = InvertedIndex.from_token_matrix(tokens)
+    ej = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+        backend="jnp", max_supersteps=16))
+    ep = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+        backend="pallas", max_supersteps=16))
+    assert ep.lane_csr is not None  # built once per graph at build()
+    return index, ej, ep
+
+
+def test_pallas_query_bit_identical(pallas_setup):
+    index, ej, ep = pallas_setup
+    query = mid_df_tokens(index, 3)
+    rj = ej.query(query, k=2, extract=False)
+    rp = ep.query(query, k=2, extract=False)
+    np.testing.assert_array_equal(rp.weights, rj.weights)
+    assert rp.supersteps == rj.supersteps
+    assert rp.msgs_bfs == rj.msgs_bfs and rp.msgs_deep == rj.msgs_deep
+
+
+def test_pallas_query_batch_bit_identical(pallas_setup):
+    index, ej, ep = pallas_setup
+    toks = mid_df_tokens(index, 8)
+    queries = [toks[0:2], toks[2:5], toks[5:8], toks[1:3]]
+    bj = ej.query_batch(queries, k=2, extract=False)
+    bp = ep.query_batch(queries, k=2, extract=False)
+    for rj, rp in zip(bj, bp):
+        np.testing.assert_array_equal(rp.weights, rj.weights)
+        assert rp.supersteps == rj.supersteps
+
+
+def test_pallas_stream_bit_identical(pallas_setup):
+    index, ej, ep = pallas_setup
+    query = mid_df_tokens(index, 3)
+    upd_j, upd_p = [], []
+    rj = ej.query_streamed(query, k=2, on_update=upd_j.append,
+                           extract=False)
+    rp = ep.query_streamed(query, k=2, on_update=upd_p.append,
+                           extract=False)
+    np.testing.assert_array_equal(rp.weights, rj.weights)
+    # The whole per-superstep trajectory matches, not just the answer.
+    assert len(upd_p) == len(upd_j)
+    for uj, up in zip(upd_j, upd_p):
+        assert up.step == uj.step and up.frontier == uj.frontier
+        assert up.best_weight == uj.best_weight
+
+
+def test_pallas_deadline_bit_identical(pallas_setup):
+    index, ej, ep = pallas_setup
+    query = mid_df_tokens(index, 3)
+    rj, _ = ej.query_deadline(query, k=2, deadline_s=60.0, extract=False)
+    rp, _ = ep.query_deadline(query, k=2, deadline_s=60.0, extract=False)
+    np.testing.assert_array_equal(rp.weights, rj.weights)
+    assert rp.supersteps == rj.supersteps
+    # A deadline bucket shares one driver, so both lanes need the same m.
+    toks = mid_df_tokens(index, 6)
+    bucket = [toks[:3], toks[3:6]]
+    out_j = ej.query_deadline_batch(
+        bucket, k=2, deadline_s=60.0, extract=False)
+    out_p = ep.query_deadline_batch(
+        bucket, k=2, deadline_s=60.0, extract=False)
+    for (qj, _), (qp, _) in zip(out_j, out_p):
+        np.testing.assert_array_equal(qp.weights, qj.weights)
+
+
+def test_pallas_telemetry_buffer_bit_identical(pallas_setup):
+    """telemetry=True rides the same fused loop: the per-superstep
+    counter rows AND the answers must match the jnp telemetry path
+    exactly."""
+    index, ej, ep = pallas_setup
+    g = ej.graph
+    tj = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+        backend="jnp", max_supersteps=16, telemetry=True))
+    tp = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+        backend="pallas", max_supersteps=16, telemetry=True))
+    query = mid_df_tokens(index, 3)
+    rj = tj.query(query, k=2, extract=False)
+    rp = tp.query(query, k=2, extract=False)
+    np.testing.assert_array_equal(rp.weights, rj.weights)
+    assert rj.telemetry is not None and rp.telemetry is not None
+    assert rp.telemetry.rows() == rj.telemetry.rows()
+    # And telemetry-on matches telemetry-off on the pallas path.
+    base = pallas_setup[2].query(query, k=2, extract=False)
+    np.testing.assert_array_equal(rp.weights, base.weights)
+
+
+def test_pallas_typed_weight_policy_bit_identical():
+    """Effective WeightPolicy weights (typed channel) flow through the
+    LaneCSR layout: confidence-blended and predicate-filtered engines
+    answer bit-identically on both backends."""
+    from tests.test_weights import typed_diamond
+
+    g, index = typed_diamond()
+    for wp in (WeightPolicy(kind="confidence", blend=1.0),
+               WeightPolicy(predicates=("knows", "funds"))):
+        ej = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+            backend="jnp", max_supersteps=8, weights=wp))
+        ep = QueryEngine.build(g, index=index, policy=ExecutionPolicy(
+            backend="pallas", max_supersteps=8, weights=wp))
+        rj = ej.query(["alpha", "beta"], k=2, extract=False)
+        rp = ep.query(["alpha", "beta"], k=2, extract=False)
+        np.testing.assert_array_equal(rp.weights, rj.weights)
+        assert rp.supersteps == rj.supersteps
+
+
+def test_pallas_ragged_frontier_lane_frozen_mid_bucket(pallas_setup):
+    """A bucket whose lanes finish at different supersteps: once a lane's
+    exit fires its frontier is empty and the kernel's per-lane freeze
+    mask must hold its table at s0 while other lanes keep relaxing."""
+    index, ej, ep = pallas_setup
+    toks = mid_df_tokens(index, 6)
+    # Same-m bucket, different finishing times (different keyword sets).
+    queries = [toks[0:3], toks[3:6]]
+    bj = ej.query_batch(queries, k=1, extract=False)
+    bp = ep.query_batch(queries, k=1, extract=False)
+    steps = {r.supersteps for r in bj}
+    assert len(steps) >= 1  # trajectory lengths may or may not differ...
+    for rj, rp in zip(bj, bp):
+        np.testing.assert_array_equal(rp.weights, rj.weights)
+        assert rp.supersteps == rj.supersteps
+        # Frozen lanes stop accumulating: message counters must match the
+        # per-query runs exactly (the freeze-mask acceptance check).
+        assert rp.msgs_bfs == rj.msgs_bfs
+        assert rp.msgs_deep == rj.msgs_deep
+
+
+def test_pallas_executable_cache_no_retrace(pallas_setup):
+    index, _, ep = pallas_setup
+    query = mid_df_tokens(index, 3)
+    ep.query(query, k=2, extract=False)
+    traces = ep.trace_count(3, 2)
+    ep.query(list(reversed(query)), k=2, extract=False)
+    assert ep.trace_count(3, 2) == traces  # same shape -> no re-trace
+
+
+def test_pallas_single_launch_per_superstep(pallas_setup):
+    """The perf claim's structural proxy on CPU: the fused path lowers to
+    exactly ONE pallas_call per superstep and strictly fewer jaxpr
+    equations than the jnp op chain."""
+    import jax
+
+    from repro.core.driver import lane_init, lane_superstep
+
+    index, ej, ep = pallas_setup
+    query = mid_df_tokens(index, 3)
+    cfg_j = ej.policy.dks_config(3, 2)
+    cfg_p = ep.policy.dks_config(3, 2)
+    masks = jnp.asarray(ej._masks(query)[0])[None]
+    st = lane_init(ej.device_graph, masks, cfg_j)
+    jx_j = jax.make_jaxpr(
+        lambda s: lane_superstep(ej.device_graph, s, cfg_j))(st)
+    jx_p = jax.make_jaxpr(
+        lambda s: lane_superstep(ep.device_graph, s, cfg_p,
+                                 csr=ep.lane_csr))(st)
+
+    def all_eqns(jaxpr):
+        out = list(jaxpr.eqns)
+        for eq in jaxpr.eqns:
+            for p in eq.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    out += all_eqns(getattr(inner, "jaxpr", inner))
+        return out
+
+    eq_j, eq_p = all_eqns(jx_j.jaxpr), all_eqns(jx_p.jaxpr)
+    assert sum(1 for e in eq_p if e.primitive.name == "pallas_call") == 1
+    assert sum(1 for e in eq_j if e.primitive.name == "pallas_call") == 0
+    assert len(eq_p) < len(eq_j)
+
+
+def test_pallas_sharded_raises_not_implemented():
+    with pytest.raises(NotImplementedError, match="shard_map body"):
+        ExecutionPolicy(backend="pallas", partition="sharded")

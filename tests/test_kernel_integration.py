@@ -4,7 +4,10 @@
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
+
+from repro import INF
 
 from repro.core import DKSConfig, run_dks
 from repro.graph.generators import random_weighted_graph
@@ -49,3 +52,117 @@ def test_attention_impls_agree_in_model():
     np.testing.assert_allclose(
         np.asarray(h_naive, np.float32), np.asarray(h_flash, np.float32),
         atol=5e-2, rtol=5e-2)
+
+
+
+# ----------------------------------------------------------------------
+# LaneCSR + fused lane-superstep kernel (repro.kernels.lane_superstep)
+# ----------------------------------------------------------------------
+
+from repro.core.dks import DKSConfig as _DKSConfig  # noqa: E402
+from repro.core.driver import lane_init as _lane_init  # noqa: E402
+from repro.core.dks import superstep as _superstep  # noqa: E402
+from repro.graph.generators import lod_like_graph as _lod  # noqa: E402
+from repro.kernels.lane_superstep import (  # noqa: E402
+    fused_lane_superstep,
+    lane_csr_from_device_graph,
+)
+
+
+def _device_graph(v=200, e=900, seed=3):
+    g, _ = _lod(v, e, seed=seed, vocab=40)
+    return g.to_device()
+
+
+def test_lane_csr_builder_invariants():
+    dg = _device_graph()
+    csr = lane_csr_from_device_graph(dg)
+    src = np.asarray(csr.src_pad)
+    w = np.asarray(csr.w_pad)
+    seg = np.asarray(csr.seg)
+    tail = np.asarray(csr.tail_row)
+    n_rows, dmax = src.shape
+    assert n_rows == csr.n_rows and n_rows % csr.block_v == 0
+    # Pad rows carry seg=-1 and INF weights (they never join a segment);
+    # real rows point at their destination node.
+    pad_rows = seg < 0
+    assert np.all(w[pad_rows] >= INF)
+    # Block alignment: a node's virtual rows never straddle a block_v
+    # boundary — the in-kernel segmented merge can then complete within
+    # one grid block, with no second-level jnp hub merge.
+    for node in np.unique(seg[seg >= 0]):
+        rows = np.nonzero(seg == node)[0]
+        assert rows.min() // csr.block_v == rows.max() // csr.block_v
+        assert np.array_equal(rows, np.arange(rows.min(), rows.max() + 1))
+        assert tail[node] == rows.max()  # the merge lands on the tail row
+    # Every real (src -> dst) edge with finite weight appears exactly
+    # once across the dst's rows.
+    e_valid = np.asarray(dg.valid)
+    dsts = np.asarray(dg.dst)[e_valid]
+    per_node_edges = {int(n): int(c) for n, c in
+                      zip(*np.unique(dsts, return_counts=True))}
+    for node, want in per_node_edges.items():
+        rows = np.nonzero(seg == node)[0]
+        got = int(np.sum(w[rows] < INF))
+        assert got == want
+
+
+def test_lane_csr_hub_splitting_bumps_rows_not_dmax_past_block():
+    """A hub with degree > dmax splits over multiple virtual rows; dmax
+    only auto-bumps when one node's rows would exceed a whole block."""
+    dg = _device_graph(v=120, e=2000, seed=5)   # dense -> hubs
+    csr = lane_csr_from_device_graph(dg, dmax=4)
+    seg = np.asarray(csr.seg)
+    counts = np.bincount(seg[seg >= 0])
+    assert counts.max() > 1      # at least one split node
+    assert counts.max() <= csr.block_v
+
+
+def test_fused_lane_superstep_matches_vmapped_superstep():
+    """One fused kernel step == one vmapped jnp superstep, bit for bit,
+    on a multi-lane state with a hub-split layout."""
+    dg = _device_graph()
+    csr = lane_csr_from_device_graph(dg, dmax=4)  # force hub splitting
+    cfg_j = _DKSConfig(m=2, k=2, max_supersteps=8)
+    cfg_p = _DKSConfig(m=2, k=2, max_supersteps=8,
+                       relax_impl="pallas", combine_impl="pallas")
+    rng = np.random.default_rng(0)
+    masks = np.zeros((3, 2, dg.v_pad), bool)
+    for lane in range(3):
+        for kw in range(2):
+            masks[lane, kw, rng.choice(dg.n_nodes, 4, replace=False)] = True
+    st = _lane_init(dg, jnp.asarray(masks), cfg_j)
+    ref = jax.vmap(lambda s: _superstep(dg, s, cfg_j))(st)
+    out = fused_lane_superstep(dg, csr, st, cfg_p)
+    np.testing.assert_array_equal(np.asarray(out.S), np.asarray(ref.S))
+    np.testing.assert_array_equal(np.asarray(out.changed),
+                                  np.asarray(ref.changed))
+    np.testing.assert_array_equal(np.asarray(out.topk_w),
+                                  np.asarray(ref.topk_w))
+    np.testing.assert_array_equal(np.asarray(out.done),
+                                  np.asarray(ref.done))
+
+
+def test_fused_lane_superstep_freezes_done_lane():
+    """A lane whose done flag is set must come out of the kernel with its
+    table untouched (the in-kernel freeze mask), even though other lanes
+    advance."""
+    import dataclasses as dc
+
+    dg = _device_graph()
+    csr = lane_csr_from_device_graph(dg)
+    cfg_p = _DKSConfig(m=2, k=1, max_supersteps=8,
+                       relax_impl="pallas", combine_impl="pallas")
+    rng = np.random.default_rng(1)
+    masks = np.zeros((2, 2, dg.v_pad), bool)
+    for lane in range(2):
+        for kw in range(2):
+            masks[lane, kw, rng.choice(dg.n_nodes, 3, replace=False)] = True
+    st = _lane_init(dg, jnp.asarray(masks), cfg_p)
+    done = jnp.asarray([True, False])
+    st = dc.replace(st, done=done)
+    out = fused_lane_superstep(dg, csr, st, cfg_p)
+    np.testing.assert_array_equal(np.asarray(out.S[0]),
+                                  np.asarray(st.S[0]))      # frozen
+    assert not np.array_equal(np.asarray(out.S[1]),
+                              np.asarray(st.S[1]))          # advanced

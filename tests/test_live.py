@@ -340,3 +340,79 @@ def test_tsv_and_gz_fragments(tmp_path):
     assert delta.n_new_nodes == 1 and delta.new_predicates == ["cites"]
     engine = QueryEngine.build(artifact=live.chain())
     assert engine.query(["tail", "a0"], k=1, extract=False).weights[0] > 0
+
+
+# ----------------------------------------------------------------------
+# LiveDir.gc — superseded-directory cleanup
+# ----------------------------------------------------------------------
+
+
+def _fresh_live(tmp_path):
+    (tmp_path / "base.nt").write_text("\n".join(BASE_LINES) + "\n",
+                                      encoding="utf-8")
+    (tmp_path / "frag1.nt").write_text("\n".join(FRAG1_LINES) + "\n",
+                                       encoding="utf-8")
+    live = LiveDir.initialize(tmp_path / "live",
+                              ingest_ntriples(tmp_path / "base.nt"))
+    return live
+
+
+def test_gc_deletes_only_unreferenced_dirs(tmp_path):
+    live = _fresh_live(tmp_path)
+    live.append([tmp_path / "frag1.nt"])
+    assert live.gc(keep_last=0) == []   # everything still referenced
+    live.compact()                      # supersedes base-000000 + delta
+    before = {p.name for p in live.path.iterdir() if p.is_dir()}
+    assert {"base-000000", "delta-000001", "base-000001"} <= before
+    deleted = live.gc(keep_last=0)
+    assert sorted(deleted) == ["base-000000", "delta-000001"]
+    after = {p.name for p in live.path.iterdir() if p.is_dir()}
+    assert "base-000001" in after and "base-000000" not in after
+    # The surviving chain still opens and hash-verifies.
+    assert live.chain().content_hash == live.chain_hash
+
+
+def test_gc_keep_last_retains_newest_superseded(tmp_path):
+    live = _fresh_live(tmp_path)
+    live.append([tmp_path / "frag1.nt"])
+    live.compact()
+    deleted = live.gc(keep_last=1)
+    # Two unreferenced dirs; the newest one survives as reader grace.
+    assert len(deleted) == 1
+    survivors = {p.name for p in live.path.iterdir() if p.is_dir()}
+    assert len(survivors & {"base-000000", "delta-000001"}) == 1
+
+
+def test_gc_refuses_mid_publish(tmp_path):
+    live = _fresh_live(tmp_path)
+    live.append([tmp_path / "frag1.nt"])
+    live.compact()
+    live._publishing = True   # simulate a watcher thread inside append()
+    try:
+        with pytest.raises(RuntimeError, match="publish is in progress"):
+            live.gc(keep_last=0)
+    finally:
+        live._publishing = False
+    assert live.gc(keep_last=0)  # clears once the publish window closes
+
+
+def test_ingest_cli_gc(tmp_path):
+    """--compact --gc end to end through the ingest CLI."""
+    import subprocess
+    import sys
+    from pathlib import Path as _P
+
+    src = str(_P(__file__).resolve().parent.parent / "src")
+    live = _fresh_live(tmp_path)
+    live.append([tmp_path / "frag1.nt"])
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.ingest",
+         "--live", str(live.path), "--compact", "--gc", "--gc-keep", "0"],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": src, "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"})
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "compacted chain" in res.stdout
+    assert "gc: deleted" in res.stdout
+    survivors = {p.name for p in live.path.iterdir() if p.is_dir()}
+    assert survivors == {"base-000001"}

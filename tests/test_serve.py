@@ -454,3 +454,89 @@ def test_tree_ranking_and_pagination(engine):
             svc.submit(toks, k=1, return_trees=True,
                        tree_ranking="bogus").result(timeout=60)
         assert svc.query(toks, k=3, return_trees=True).trees is not None
+
+
+# ----------------------------------------------------------------------
+# Adaptive lane occupancy (AdaptiveLanePolicy + pad_batches="adaptive")
+# ----------------------------------------------------------------------
+
+
+def test_adaptive_lane_policy_degrades_to_pow2_until_measured():
+    from repro.engine import AdaptiveLanePolicy
+
+    pol = AdaptiveLanePolicy(max_lanes=16)
+    d = pol.lanes_for(5)
+    assert d.lanes == 8 and d.reason == "pow2" and d.est_ms is None
+    assert pol.lanes_for(16).lanes == 16
+    assert pol.lanes_for(100).lanes == 16  # clamped at max_lanes
+
+
+def test_adaptive_lane_policy_prefers_cheap_warm_counts():
+    from repro.engine import AdaptiveLanePolicy
+
+    pol = AdaptiveLanePolicy(max_lanes=16, retrace_cost_ms=200.0)
+    # Warm measurements: 6 lanes is cheap, 8 lanes is pathological.
+    for _ in range(3):
+        pol.observe(6, 10.0)
+        pol.observe(8, 500.0)
+    d = pol.lanes_for(5)
+    assert d.lanes == 6 and d.reason == "warm"
+    # Exact fit wins when padding to a warm count costs more than a
+    # cold dispatch at n itself would.
+    d2 = pol.lanes_for(7)   # candidates: 7 (cold), 8 (warm but 500ms), 16
+    assert d2.lanes == 7 and d2.reason == "exact"
+    assert pol.target_fill() in (6, 8)
+    snap = pol.snapshot()
+    assert snap["last_lanes"] == d2.lanes
+    assert snap["decisions"]["warm"] >= 1
+
+
+def test_adaptive_lane_policy_uses_hot_shape_candidates():
+    from repro.engine import AdaptiveLanePolicy
+
+    pol = AdaptiveLanePolicy(max_lanes=32, retrace_cost_ms=0.0)
+    pol.observe(4, 100.0)   # per-lane estimate: 25 ms
+    # A swapped-in engine's histogram says the workload runs 6-lane
+    # buckets: 6 joins the candidate set though never measured here.
+    d = pol.lanes_for(5, hot_shapes=(((3, 2, 6), 40),))
+    # With zero retrace cost the cheapest candidate >= 5 is 5 itself;
+    # raise the retrace cost and the hot 6 would compete.  Just assert
+    # the decision is sane and 6 was considered (<= max, >= n).
+    assert d.lanes in (5, 6)
+
+
+def test_adaptive_padding_serves_parity_and_exports_metrics(engine):
+    """pad_batches='adaptive' end to end: answers match the direct
+    engine, the policy observes real dispatches, and the decision
+    metrics ride /metrics."""
+    from repro.obs import parse_prometheus
+
+    toks = mid_df_tokens(engine.index, 6)
+    queries = [toks[i:i + 3] for i in range(3)]
+    with DKSService(engine, ServeConfig(
+            max_batch=8, max_wait_ms=4.0,
+            pad_batches="adaptive", cache_size=0)) as svc:
+        futs = [svc.submit(q, k=1) for q in queries]
+        results = [f.result(120) for f in futs]
+        # Second wave: the policy now has measurements to score with.
+        futs2 = [svc.submit(q, k=1) for q in reversed(queries)]
+        results2 = [f.result(120) for f in futs2]
+        snap = svc.lane_policy.snapshot()
+        metrics = parse_prometheus(svc.registry.render())
+    for q, served in zip(queries, results):
+        direct = engine.query(q, k=1)
+        np.testing.assert_array_equal(served.result.weights,
+                                      direct.weights)
+    for q, served in zip(list(reversed(queries)), results2):
+        direct = engine.query(q, k=1)
+        np.testing.assert_array_equal(served.result.weights,
+                                      direct.weights)
+    assert snap["observed_counts"]          # dispatches were observed
+    assert sum(snap["decisions"].values()) >= 1
+    assert "dks_lane_policy_last_lanes" in metrics
+    assert "dks_lane_policy_decision_pow2_total" in metrics
+
+
+def test_serve_config_rejects_unknown_pad_mode():
+    with pytest.raises(ValueError, match="pad_batches"):
+        ServeConfig(pad_batches="nope")
